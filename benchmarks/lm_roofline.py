@@ -1,0 +1,35 @@
+"""LM-side roofline summary (the framework's own table; EXPERIMENTS.md
+§Roofline reads the full CSV -- this benchmark surfaces the headline
+numbers and dominant-term census from the dry-run artifacts)."""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import report
+
+
+def run() -> None:
+    dirpath = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+    if not os.path.isdir(dirpath):
+        report("roofline.skipped", 0.0, "no experiments/dryrun artifacts")
+        return
+    from repro.launch.roofline import load_cells, roofline_terms
+    rows = [t for rec in load_cells(dirpath, "pod16x16")
+            if (t := roofline_terms(rec)) is not None]
+    if not rows:
+        report("roofline.skipped", 0.0, "no compiled cells")
+        return
+    census = {}
+    for r in rows:
+        census[r["dominant"]] = census.get(r["dominant"], 0) + 1
+    report("roofline.census", 0.0,
+           ";".join(f"{k}={v}" for k, v in sorted(census.items())))
+    best = max(rows, key=lambda r: r["mfu_serial"])
+    worst = min(rows, key=lambda r: r["mfu_serial"])
+    report("roofline.best_cell", best["bound_time_s"],
+           f"{best['arch']}/{best['shape']};mfu_serial={best['mfu_serial']:.3f}")
+    report("roofline.worst_cell", worst["bound_time_s"],
+           f"{worst['arch']}/{worst['shape']};"
+           f"mfu_serial={worst['mfu_serial']:.2e}")

@@ -1,0 +1,17 @@
+"""Paper Table III + Fig. 2: per-PE aggregation memory by protocol."""
+
+from __future__ import annotations
+
+from benchmarks.common import report
+from repro.core.aggregation import aggregation_memory_bytes
+
+
+def run() -> None:
+    for p in (48, 192, 768, 3072, 6144):
+        for proto in ("1d", "2d", "3d"):
+            mem = aggregation_memory_bytes(p, proto)
+            total = sum(mem.values())
+            report(f"tab3.memory_{proto}_p{p}", 0.0,
+                   f"L0={mem['L0']:.0f};L1={mem['L1']:.0f};"
+                   f"L2={mem['L2']:.0f};L3={mem['L3']:.0f};"
+                   f"total_bytes={total:.0f}")

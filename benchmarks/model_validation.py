@@ -1,0 +1,96 @@
+"""Paper Fig. 3/4/5 + Table IV: analytical model vs measurement.
+
+- Fig. 4 analogue: measured phase-1 (parse+route) and phase-2
+  (sort+accumulate) wall times vs the model's predictions, with the model
+  re-parameterized for THIS container (measured stream bandwidth + int
+  throughput microbenchmarks standing in for Table IV).
+- Fig. 3 analogue: predicted memory traffic vs the bytes the compiled
+  program actually touches (cost_analysis 'bytes accessed' replaces PAPI
+  cache-miss counters).
+- Fig. 5: the hardware-utilization decomposition at paper scale.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALE, best_of, report
+from repro.core import analytical_model as am
+from repro.core import encoding, serial
+from repro.core.sort import accumulate
+from repro.data import genome
+
+
+def _microbench_machine() -> am.MachineParams:
+    """Table IV for this container: measured stream-copy bandwidth and
+    int64-add throughput."""
+    x = jnp.arange(int(8e6 * SCALE), dtype=jnp.int32)
+    copy = jax.jit(lambda a: a + 1)
+    copy(x).block_until_ready()
+    t = best_of(lambda: copy(x).block_until_ready())
+    beta_mem = 2 * x.size * 4 / t          # read + write
+    add = jax.jit(lambda a: jnp.sum(a))
+    add(x).block_until_ready()
+    t2 = best_of(lambda: add(x).block_until_ready())
+    c_node = x.size / t2
+    return am.MachineParams(name="container", c_node=c_node,
+                            beta_mem=beta_mem, z_cache=32e6, line=64.0,
+                            beta_link=beta_mem)
+
+
+def run() -> None:
+    n_reads = int(8192 * SCALE)
+    read_len, k = 150, 15
+    spec = genome.ReadSetSpec(genome_bases=4 * n_reads, n_reads=n_reads,
+                              read_len=read_len, seed=0)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    machine = _microbench_machine()
+    report("tab4.machine", 0.0,
+           f"c_node={machine.c_node:.3e};beta_mem={machine.beta_mem:.3e}")
+
+    # Phase 1: parse reads -> packed k-mers (the route step is a no-op on
+    # one PE, matching the model's P=1 internode term ~ 0).
+    extract = jax.jit(lambda r: encoding.extract_kmers(r, k))
+    kmers = extract(reads).block_until_ready()
+    t1 = best_of(lambda: extract(reads).block_until_ready())
+    # Phase 2: sort + accumulate.
+    sent = int(np.iinfo(np.uint32).max)
+    phase2 = jax.jit(lambda km: accumulate(jnp.sort(km), sentinel_val=sent))
+    phase2(kmers).unique.block_until_ready()
+    t2 = best_of(lambda: phase2(kmers).unique.block_until_ready())
+
+    w = am.Workload(n_reads=n_reads, read_len=read_len, k=k, num_nodes=1)
+    pred = am.predict(w, machine, overlap="sum")
+    report("fig4.phase1", t1,
+           f"model={pred['phase1_total']:.4f};"
+           f"ratio={t1 / pred['phase1_total']:.2f}")
+    report("fig4.phase2", t2,
+           f"model={pred['phase2_total']:.4f};"
+           f"ratio={t2 / pred['phase2_total']:.2f}")
+
+    # Fig. 3 analogue: predicted vs compiled memory traffic for phase 1.
+    lowered = jax.jit(lambda r: encoding.extract_kmers(r, k)).lower(reads)
+    cost = lowered.compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    measured_bytes = float(cost.get("bytes accessed", 0.0))
+    model_bytes = (w.read_len * w.n_reads) + w.kmers * w.kmer_bytes
+    report("fig3.phase1_bytes", 0.0,
+           f"model={model_bytes:.3e};hlo={measured_bytes:.3e};"
+           f"ratio={measured_bytes / model_bytes:.2f}")
+
+    # Fig. 5: decomposition at paper scale (Synthetic 30, 32 nodes).
+    w30 = am.Workload(n_reads=357_913_900, read_len=150, k=31, num_nodes=32)
+    p30 = am.predict(w30, am.PHOENIX_INTEL, overlap="sum")
+    total = p30["total"]
+    comp = p30["phase1_compute"] + p30["phase2_compute"]
+    intra = p30["phase1_intranode"] + p30["phase2_intranode"]
+    inter = p30["phase1_internode"]
+    s = comp + intra + inter
+    report("fig5.decomposition", total,
+           f"compute={comp / s:.1%};intranode={intra / s:.1%};"
+           f"internode={inter / s:.1%}")

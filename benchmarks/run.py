@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+
+  PYTHONPATH=src python -m benchmarks.run            # all benchmarks
+  PYTHONPATH=src python -m benchmarks.run fig12 tab3 # substring filter
+  BENCH_SCALE=4 ... for bigger datasets
+"""
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig6+fig9.shared_memory", "benchmarks.shared_memory"),
+    ("fig7+fig8.strong_scaling", "benchmarks.strong_scaling"),
+    ("fig10.weak_scaling", "benchmarks.weak_scaling"),
+    ("fig11.topology", "benchmarks.topology"),
+    ("fig12.aggregation_ablation", "benchmarks.aggregation_ablation"),
+    ("fig13.tuning", "benchmarks.tuning"),
+    ("tab3+fig2.memory_overhead", "benchmarks.memory_overhead"),
+    ("fig3+fig4+fig5.model_validation", "benchmarks.model_validation"),
+    ("lm.roofline", "benchmarks.lm_roofline"),
+]
+
+
+def main() -> None:
+    import importlib
+    filters = sys.argv[1:]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, modname in MODULES:
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            importlib.import_module(modname).run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 6 + Fig. 9: single-node comparison.
+
+Roles: serial sort-based counter = the KMC3 stand-in; BSP = PakMan*;
+FA-BSP without L3 = HySortK-ish (aggregated, uncompressed); full DAKC =
+our algorithm. Also reproduces the Fig. 6 point (sorting algorithm choice
+matters) by timing the explicit radix sort vs XLA's sort on the same keys.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import SCALE, best_of, report
+from repro.core import bsp, fabsp, serial
+from repro.core.sort import radix_sort
+from repro.data import genome
+
+
+def run() -> None:
+    n_reads = int(2048 * SCALE)
+    spec = genome.ReadSetSpec(genome_bases=8 * n_reads, n_reads=n_reads,
+                              read_len=100, seed=0)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    k = 13
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+
+    t_serial = best_of(lambda: serial.count_kmers_serial(
+        reads, k).unique.block_until_ready())
+    report("fig9.serial_kmc3_standin", t_serial, f"n_reads={n_reads}")
+
+    def run_bsp():
+        res, _ = bsp.count_kmers(reads, mesh,
+                                 bsp.BSPConfig(k=k, batch_reads=256))
+        res.unique.block_until_ready()
+    t_bsp = best_of(run_bsp)
+    report("fig9.bsp_pakman_standin", t_bsp,
+           f"speedup_vs_serial={t_serial / t_bsp:.2f}")
+
+    def run_fabsp(use_l3):
+        cfg = fabsp.DAKCConfig(k=k, chunk_reads=256, use_l3=use_l3)
+        res, _ = fabsp.count_kmers(reads, mesh, cfg)
+        res.unique.block_until_ready()
+    t_nol3 = best_of(lambda: run_fabsp(False))
+    report("fig9.fabsp_no_l3", t_nol3,
+           f"speedup_vs_bsp={t_bsp / t_nol3:.2f}")
+    t_dakc = best_of(lambda: run_fabsp(True))
+    report("fig9.dakc_full", t_dakc,
+           f"speedup_vs_bsp={t_bsp / t_dakc:.2f};"
+           f"speedup_vs_serial={t_serial / t_dakc:.2f}")
+
+    # Fig. 6: sorting algorithm choice (radix vs comparison/XLA sort).
+    keys = jnp.asarray(
+        np.random.default_rng(0).integers(0, 1 << 26, int(1e5 * SCALE),
+                                          dtype=np.uint32))
+    t_xla = best_of(lambda: jnp.sort(keys).block_until_ready())
+    t_radix = best_of(
+        lambda: radix_sort(keys, 26, 8).block_until_ready())
+    report("fig6.sort_xla", t_xla, f"n={keys.shape[0]}")
+    report("fig6.sort_radix_explicit", t_radix,
+           f"ratio_vs_xla={t_radix / t_xla:.2f}")

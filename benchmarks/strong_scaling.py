@@ -1,0 +1,37 @@
+"""Paper Fig. 7/8: strong scaling (fixed input, growing PE count).
+
+Measured on forced host devices {1, 2, 4, 8} in fresh subprocesses (the
+container has 1 physical core, so wall times flatten; the *collective and
+partitioning structure* is what scales) + analytical-model extrapolation to
+the paper's 256-node regime.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import KC_SNIPPET, SCALE, report, \
+    run_subprocess_devices
+from repro.core import analytical_model as am
+
+
+def run() -> None:
+    n_reads = int(4096 * SCALE)
+    for p in (1, 2, 4, 8):
+        out = run_subprocess_devices(
+            KC_SNIPPET + f"""
+best, stats = run({n_reads}, 100, 13, chunk_reads=64, use_l3=True,
+                  topology="1d", heavy=0.0)
+print(f"RESULT {{best}} {{int(stats.sent_words)}} {{float(stats.wire_bytes)}}")
+""", p)
+        line = [l for l in out.splitlines() if l.startswith("RESULT")][0]
+        t, sent, wire = line.split()[1:]
+        report(f"fig7.strong_scaling_p{p}", float(t),
+               f"sent_words={sent};wire_bytes={float(wire):.0f}")
+
+    # Analytical extrapolation (Phoenix params, Synthetic 27-like)
+    for nodes in (8, 32, 128, 256):
+        w = am.Workload(n_reads=44_739_200, read_len=150, k=31,
+                        num_nodes=nodes)
+        pred = am.predict(w, am.PHOENIX_INTEL, overlap="sum")
+        report(f"fig7.model_extrapolation_n{nodes}", pred["total"],
+               f"phase1={pred['phase1_total']:.3f};"
+               f"phase2={pred['phase2_total']:.3f}")

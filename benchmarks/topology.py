@@ -1,0 +1,34 @@
+"""Paper Fig. 11 + Table II: 1D vs 2D routing topologies.
+
+1D = direct all_to_all over the flat PE axis; 2D = two-stage hierarchical
+all_to_all over a factorized (row, col) grid. The paper finds 1D 10-20%
+faster at 2x+ the buffer memory; here the wire-bytes column shows the
+exact 2x volume of the extra hop and Table III's memory law covers the
+buffer side (benchmarks/memory_overhead.py).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import KC_SNIPPET, SCALE, report, \
+    run_subprocess_devices
+
+
+def run() -> None:
+    n_reads = int(4096 * SCALE)
+    results = {}
+    for topo in ("1d", "2d"):
+        out = run_subprocess_devices(
+            KC_SNIPPET + f"""
+best, stats = run({n_reads}, 100, 13, chunk_reads=64, use_l3=True,
+                  topology="{topo}", heavy=0.0)
+print(f"RESULT {{best}} {{int(stats.sent_words)}} {{float(stats.wire_bytes)}}")
+""", 8)
+        line = [l for l in out.splitlines() if l.startswith("RESULT")][0]
+        t, sent, wire = line.split()[1:]
+        results[topo] = (float(t), int(sent), float(wire))
+        report(f"fig11.topology_{topo}", float(t),
+               f"sent_words={sent};wire_bytes={float(wire):.0f}")
+    t1, _, w1 = results["1d"]
+    t2, _, w2 = results["2d"]
+    report("fig11.topology_2d_over_1d", t2,
+           f"time_ratio={t2 / t1:.2f};wire_ratio={w2 / w1:.2f}")

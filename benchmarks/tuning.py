@@ -1,0 +1,58 @@
+"""Paper Fig. 13: tuning the application-specific aggregation parameters.
+
+C2 (per-destination packet size) maps to the tile capacity slack; C3 (local
+accumulate block) maps to chunk_reads (chunk k-mers = the L3 block). The
+paper finds a broad plateau (C2 >= 8, 1e3 <= C3 <= 1e6) with degradation at
+the extremes -- the same shape appears here as wire bytes vs wall time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import SCALE, best_of, report
+from repro.core import fabsp
+from repro.data import genome
+
+
+def run() -> None:
+    n_reads = int(2048 * SCALE)
+    spec = genome.ReadSetSpec(genome_bases=8 * n_reads, n_reads=n_reads,
+                              read_len=100, heavy_hitter_frac=0.3, seed=2)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+
+    def go(chunk_reads, slack):
+        cfg = fabsp.DAKCConfig(k=13, chunk_reads=chunk_reads, slack=slack)
+        res, stats = fabsp.count_kmers(reads, mesh, cfg)
+        res.unique.block_until_ready()
+        return stats
+
+    base = None
+    for chunk in (32, 128, 512, 2048):          # C3 sweep
+        stats = None
+
+        def run_once(c=chunk):
+            nonlocal stats
+            stats = go(c, 1.5)
+
+        t = best_of(run_once)
+        if base is None:
+            base = t
+        report(f"fig13b.c3_chunk_{chunk}", t,
+               f"sent_words={int(stats.sent_words)};"
+               f"rel_time={t / base:.2f}")
+
+    for slack in (1.05, 1.5, 3.0):              # C2 sweep (tile capacity)
+        stats = None
+
+        def run_once(sl=slack):
+            nonlocal stats
+            stats = go(256, sl)
+
+        t = best_of(run_once)
+        report(f"fig13a.c2_slack_{slack}", t,
+               f"wire_bytes={float(stats.wire_bytes):.0f}")

@@ -1,0 +1,23 @@
+"""Paper Fig. 10: weak scaling (input grows with PE count)."""
+
+from __future__ import annotations
+
+from benchmarks.common import KC_SNIPPET, SCALE, report, \
+    run_subprocess_devices
+
+
+def run() -> None:
+    base = int(1024 * SCALE)
+    for p in (1, 2, 4, 8):
+        out = run_subprocess_devices(
+            KC_SNIPPET + f"""
+best, stats = run({base} * {p}, 100, 13, chunk_reads=64, use_l3=True,
+                  topology="1d", heavy=0.0)
+print(f"RESULT {{best}}")
+""", p)
+        line = [l for l in out.splitlines() if l.startswith("RESULT")][0]
+        t = float(line.split()[1])
+        if p == 1:
+            t1 = t
+        report(f"fig10.weak_scaling_p{p}", t,
+               f"efficiency={t1 / t:.2f}")

@@ -1,0 +1,45 @@
+"""The paper's technique inside the LM: DAKC packed-tile MoE dispatch.
+
+Routes tokens to experts with the same owner-bucketing machinery that
+routes k-mers to PEs, and cross-checks against the dense GShard dispatch.
+
+  python examples/moe_dispatch_demo.py   (8 forced devices)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs import reduced_config
+from repro.models import model, moe
+
+cfg = reduced_config("deepseek-moe-16b", compute_dtype="float32")
+cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+    cfg.moe, capacity_factor=2.0))
+params = model.init_params(jax.random.PRNGKey(0), cfg)
+mp = jax.tree.map(lambda v: v[0], params["blocks"][0])["moe"]
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(8, 32, cfg.d_model)) * 0.3, jnp.float32)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+
+y_dakc, aux = moe.moe_block(mp, x, cfg=cfg, mesh=mesh, data_axes=("data",))
+y_dense, _ = moe.moe_block(mp, x, cfg=cfg, mesh=None)
+
+print(f"experts: {cfg.moe.num_experts} routed (top-{cfg.moe.top_k}) "
+      f"+ {cfg.moe.num_shared_experts} shared, EP over 4 model shards")
+print(f"dakc vs gshard max err: {float(jnp.abs(y_dakc - y_dense).max()):.2e}")
+print(f"load-balance aux loss:  {float(aux.load_balance_loss):.4f}")
+print(f"dropped pairs:          {float(aux.dropped_frac):.2%} "
+      f"(capacity factor {cfg.moe.capacity_factor})")

@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + greedy decode with KV caches.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models import model as model_lib
+from repro.train import serve_step as ss_lib
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    cfg = reduced_config(args.arch)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)
+    out = ss_lib.generate(params, prompt, cfg,
+                          ss_lib.ServeConfig(max_seq=64), args.gen)
+    print(f"{args.arch}: generated {out.shape[1]} tokens for "
+          f"{out.shape[0]} requests")
+    print(np.asarray(out))

@@ -1,0 +1,21 @@
+"""End-to-end LM training on the framework (reduced config, CPU-friendly):
+any of the 10 assigned architectures via --arch.
+
+  PYTHONPATH=src python examples/train_lm.py --arch mamba2-370m --steps 30
+"""
+
+import argparse
+
+from repro.launch.train import train
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    out = train(args.arch, reduced=True, steps=args.steps, batch=4, seq=64,
+                ckpt_dir="/tmp/repro_example_ckpt", ckpt_every=10,
+                microbatches=2, peak_lr=1e-3, log_every=5)
+    print(f"final loss {out['final_loss']:.3f} "
+          f"({out['wall_seconds']:.1f}s, "
+          f"{out['straggler_events']} straggler events)")

@@ -1,0 +1,3 @@
+"""DAKC-JAX: asynchronous distributed k-mer counting (CS.DC 2025) as a
+TPU-native JAX framework + 10-architecture LM training/serving stack.
+See DESIGN.md / EXPERIMENTS.md."""

@@ -1,0 +1,7 @@
+"""DAKC core: the paper's contribution as composable JAX modules."""
+
+from repro.core import aggregation, analytical_model, encoding, owner, sort  # noqa: F401
+from repro.core.bsp import BSPConfig, count_kmers as count_kmers_bsp  # noqa: F401
+from repro.core.fabsp import DAKCConfig, DAKCStats, count_kmers  # noqa: F401
+from repro.core.serial import count_kmers_serial  # noqa: F401
+from repro.core.sort import AccumResult, accumulate  # noqa: F401

@@ -1,0 +1,141 @@
+"""Multilevel message aggregation (paper Sec. IV, Alg. 4) adapted to SPMD.
+
+TPU adaptation (DESIGN.md Sec. 2):
+
+- L0/L1 (runtime buffering)  -> chunked processing: one fused all_to_all per
+  chunk instead of per-k-mer traffic; XLA double-buffers the scan so chunk i's
+  collective overlaps chunk i+1's compute.
+- L2 (header amortization)   -> destination-major dense tiles `(P, capacity)`.
+  SPMD collectives carry no per-packet headers; the slot position *is* the
+  route, so the 32-bit-header overhead the paper fights goes to exactly zero.
+- L3 (heavy-hitter compression) -> local sort+accumulate of each chunk before
+  sending; counts packed into spare high bits (encoding.pack_counts). Under
+  skew this is ALSO what keeps the static per-destination capacity safe:
+  10^5 copies of (AATGG)n collapse to one {kmer,count} word instead of
+  overflowing one destination's tile.
+
+Static-shape discipline: tiles are fixed `(P, capacity)`; entries beyond a
+destination's fill are the sort-to-the-end sentinel; overflow (entries dropped
+because a destination exceeded capacity) is *counted and returned* -- callers
+either assert it is zero (tests; uniform/hash-spread traffic) or run the
+overflow round (`fabsp.count_kmers` does).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core.sort import accumulate, sort_with_weights
+
+
+class BucketResult(NamedTuple):
+    tile: jax.Array       # (P, capacity) words, sentinel-padded
+    fill: jax.Array       # (P,) int32 valid entries per destination
+    overflow: jax.Array   # () int32 dropped entries (capacity exceeded)
+
+
+def plan_capacity(num_items: int, num_pes: int, slack: float = 1.5,
+                  align: int = 8) -> int:
+    """Per-destination tile capacity for ~uniform (hashed) traffic.
+
+    Hashing spreads distinct k-mers near-uniformly; the binomial tail at
+    chunk sizes >= 4k items makes slack 1.5 overflow-free in practice
+    (property-tested). Aligned up so the lane dimension tiles cleanly.
+    """
+    expected = num_items / num_pes
+    cap = int(math.ceil(expected * slack))
+    return max(align, ((cap + align - 1) // align) * align)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def bucket_by_owner(words: jax.Array, owners: jax.Array, valid: jax.Array,
+                    num_pes: int, capacity: int) -> BucketResult:
+    """Pack words into a destination-major (P, capacity) tile (the L2 layer).
+
+    words:  (n,) payload words (k-mers, possibly count-packed)
+    owners: (n,) int32 destination PE per word
+    valid:  (n,) bool; invalid entries are not routed
+    """
+    n = words.shape[0]
+    sent = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
+    key = jnp.where(valid, owners, num_pes)              # invalid sorts last
+    order = jnp.argsort(key, stable=True)
+    s_owner = key[order]
+    s_words = jnp.where(valid[order], words[order], sent)
+    hist = jnp.bincount(jnp.minimum(s_owner, num_pes), length=num_pes + 1)[:num_pes]
+    offsets = jnp.concatenate([jnp.zeros((1,), hist.dtype), jnp.cumsum(hist)[:-1]])
+    within = jnp.arange(n) - offsets[jnp.minimum(s_owner, num_pes - 1)]
+    ok = (s_owner < num_pes) & (within < capacity)
+    tile = jnp.full((num_pes, capacity), sent, words.dtype)
+    rows = jnp.where(ok, s_owner, num_pes)               # row P -> dropped
+    cols = jnp.where(ok, within, 0)
+    tile = tile.at[rows, cols].set(s_words, mode="drop")
+    fill = jnp.minimum(hist, capacity).astype(jnp.int32)
+    overflow = jnp.sum(jnp.maximum(hist - capacity, 0)).astype(jnp.int32)
+    return BucketResult(tile=tile, fill=fill, overflow=overflow)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def l3_compress(words: jax.Array, k: int, bits_per_symbol: int = 2
+                ) -> Tuple[jax.Array, jax.Array]:
+    """L3: sort+accumulate a local block, pack counts into spare high bits.
+
+    words: (C3,) raw k-mer words (sentinel for padding).
+    returns (packed, valid): (C3,) count-packed words (sentinel-padded) and
+    their validity mask. len(valid.sum()) == number of *distinct* k-mers in
+    the block -- the compression the paper's Fig. 12 measures.
+    """
+    sent = int(jnp.iinfo(words.dtype).max)
+    acc = accumulate(jnp.sort(words), sentinel_val=sent)
+    valid = jnp.arange(words.shape[0]) < acc.num_unique
+    packed = jnp.where(
+        valid,
+        encoding.pack_counts(acc.unique & encoding.kmer_mask(k, bits_per_symbol),
+                             jnp.maximum(acc.counts, 1), k, bits_per_symbol),
+        jnp.array(sent, words.dtype))
+    return packed, valid
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def l3_decompress(packed_tile: jax.Array, k: int, bits_per_symbol: int = 2
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Receiver side: split count-packed words into (kmer, count) lanes.
+
+    Sentinel entries yield count 0 (i.e. ignored by accumulate).
+    """
+    sent = jnp.array(jnp.iinfo(packed_tile.dtype).max, packed_tile.dtype)
+    flat = packed_tile.reshape(-1)
+    kmers, counts = encoding.unpack_counts(flat, k, bits_per_symbol)
+    is_valid = flat != sent
+    counts = jnp.where(is_valid, counts, 0)
+    kmers = jnp.where(is_valid, kmers, sent)
+    return kmers, counts
+
+
+def l3_max_block(k: int, bits_per_symbol: int = 2) -> int:
+    """Largest C3 such that a block-local count always fits the spare bits."""
+    return encoding.count_capacity(k, bits_per_symbol)
+
+
+def aggregation_memory_bytes(num_pes: int, protocol: str = "1d",
+                             c1: int = 1024, c2: int = 32, c3: int = 10_000,
+                             word_bytes: int = 8) -> dict:
+    """Paper Table III: per-PE memory of each aggregation layer.
+
+    L0 follows the Conveyors buffer law 40KB * P^x with x in {1, 1/2, 1/3};
+    on TPU the analogue is the (P, capacity) tile footprint per stage of the
+    (possibly hierarchical) all_to_all.
+    """
+    x = {"1d": 1.0, "2d": 0.5, "3d": 1.0 / 3.0}[protocol]
+    return {
+        "L0": 40_000 * (num_pes ** x),
+        "L1": c1 * 264,                    # paper: 264 KB at C1=1024
+        "L2": c2 * 8.25 * num_pes,         # paper: 264 B/PE at C2=32
+        "L3": c3 * word_bytes,
+    }

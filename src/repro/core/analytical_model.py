@@ -1,0 +1,147 @@
+"""Analytical model of k-mer counting (paper Section V, Eqs. 9-18).
+
+Two-phase decomposition with per-phase compute / intranode-memory /
+internode-link terms, and the 'Sum' vs 'Max' overlap variants of Eq. 14/15.
+Parameterized for the paper's Phoenix Intel nodes (Table IV) -- used to
+reproduce Figs. 3-5 -- and for TPU v5e, where the same model feeds the
+EXPERIMENTS.md roofline analysis (HBM plays the role of the memory level,
+ICI the role of the NIC).
+
+All formulas follow the paper exactly; `two_pow_ceil_log2k` is the paper's
+2^ceil(log2 k) k-mer word width in bits (k=31 -> 64).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineParams:
+    """Paper Table IV."""
+    name: str
+    c_node: float      # peak int64 ops/s per node (GOp/s -> ops/s)
+    beta_mem: float    # memory bandwidth per node, bytes/s
+    z_cache: float     # fast memory, bytes
+    line: float        # cache line, bytes
+    beta_link: float   # combined bidirectional NIC bandwidth per node, bytes/s
+
+
+PHOENIX_INTEL = MachineParams(
+    name="phoenix-intel",
+    c_node=121.9e9, beta_mem=46.9e9, z_cache=38e6, line=64.0,
+    beta_link=12.5e9)
+
+# TPU v5e, one chip as the 'node': VPU int ops ~ 197 TFLOP/s bf16 / 2 ops per
+# FMA ~ O(1e13) int-adds; HBM 819 GB/s; 'cache' = 128 MB VMEM, 'line' = one
+# (8,128) f32 VREG tile row transfer = 512 B; ICI ~50 GB/s per link.
+TPU_V5E = MachineParams(
+    name="tpu-v5e",
+    c_node=9.85e12, beta_mem=819e9, z_cache=128e6, line=512.0,
+    beta_link=50e9)
+
+
+def kmer_word_bits(k: int) -> int:
+    """2^ceil(log2 (2k)) bits -- the paper's 2-bit-packed word width."""
+    return 1 << math.ceil(math.log2(2 * k))
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    n_reads: int     # n
+    read_len: int    # m
+    k: int
+    num_nodes: int   # P (paper counts nodes; cores folded into c_node)
+
+    @property
+    def kmers(self) -> int:
+        return self.n_reads * (self.read_len - self.k + 1)
+
+    @property
+    def kmer_bytes(self) -> int:
+        return kmer_word_bits(self.k) // 8
+
+
+def phase1_compute(w: Workload, m: MachineParams) -> float:
+    """Eq. 9: one op per generated k-mer per node."""
+    return w.kmers / (w.num_nodes * m.c_node)
+
+
+def phase1_intranode(w: Workload, m: MachineParams) -> float:
+    """Eq. 10: read-parse misses + k-mer store misses."""
+    read_miss = 1 + (w.read_len * w.n_reads) / (w.num_nodes * m.line)
+    store_miss = 1 + (w.kmers * w.kmer_bytes) / (w.num_nodes * m.line)
+    return (read_miss + store_miss) * m.line / m.beta_mem
+
+
+def phase1_internode(w: Workload, m: MachineParams) -> float:
+    """Eq. 11: n(m-k+1)*wordbits / (4 * P * beta_link).
+
+    wordbits/8 bytes per k-mer, x2 because the NIC carries both the send and
+    the receive stream -> 2 * kmer_bytes per k-mer per node pair of transfers.
+    """
+    return (2 * w.kmers * w.kmer_bytes) / (w.num_nodes * m.beta_link)
+
+
+def phase2_compute(w: Workload, m: MachineParams) -> float:
+    """Eq. 12: radix-sort passes (one per byte of the word)."""
+    return (w.kmers * w.kmer_bytes) / (w.num_nodes * m.c_node)
+
+
+def phase2_intranode(w: Workload, m: MachineParams) -> float:
+    """Eq. 13: one streaming pass over the data per radix digit-byte."""
+    passes = w.kmer_bytes
+    miss = 1 + (w.kmers * w.kmer_bytes) / (w.num_nodes * m.line)
+    return miss * passes * m.line / m.beta_mem
+
+
+def predict(w: Workload, m: MachineParams, overlap: str = "max"
+            ) -> Dict[str, float]:
+    """Full model (Eqs. 14-18). overlap in {'sum', 'max'} (Eq. 14 vs 15)."""
+    t_c1 = phase1_compute(w, m)
+    t_m1 = phase1_intranode(w, m)
+    t_n1 = phase1_internode(w, m)
+    t_c2 = phase2_compute(w, m)
+    t_m2 = phase2_intranode(w, m)
+    if overlap == "sum":
+        t_comm1 = t_m1 + t_n1
+    elif overlap == "max":
+        t_comm1 = max(t_m1, t_n1)
+    else:
+        raise ValueError(overlap)
+    t1 = max(t_c1, t_comm1)
+    t2 = max(t_c2, t_m2)
+    return {
+        "phase1_compute": t_c1,
+        "phase1_intranode": t_m1,
+        "phase1_internode": t_n1,
+        "phase2_compute": t_c2,
+        "phase2_intranode": t_m2,
+        "phase1_total": t1,
+        "phase2_total": t2,
+        "total": t1 + t2,  # Eq. 18: global barrier forbids phase overlap
+    }
+
+
+def cache_misses(w: Workload, m: MachineParams) -> Dict[str, float]:
+    """Last-level miss counts per node (Fig. 3 reproduction)."""
+    p1 = (1 + (w.read_len * w.n_reads) / (w.num_nodes * m.line)
+          + 1 + (w.kmers * w.kmer_bytes) / (w.num_nodes * m.line))
+    p2 = (1 + (w.kmers * w.kmer_bytes) / (w.num_nodes * m.line)) * w.kmer_bytes
+    return {"phase1": p1, "phase2": p2}
+
+
+def op_intensity(w: Workload) -> float:
+    """Paper Sec. VII: ~0.12 iadd64/byte for DAKC -- the roofline argument.
+
+    ops = generate (1/kmer) + sort passes (word_bytes/kmer);
+    bytes = parse + store + wire + sort streaming traffic.
+    """
+    ops = w.kmers * (1 + w.kmer_bytes)
+    bytes_moved = (w.n_reads * w.read_len              # parse
+                   + w.kmers * w.kmer_bytes            # store
+                   + 2 * w.kmers * w.kmer_bytes        # NIC in+out
+                   + w.kmers * w.kmer_bytes * w.kmer_bytes)  # radix passes
+    return ops / bytes_moved

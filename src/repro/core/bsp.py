@@ -1,0 +1,129 @@
+"""BSP k-mer counting baseline (paper Algorithm 2 -- PakMan*/HySortK style).
+
+Faithfully preserves what the paper's Eq. (1) charges the BSP algorithm for:
+the read stream is processed in batches of `b` k-mers, and EVERY batch ends
+with a host-synchronous Many-To-Many collective round (one jit dispatch +
+`block_until_ready` per batch = one T_sync). Total host-visible
+synchronizations: ceil(mn / (b*P)) + 1 (final sort round), vs DAKC's 3.
+
+No L2/L3 compression: raw k-mer words on the wire (HySortK/PakMan aggregate
+into MPI buffers -- our packed tile plays that role -- but do not compress
+duplicates). The FA-BSP counter with `use_l3=False` is the single-dispatch
+control for isolating the synchronization cost (benchmarks/aggregation_ablation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import encoding
+from repro.core.aggregation import bucket_by_owner, plan_capacity
+from repro.core.owner import owner_pe
+from repro.core.sort import AccumResult, accumulate
+
+
+@dataclasses.dataclass(frozen=True)
+class BSPConfig:
+    k: int
+    batch_reads: int = 256     # reads per collective round (b = batch k-mers)
+    slack: float = 1.5
+    canonical: bool = False
+    bits_per_symbol: int = 2
+
+
+class BSPStats(NamedTuple):
+    overflow: int
+    sent_words: int
+    wire_bytes: float
+    raw_kmers: int
+    num_global_syncs: int      # ceil(mn/bP) + 1
+
+
+def _batch_round(batch_local, *, cfg: BSPConfig, num_pes: int, cap: int,
+                 axis_name: str):
+    words = encoding.extract_kmers(batch_local, cfg.k, cfg.bits_per_symbol)
+    if cfg.canonical:
+        words = encoding.canonical(words, cfg.k)
+    owners = owner_pe(words, num_pes)
+    tile, fill, ovf = bucket_by_owner(words, owners,
+                                      jnp.ones(words.shape, bool),
+                                      num_pes, cap)
+    recv = jax.lax.all_to_all(tile, axis_name, 0, 0, tiled=True)
+    return recv, (jax.lax.psum(ovf, axis_name),
+                  jax.lax.psum(fill.sum(), axis_name))
+
+
+def _final_round(recv_all, axis_name: str):
+    sent = int(jnp.iinfo(recv_all.dtype).max)
+    res = accumulate(jnp.sort(recv_all.reshape(-1)), sentinel_val=sent)
+    return AccumResult(unique=res.unique, counts=res.counts,
+                       num_unique=res.num_unique.reshape(1))
+
+
+def count_kmers(reads: jax.Array, mesh: Mesh, cfg: BSPConfig,
+                axis_names: Sequence[str] = ("pe",)
+                ) -> Tuple[AccumResult, BSPStats]:
+    """Host-synchronous batched BSP counting. See module docstring."""
+    axis_names = tuple(axis_names)
+    if len(axis_names) != 1:
+        raise ValueError("BSP baseline routes over a single flat axis (1D)")
+    axis = axis_names[0]
+    num_pes = mesh.shape[axis]
+
+    n_reads, m = reads.shape
+    per_pe = n_reads // num_pes
+    if per_pe % cfg.batch_reads != 0:
+        raise ValueError(
+            f"per-PE reads {per_pe} not divisible by batch_reads "
+            f"{cfg.batch_reads}")
+    n_batches = per_pe // cfg.batch_reads
+    batch_kmers = cfg.batch_reads * (m - cfg.k + 1)
+    cap = plan_capacity(batch_kmers, num_pes, cfg.slack)
+
+    spec = P(axis)
+    round_fn = jax.jit(jax.shard_map(
+        functools.partial(_batch_round, cfg=cfg, num_pes=num_pes, cap=cap,
+                          axis_name=axis),
+        mesh=mesh, in_specs=(spec,), out_specs=(spec, (P(), P())),
+        check_vma=False))
+    final_fn = jax.jit(jax.shard_map(
+        functools.partial(_final_round, axis_name=axis),
+        mesh=mesh, in_specs=(spec,),
+        out_specs=AccumResult(unique=spec, counts=spec, num_unique=spec),
+        check_vma=False))
+
+    # reads arrive PE-major: reshape host-side into per-batch global slabs.
+    reads_r = reads.reshape(num_pes, n_batches, cfg.batch_reads, m)
+    overflow = sent_words = 0
+    recvs = []
+    for b in range(n_batches):
+        batch = reads_r[:, b].reshape(num_pes * cfg.batch_reads, m)
+        recv, (ovf, sw) = round_fn(batch)
+        # The BSP superstep: the host waits for the collective to complete
+        # before issuing the next round (paper's per-batch T_sync).
+        recv.block_until_ready()
+        recvs.append(recv)
+        overflow += int(ovf)
+        sent_words += int(sw)
+
+    if overflow > 0:
+        raise RuntimeError(
+            f"BSP capacity overflow: {overflow} entries; raise slack "
+            f"(no L3 layer to absorb skew -- that is the paper's point)")
+
+    recv_all = jnp.concatenate(recvs, axis=1)
+    result = final_fn(recv_all)
+    word_bytes = jnp.iinfo(recv_all.dtype).bits // 8
+    raw = n_reads * (m - cfg.k + 1)
+    stats = BSPStats(
+        overflow=overflow, sent_words=sent_words,
+        wire_bytes=float(n_batches * num_pes * num_pes * cap * word_bytes),
+        raw_kmers=raw, num_global_syncs=n_batches + 1)
+    return result, stats

@@ -1,0 +1,204 @@
+"""2-bit DNA encoding and k-mer packing (paper Sec. II / Alg. 1 `GetFirstKmer`).
+
+A k-mer over alphabet {A, C, G, T} is packed 2 bits/base into a single unsigned
+integer word, exactly as the paper stores k <= 32 k-mers in 64-bit integers.
+The module generalizes to `bits_per_symbol` > 2 so the same machinery counts
+token n-grams over LM vocabularies (DESIGN.md Sec. 3.3).
+
+Count packing (paper's L3 `{kmer, count}` pairs): when the word has spare high
+bits (64 - 2k for DNA), the local count is packed into those bits so the
+compressed stream stays one word per entry. This is the TPU adaptation of the
+paper's HEAVY packets -- no separate payload lane in the common case.
+
+Word width: k*bits <= 30 -> uint32; <= 62 -> uint64 (requires JAX x64 mode,
+enabled by the genomics drivers; LM paths never touch uint64).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ASCII codes for the DNA alphabet.
+_BASE_ORD = {"A": 65, "C": 67, "G": 71, "T": 84}
+# 2-bit encoding used throughout (A=0, C=1, G=2, T=3), matching lexicographic
+# base order so sorted k-mer words sort like k-mer strings.
+BASE_TO_CODE = {"A": 0, "C": 1, "G": 2, "T": 3}
+CODE_TO_BASE = "ACGT"
+
+
+def kmer_bits(k: int, bits_per_symbol: int = 2) -> int:
+    return k * bits_per_symbol
+
+
+def kmer_dtype(k: int, bits_per_symbol: int = 2):
+    """Smallest unsigned word that holds a k-mer plus at least 2 spare bits.
+
+    Spare bits keep a sentinel value (all ones) distinct from any valid k-mer
+    and leave room for L3 count packing.
+    """
+    bits = kmer_bits(k, bits_per_symbol)
+    if bits <= 30:
+        return jnp.uint32
+    if bits <= 62:
+        if not jax.config.read("jax_enable_x64"):
+            raise ValueError(
+                f"k={k} with {bits_per_symbol} bits/symbol needs uint64; "
+                "enable x64 (JAX_ENABLE_X64=1) as the genomics drivers do."
+            )
+        return jnp.uint64
+    raise ValueError(
+        f"k={k} exceeds the 64-bit word (paper Sec. VII lists 128-bit support "
+        "as future work); max k is 31 for DNA."
+    )
+
+
+def spare_bits(k: int, bits_per_symbol: int = 2) -> int:
+    dt = kmer_dtype(k, bits_per_symbol)
+    return jnp.iinfo(dt).bits - kmer_bits(k, bits_per_symbol)
+
+
+def kmer_mask(k: int, bits_per_symbol: int = 2):
+    dt = kmer_dtype(k, bits_per_symbol)
+    return dt((1 << kmer_bits(k, bits_per_symbol)) - 1)
+
+
+def sentinel(k: int, bits_per_symbol: int = 2):
+    """Padding value: sorts after every valid (possibly count-packed) word."""
+    dt = kmer_dtype(k, bits_per_symbol)
+    return dt(jnp.iinfo(dt).max)
+
+
+# ---------------------------------------------------------------------------
+# ASCII <-> 2-bit codes
+# ---------------------------------------------------------------------------
+
+_ASCII_LUT = np.full((256,), 255, dtype=np.uint8)
+for _b, _c in BASE_TO_CODE.items():
+    _ASCII_LUT[ord(_b)] = _c
+    _ASCII_LUT[ord(_b.lower())] = _c
+
+
+def encode_ascii(ascii_bytes: jax.Array) -> jax.Array:
+    """uint8 ASCII read characters -> 2-bit codes (255 for non-ACGT)."""
+    lut = jnp.asarray(_ASCII_LUT)
+    return lut[ascii_bytes.astype(jnp.int32)]
+
+
+def decode_codes_np(codes: np.ndarray) -> str:
+    return "".join(CODE_TO_BASE[int(c)] for c in codes)
+
+
+# ---------------------------------------------------------------------------
+# k-mer packing
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def pack_kmers(codes: jax.Array, k: int, bits_per_symbol: int = 2) -> jax.Array:
+    """Pack every length-k window of `codes` into one word per position.
+
+    codes: (..., m) integer symbol codes in [0, 2**bits_per_symbol).
+    returns: (..., m - k + 1) packed k-mer words.
+
+    Vectorized shift-or over the k window offsets (k static -> unrolled), the
+    data-parallel equivalent of the paper's rolling `kmer = (kmer << 2) | c`.
+    """
+    dt = kmer_dtype(k, bits_per_symbol)
+    m = codes.shape[-1]
+    n_pos = m - k + 1
+    if n_pos <= 0:
+        raise ValueError(f"reads of length {m} are shorter than k={k}")
+    acc = jnp.zeros(codes.shape[:-1] + (n_pos,), dt)
+    shift = dt(bits_per_symbol)
+    for j in range(k):
+        window = jax.lax.slice_in_dim(codes, j, j + n_pos, axis=-1)
+        acc = (acc << shift) | window.astype(dt)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def extract_kmers(reads: jax.Array, k: int, bits_per_symbol: int = 2) -> jax.Array:
+    """(n_reads, m) codes -> flat (n_reads * (m - k + 1),) k-mer words."""
+    return pack_kmers(reads, k, bits_per_symbol).reshape(-1)
+
+
+def unpack_kmer_np(word: int, k: int, bits_per_symbol: int = 2) -> str:
+    """Host-side decode of a packed DNA k-mer word to its string (debugging)."""
+    out = []
+    mask = (1 << bits_per_symbol) - 1
+    for j in reversed(range(k)):
+        out.append(CODE_TO_BASE[(int(word) >> (j * bits_per_symbol)) & mask])
+    return "".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Canonical k-mers (reverse complement); optional, as in production counters.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def revcomp(kmers: jax.Array, k: int) -> jax.Array:
+    """Reverse complement of packed 2-bit DNA k-mers (A<->T, C<->G)."""
+    dt = kmers.dtype.type
+    comp = (~kmers) & kmer_mask(k)  # A=00<->11=T, C=01<->10=G under this code
+    out = jnp.zeros_like(kmers)
+    two = dt(2)
+    for _ in range(k):
+        out = (out << two) | (comp & dt(3))
+        comp = comp >> two
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def canonical(kmers: jax.Array, k: int) -> jax.Array:
+    rc = revcomp(kmers, k)
+    return jnp.minimum(kmers, rc)
+
+
+# ---------------------------------------------------------------------------
+# L3 count packing: {kmer, count} in one word when spare bits allow.
+# ---------------------------------------------------------------------------
+
+
+def count_capacity(k: int, bits_per_symbol: int = 2) -> int:
+    """Max count representable in the spare high bits (0 -> no packing)."""
+    s = spare_bits(k, bits_per_symbol)
+    if s < 2:
+        return 0
+    # Reserve the all-ones pattern of the *full word* for the sentinel: a
+    # packed word equals the sentinel only if kmer bits and count bits are all
+    # ones; cap the count one below to keep the sentinel unambiguous.
+    return (1 << s) - 2
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def pack_counts(kmers: jax.Array, counts: jax.Array, k: int,
+                bits_per_symbol: int = 2) -> jax.Array:
+    """Pack per-kmer counts into spare high bits. counts >= 1.
+
+    Counts saturate at `count_capacity`; the receiver treats a saturated
+    entry's count as exact because L3 blocks are bounded by C3 <= capacity
+    (asserted by `aggregation.plan_l3`).
+    """
+    dt = kmers.dtype.type
+    cap = count_capacity(k, bits_per_symbol)
+    if cap == 0:
+        raise ValueError(f"k={k}: no spare bits for count packing")
+    shift = dt(kmer_bits(k, bits_per_symbol))
+    c = jnp.minimum(counts.astype(kmers.dtype), dt(cap))
+    return kmers | (c << shift)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def unpack_counts(packed: jax.Array, k: int,
+                  bits_per_symbol: int = 2) -> Tuple[jax.Array, jax.Array]:
+    dt = packed.dtype.type
+    shift = dt(kmer_bits(k, bits_per_symbol))
+    kmers = packed & kmer_mask(k, bits_per_symbol)
+    counts = (packed >> shift).astype(jnp.int32)
+    return kmers, counts

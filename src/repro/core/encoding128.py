@@ -1,0 +1,128 @@
+"""128-bit k-mers: k in (31, 63] via (hi, lo) uint64 word pairs.
+
+The paper (Sec. VII) names >64-bit k-mer support as future work -- their
+64-bit words cap k at 31 (PakMan shares the limit), which constrains
+long-read assembly k choices. This module implements the extension:
+
+- packing: two-lane shift-or; bits [0, 64) in `lo`, bits [64, 2k) in `hi`.
+- ordering: lexicographic (hi, lo) == numeric 128-bit order, implemented
+  with a two-pass stable sort (stable argsort by lo, then by hi) -- the
+  radix-sort principle applied at word granularity.
+- ownership: avalanche mix of hi ^ mix(lo) keeps the owner-PE convention.
+- accumulate: run boundaries compare both lanes.
+
+Serial counting is provided here (`count_kmers_serial128`); the
+distributed path reuses fabsp's dual-lane HEAVY/NORMAL machinery by
+treating (hi, lo) as the payload pair -- extension documented in DESIGN.md
+(the L2 tiles gain one lane; capacity planning is unchanged).
+
+Requires x64 mode, like every uint64 path in this package.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.owner import _mix64
+
+
+class Kmer128(NamedTuple):
+    hi: jax.Array
+    lo: jax.Array
+
+
+def _check_k(k: int) -> None:
+    if not 31 < k <= 63:
+        raise ValueError(f"k={k}: this module covers 31 < k <= 63; "
+                         "use core.encoding for k <= 31")
+    if not jax.config.read("jax_enable_x64"):
+        raise ValueError("128-bit k-mers need x64 (JAX_ENABLE_X64=1)")
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def pack_kmers128(codes: jax.Array, k: int) -> Kmer128:
+    """(..., m) 2-bit codes -> Kmer128 of (..., m - k + 1) word pairs."""
+    _check_k(k)
+    m = codes.shape[-1]
+    n_pos = m - k + 1
+    hi = jnp.zeros(codes.shape[:-1] + (n_pos,), jnp.uint64)
+    lo = jnp.zeros(codes.shape[:-1] + (n_pos,), jnp.uint64)
+    two = jnp.uint64(2)
+    for j in range(k):
+        window = jax.lax.slice_in_dim(codes, j, j + n_pos,
+                                      axis=-1).astype(jnp.uint64)
+        # 128-bit left shift by 2: hi gets lo's top 2 bits
+        hi = (hi << two) | (lo >> jnp.uint64(62))
+        lo = (lo << two) | window
+    # mask hi to the 2k-64 payload bits
+    hi_bits = 2 * k - 64
+    hi = hi & jnp.uint64((1 << hi_bits) - 1)
+    return Kmer128(hi=hi, lo=lo)
+
+
+def extract_kmers128(reads: jax.Array, k: int) -> Kmer128:
+    p = pack_kmers128(reads, k)
+    return Kmer128(hi=p.hi.reshape(-1), lo=p.lo.reshape(-1))
+
+
+def sort128(kmers: Kmer128) -> Kmer128:
+    """Lexicographic (hi, lo) sort: stable two-pass (LSD at word width)."""
+    order_lo = jnp.argsort(kmers.lo, stable=True)
+    hi1 = kmers.hi[order_lo]
+    lo1 = kmers.lo[order_lo]
+    order_hi = jnp.argsort(hi1, stable=True)
+    return Kmer128(hi=hi1[order_hi], lo=lo1[order_hi])
+
+
+def owner_pe128(kmers: Kmer128, num_pes: int) -> jax.Array:
+    h = _mix64(kmers.hi ^ _mix64(kmers.lo))
+    return (h % jnp.uint64(num_pes)).astype(jnp.int32)
+
+
+class Accum128(NamedTuple):
+    hi: jax.Array
+    lo: jax.Array
+    counts: jax.Array
+    num_unique: jax.Array
+
+
+@jax.jit
+def accumulate128(sorted_kmers: Kmer128) -> Accum128:
+    """Run-length accumulate over a (hi, lo)-sorted stream; padding is the
+    all-ones pair (sorts last, as in the 64-bit path)."""
+    hi, lo = sorted_kmers.hi, sorted_kmers.lo
+    n = hi.shape[0]
+    sent = jnp.uint64(jnp.iinfo(jnp.uint64).max)
+    valid = ~((hi == sent) & (lo == sent))
+    prev_hi = jnp.concatenate([jnp.full((1,), sent, jnp.uint64), hi[:-1]])
+    prev_lo = jnp.concatenate([jnp.full((1,), sent, jnp.uint64), lo[:-1]])
+    is_new = valid & ((hi != prev_hi) | (lo != prev_lo))
+    seg = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    seg_safe = jnp.maximum(seg, 0)
+    counts = jax.ops.segment_sum(valid.astype(jnp.int32), seg_safe,
+                                 num_segments=n)
+    out_hi = jnp.full((n,), sent, jnp.uint64)
+    out_lo = jnp.full((n,), sent, jnp.uint64)
+    idx = jnp.where(is_new, seg_safe, n)
+    out_hi = out_hi.at[idx].set(hi, mode="drop")
+    out_lo = out_lo.at[idx].set(lo, mode="drop")
+    num_unique = jnp.sum(is_new.astype(jnp.int32))
+    counts = jnp.where(jnp.arange(n) < num_unique, counts, 0)
+    return Accum128(hi=out_hi, lo=out_lo, counts=counts,
+                    num_unique=num_unique)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def count_kmers_serial128(reads: jax.Array, k: int) -> Accum128:
+    """Algorithm 1 at k in (31, 63]."""
+    kmers = extract_kmers128(reads, k)
+    return accumulate128(sort128(kmers))
+
+
+def kmer128_to_int(hi: int, lo: int) -> int:
+    """Host-side: (hi, lo) -> Python int (arbitrary precision)."""
+    return (int(hi) << 64) | int(lo)

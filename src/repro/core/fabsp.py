@@ -1,0 +1,337 @@
+"""DAKC: the FA-BSP asynchronous k-mer counter (paper Alg. 3 + Alg. 4).
+
+Execution structure (TPU adaptation, DESIGN.md Sec. 2):
+
+- Phase 1 is ONE jitted `lax.scan` over chunks of reads. Each scan step
+  extracts k-mers, runs the L3 compressor, packs destination-major tiles
+  (L2), and issues one fused `all_to_all` (L0/L1). XLA double-buffers the
+  scan: the collective for chunk i overlaps k-mer generation for chunk i+1,
+  recovering the paper's compute/communication overlap without one-sided
+  messages.
+- The single data dependence between the stacked receive tiles and the local
+  sort is the paper's GLOBAL BARRIER between phases.
+- Phase 2 sorts the received stream and accumulates (owner-local counts are
+  final counts -- owner-PE convention).
+
+Global synchronization count: 3 (program start, phase barrier, completion),
+versus ceil(mn/bP) + 1 host-synchronous rounds for the BSP baseline
+(core/bsp.py) -- exactly the paper's Eq. (7) gap.
+
+Heavy-hitter handling (L3): two wire formats, selected by `l3_mode`:
+- 'packed': counts ride in the spare high bits of the k-mer word (one word
+  per distinct k-mer on the wire). Valid whenever the spare bits can hold a
+  chunk-local count; this is the TPU-native strengthening of the paper's
+  {kmer, count} pair (zero extra lanes).
+- 'dual': faithful to Alg. 4 -- NORMAL tile of raw k-mer words (local count
+  <= 2 sent as duplicates) plus HEAVY tiles of {kmer, count} pairs for local
+  count > 2. Needed at k=31 where a 64-bit word has no spare bits.
+
+Topologies (paper Table II): '1d' = direct all_to_all over the full axis;
+'2d' = two-stage all_to_all over a factorized (row, col) device grid -- the
+2D-HyperX analogue, trading an extra hop for O(sqrt(P)) tile memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import encoding
+from repro.core.aggregation import bucket_by_owner, plan_capacity
+from repro.core.owner import owner_pe
+from repro.core.sort import AccumResult, accumulate, sort_with_weights
+
+
+@dataclasses.dataclass(frozen=True)
+class DAKCConfig:
+    """Tuning parameters (paper Table III / Sec. VI-H)."""
+    k: int
+    chunk_reads: int = 256        # reads per scan step; chunk k-mers ~ C3
+    slack: float = 1.5            # capacity = E[load] * slack   (L2 tile)
+    heavy_frac: float = 0.5       # HEAVY tile capacity as fraction of NORMAL
+    use_l3: bool = True
+    l3_mode: str = "auto"         # 'packed' | 'dual' | 'auto'
+    topology: str = "1d"          # '1d' | '2d'
+    canonical: bool = False
+    bits_per_symbol: int = 2
+
+
+class DAKCStats(NamedTuple):
+    overflow: jax.Array            # () int32: entries dropped by capacity (all stages)
+    sent_words: jax.Array          # () int32: valid payload words on the wire
+    wire_bytes: jax.Array          # () int64-ish f32: padded bytes actually moved
+    raw_kmers: jax.Array           # () int32: k-mer instances before compression
+    num_global_syncs: int          # static: 3 for DAKC (paper Sec. I)
+
+
+def _resolve_l3_mode(cfg: DAKCConfig, chunk_kmers: int) -> str:
+    if not cfg.use_l3:
+        return "none"
+    if cfg.l3_mode != "auto":
+        return cfg.l3_mode
+    cap = encoding.count_capacity(cfg.k, cfg.bits_per_symbol)
+    return "packed" if cap >= chunk_kmers else "dual"
+
+
+def _bucket_pair(words, counts, owners, valid, num_pes, capacity):
+    """bucket_by_owner for a (word, count) pair of lanes (HEAVY packets)."""
+    n = words.shape[0]
+    sent = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
+    key = jnp.where(valid, owners, num_pes)
+    order = jnp.argsort(key, stable=True)
+    s_owner = key[order]
+    s_words = jnp.where(valid[order], words[order], sent)
+    s_counts = jnp.where(valid[order], counts[order], 0)
+    hist = jnp.bincount(jnp.minimum(s_owner, num_pes), length=num_pes + 1)[:num_pes]
+    offsets = jnp.concatenate([jnp.zeros((1,), hist.dtype), jnp.cumsum(hist)[:-1]])
+    within = jnp.arange(n) - offsets[jnp.minimum(s_owner, num_pes - 1)]
+    ok = (s_owner < num_pes) & (within < capacity)
+    rows = jnp.where(ok, s_owner, num_pes)
+    cols = jnp.where(ok, within, 0)
+    wtile = jnp.full((num_pes, capacity), sent, words.dtype)
+    wtile = wtile.at[rows, cols].set(s_words, mode="drop")
+    ctile = jnp.zeros((num_pes, capacity), jnp.int32)
+    ctile = ctile.at[rows, cols].set(s_counts, mode="drop")
+    overflow = jnp.sum(jnp.maximum(hist - capacity, 0)).astype(jnp.int32)
+    fill = jnp.minimum(hist, capacity).astype(jnp.int32)
+    return wtile, ctile, fill, overflow
+
+
+def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int):
+    """Alg. 4 AddToL2Buffer: local accumulate -> NORMAL dups + HEAVY pairs.
+
+    Returns (normal_words, normal_valid, heavy_words, heavy_counts,
+    heavy_valid), all of the input length.
+    """
+    sent = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
+    masked = jnp.where(valid, words, sent)
+    acc = accumulate(jnp.sort(masked), sentinel_val=int(jnp.iinfo(words.dtype).max))
+    n = words.shape[0]
+    slot_valid = jnp.arange(n) < acc.num_unique
+    cnt = acc.counts
+    is_heavy = slot_valid & (cnt > 2)
+    is_norm = slot_valid & (cnt <= 2)
+    # NORMAL: count==1 -> one copy; count==2 -> two copies (paper duplicates).
+    norm1 = jnp.where(is_norm, acc.unique, sent)
+    norm2 = jnp.where(is_norm & (cnt == 2), acc.unique, sent)
+    normal_words = jnp.concatenate([norm1, norm2])
+    normal_valid = normal_words != sent
+    heavy_words = jnp.where(is_heavy, acc.unique, sent)
+    heavy_counts = jnp.where(is_heavy, cnt, 0)
+    return normal_words, normal_valid, heavy_words, heavy_counts, is_heavy
+
+
+def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
+           grid, k, bps):
+    """Bucket + (possibly hierarchical) all_to_all for one lane set.
+
+    Returns (recv_words, recv_counts_or_none, sent_valid, wire_words, overflow).
+    `grid` is None for 1d or (rows, cols) for the 2d topology.
+    counts lane, when present, follows the words through every stage.
+    """
+    mask = encoding.kmer_mask(k, bps)
+
+    def exchange(words_, counts_, valid_, owners, pes, cap, axis):
+        if counts_ is None:
+            tile, fill, ovf = bucket_by_owner(words_, owners, valid_, pes, cap)
+            recv = jax.lax.all_to_all(tile, axis, 0, 0, tiled=True)
+            return recv, None, fill, ovf
+        wtile, ctile, fill, ovf = _bucket_pair(words_, counts_, owners, valid_,
+                                               pes, cap)
+        recvw = jax.lax.all_to_all(wtile, axis, 0, 0, tiled=True)
+        recvc = jax.lax.all_to_all(ctile, axis, 0, 0, tiled=True)
+        return recvw, recvc, fill, ovf
+
+    if grid is None:
+        owners = owner_pe(words & mask, num_pes)
+        recvw, recvc, fill, ovf = exchange(words, counts_or_none, valid,
+                                           owners, num_pes, capacity,
+                                           axis_names[0])
+        sent_valid = fill.sum()
+        wire = jnp.int32(num_pes * capacity)
+        return recvw.reshape(-1), (None if recvc is None else recvc.reshape(-1)), \
+            sent_valid, wire, ovf
+
+    rows, cols = grid
+    # Stage 1: route along the column axis to the destination column.
+    owners = owner_pe(words & mask, num_pes)
+    dest_col = owners % cols
+    cap1 = capacity * rows  # per-column capacity: rows destinations share it
+    r1w, r1c, fill1, ovf1 = exchange(words, counts_or_none, valid, dest_col,
+                                     cols, cap1, axis_names[1])
+    flat1 = r1w.reshape(-1)
+    flat1c = None if r1c is None else r1c.reshape(-1)
+    sentv = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
+    valid1 = flat1 != sentv
+    # Stage 2: route along the row axis to the destination row.
+    owners1 = owner_pe(flat1 & mask, num_pes)
+    dest_row = owners1 // cols
+    cap2 = capacity * cols  # stage-2 input is cols * cap1 entries
+    r2w, r2c, fill2, ovf2 = exchange(flat1, flat1c, valid1, dest_row,
+                                     rows, cap2, axis_names[0])
+    sent_valid = fill1.sum() + fill2.sum()
+    wire = jnp.int32(cols * cap1 + rows * cap2)
+    return r2w.reshape(-1), (None if r2c is None else r2c.reshape(-1)), \
+        sent_valid, wire, ovf1 + ovf2
+
+
+def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
+                 cap_h: int, mode: str, axis_names, grid):
+    """One scan step: parse -> L3 -> L2 tiles -> all_to_all."""
+    k, bps = cfg.k, cfg.bits_per_symbol
+    words = encoding.extract_kmers(chunk, k, bps)
+    if cfg.canonical:
+        words = encoding.canonical(words, k)
+    raw = jnp.int32(words.shape[0])
+    valid = jnp.ones(words.shape, bool)
+
+    if mode == "packed":
+        from repro.core.aggregation import l3_compress
+        payload, pvalid = l3_compress(words, k, bps)
+        rw, _, sentn, wire, ovf = _route(payload, None, pvalid,
+                                         num_pes=num_pes, capacity=cap_n,
+                                         axis_names=axis_names, grid=grid,
+                                         k=k, bps=bps)
+        return (rw, None, None), (raw, sentn, wire, ovf)
+
+    if mode == "dual":
+        nw, nv, hw, hc, hv = _l3_split_dual(words, valid, k, bps)
+        rnw, _, sentn, wire_n, ovf_n = _route(nw, None, nv, num_pes=num_pes,
+                                              capacity=cap_n,
+                                              axis_names=axis_names, grid=grid,
+                                              k=k, bps=bps)
+        rhw, rhc, senth, wire_h, ovf_h = _route(hw, hc, hv, num_pes=num_pes,
+                                                capacity=cap_h,
+                                                axis_names=axis_names,
+                                                grid=grid, k=k, bps=bps)
+        # HEAVY wire carries a word + an int32 count per slot.
+        word_b = jnp.iinfo(nw.dtype).bits // 8
+        wire = wire_n + (wire_h * (word_b + 4)) // word_b
+        return (rnw, rhw, rhc), (raw, sentn + senth, wire, ovf_n + ovf_h)
+
+    # mode == 'none': BSP-style raw words, single lane, no compression.
+    rw, _, sentn, wire, ovf = _route(words, None, valid, num_pes=num_pes,
+                                     capacity=cap_n, axis_names=axis_names,
+                                     grid=grid, k=k, bps=bps)
+    return (rw, None, None), (raw, sentn, wire, ovf)
+
+
+def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
+            mode: str) -> AccumResult:
+    """Sort + accumulate the received stream (paper Phase 2)."""
+    k, bps = cfg.k, cfg.bits_per_symbol
+    sent = int(jnp.iinfo(recv_normal.dtype).max)
+    flat = recv_normal.reshape(-1)
+    if mode == "packed":
+        from repro.core.aggregation import l3_decompress
+        kmers, weights = l3_decompress(flat, k, bps)
+        keys, w = sort_with_weights(kmers, weights)
+        return accumulate(keys, w, sentinel_val=sent)
+    if mode == "dual":
+        hflat = recv_heavy.reshape(-1)
+        hcnt = recv_heavy_counts.reshape(-1)
+        keys = jnp.concatenate([flat, hflat])
+        weights = jnp.concatenate(
+            [(flat != flat.dtype.type(sent)).astype(jnp.int32),
+             jnp.where(hflat != hflat.dtype.type(sent), hcnt, 0)])
+        keys, w = sort_with_weights(keys, weights)
+        return accumulate(keys, w, sentinel_val=sent)
+    return accumulate(jnp.sort(flat), sentinel_val=sent)
+
+
+def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
+                 cap_n: int, cap_h: int, mode: str, axis_names, grid
+                 ) -> Tuple[AccumResult, DAKCStats]:
+    n_local, m = reads_local.shape
+    if n_local % cfg.chunk_reads != 0:
+        raise ValueError(
+            f"local reads {n_local} not divisible by chunk_reads "
+            f"{cfg.chunk_reads}; pad via data.genome.shard_reads")
+    n_chunks = n_local // cfg.chunk_reads
+    chunks = reads_local.reshape(n_chunks, cfg.chunk_reads, m)
+
+    def step(carry, chunk):
+        recv, (raw, sent_w, wire, ovf) = _phase1_step(
+            chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
+            mode=mode, axis_names=axis_names, grid=grid)
+        raw_t, sent_t, wire_t, ovf_t = carry
+        # explicit int32: x64 mode (k=31 words) promotes reductions to int64
+        return (raw_t + raw.astype(jnp.int32),
+                sent_t + sent_w.astype(jnp.int32),
+                wire_t + wire.astype(jnp.float32),
+                ovf_t + ovf.astype(jnp.int32)), recv
+
+    zero = jnp.int32(0)
+    (raw, sent_w, wire, ovf), recvs = jax.lax.scan(
+        step, (zero, zero, jnp.float32(0), zero), chunks)
+    recv_n, recv_h, recv_hc = recvs
+    result = _phase2(recv_n, recv_h, recv_hc, cfg=cfg, mode=mode)
+
+    word_bytes = jnp.iinfo(recv_n.dtype).bits // 8
+    ax = tuple(axis_names)
+    stats = (jax.lax.psum(ovf, ax), jax.lax.psum(sent_w, ax),
+             jax.lax.psum(wire * word_bytes, ax), jax.lax.psum(raw, ax))
+    return AccumResult(unique=result.unique, counts=result.counts,
+                       num_unique=result.num_unique.reshape(1)), stats
+
+
+def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
+                axis_names: Sequence[str] = ("pe",),
+                _slack_override: Optional[float] = None
+                ) -> Tuple[AccumResult, DAKCStats]:
+    """Distributed asynchronous k-mer counting (DAKC).
+
+    reads: (n_reads, m) symbol codes, sharded (or shardable) over
+           axis_names[0] on `mesh`. n_reads must divide evenly.
+    Returns the per-shard AccumResult (each shard owns a disjoint k-mer set;
+    the global histogram is the concatenation) and wire statistics.
+
+    Capacity overflow (possible only under adversarial skew with L3 off) is
+    detected post-hoc and retried with doubled slack -- the 'overflow round'.
+    """
+    axis_names = tuple(axis_names)
+    sizes = [mesh.shape[a] for a in axis_names]
+    num_pes = math.prod(sizes)
+    if cfg.topology == "2d":
+        if len(axis_names) != 2:
+            raise ValueError("2d topology needs two axis names (row, col)")
+        grid = (sizes[0], sizes[1])
+    else:
+        grid = None
+
+    n_reads, m = reads.shape
+    chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
+    mode = _resolve_l3_mode(cfg, chunk_kmers)
+    slack = _slack_override if _slack_override is not None else cfg.slack
+    # 'dual' NORMAL lane can carry up to 2x duplicated entries.
+    n_items = chunk_kmers * (2 if mode == "dual" else 1)
+    cap_n = plan_capacity(n_items, num_pes, slack)
+    cap_h = max(8, int(cap_n * cfg.heavy_frac))
+
+    spec = P(axis_names if len(axis_names) > 1 else axis_names[0])
+    fn = jax.jit(jax.shard_map(
+        functools.partial(_local_count, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
+                          cap_h=cap_h, mode=mode, axis_names=axis_names,
+                          grid=grid),
+        mesh=mesh, in_specs=(spec,),
+        out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
+                   (P(), P(), P(), P())),
+        check_vma=False))
+
+    result, (overflow, sent_w, wire_b, raw) = fn(reads)
+    stats = DAKCStats(overflow=overflow, sent_words=sent_w, wire_bytes=wire_b,
+                      raw_kmers=raw, num_global_syncs=3)
+    if int(stats.overflow) > 0:
+        if slack > 8:
+            raise RuntimeError(
+                f"capacity overflow persists at slack {slack}: "
+                f"{int(stats.overflow)} entries dropped")
+        return count_kmers(reads, mesh, cfg, axis_names,
+                           _slack_override=slack * 2)
+    return result, stats

@@ -1,0 +1,49 @@
+"""Token n-gram counting over LM corpora -- the paper's technique reused.
+
+A token n-gram is a k-mer over the alphabet [0, vocab): pack n tokens of
+ceil(log2 vocab) bits each into one word and run the DAKC counter unchanged
+(encoding/owner/sort/fabsp all take `bits_per_symbol`). Used by the data
+substrate for corpus dedup / contamination statistics, and as the engine of
+the vocab-histogram path (n=1 token "n-grams" = embedding-gradient
+bucketing); see DESIGN.md Sec. 3.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import fabsp
+from repro.core.sort import AccumResult
+
+
+def bits_for_vocab(vocab_size: int) -> int:
+    return max(1, math.ceil(math.log2(vocab_size)))
+
+
+def ngram_config(vocab_size: int, n: int, **kw) -> fabsp.DAKCConfig:
+    """DAKCConfig for counting n-grams of tokens from `vocab_size`.
+
+    Word-width guard mirrors encoding.kmer_dtype: n * bits <= 30 (uint32) or
+    <= 62 (uint64, x64 mode). GPT-scale vocabs (151k -> 18 bits) support
+    n=1 in uint32 and n<=3 in uint64.
+    """
+    return fabsp.DAKCConfig(k=n, bits_per_symbol=bits_for_vocab(vocab_size),
+                            **kw)
+
+
+def count_ngrams(tokens: jax.Array, vocab_size: int, n: int, mesh: Mesh,
+                 axis_names: Sequence[str] = ("pe",),
+                 chunk_rows: int = 64, **kw
+                 ) -> Tuple[AccumResult, fabsp.DAKCStats]:
+    """tokens: (rows, seq) int token ids, sharded over axis_names[0].
+
+    Returns the distributed n-gram histogram (per-shard segments, disjoint
+    owner sets) -- identical semantics to core.fabsp.count_kmers.
+    """
+    cfg = ngram_config(vocab_size, n, chunk_reads=chunk_rows, **kw)
+    return fabsp.count_kmers(tokens, mesh, cfg, axis_names)

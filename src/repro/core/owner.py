@@ -1,0 +1,66 @@
+"""Owner-PE assignment (paper Sec. III-B convention (1)).
+
+Each distinct k-mer is owned by exactly one PE; the local count at the owner
+is the global count. Ownership is a hash of the k-mer word so that skewed
+k-mer *values* still spread near-uniformly over PEs (the residual skew -- many
+copies of the *same* k-mer hashing to one PE -- is exactly what the paper's L3
+layer compresses; see aggregation.py).
+
+Hashes are the murmur3/splitmix finalizers: full-avalanche bit mixers that are
+a handful of VPU ops on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _mix64(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint64)
+    x = x ^ (x >> jnp.uint64(30))
+    x = x * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = x ^ (x >> jnp.uint64(27))
+    x = x * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> jnp.uint64(31))
+    return x
+
+
+def hash_kmers(kmers: jax.Array) -> jax.Array:
+    """Avalanche hash of packed k-mer words (same width as input)."""
+    if kmers.dtype == jnp.uint64:
+        return _mix64(kmers)
+    return _mix32(kmers)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def owner_pe(kmers: jax.Array, num_pes: int) -> jax.Array:
+    """OwnerPE(kmer, P) -> int32 destination in [0, P)."""
+    h = hash_kmers(kmers)
+    if num_pes & (num_pes - 1) == 0:
+        return (h & h.dtype.type(num_pes - 1)).astype(jnp.int32)
+    return (h % h.dtype.type(num_pes)).astype(jnp.int32)
+
+
+def owner_pe_2d(kmers: jax.Array, rows: int, cols: int) -> Tuple[jax.Array, jax.Array]:
+    """Factorized owner for hierarchical (2D-HyperX-style) routing.
+
+    PE grid is rows x cols; owner = (row, col). Stage 1 routes along the
+    column axis to the right column, stage 2 along the row axis (paper
+    Table II: 2 hops, O(P^{3/2}) buffers -> here O(sqrt(P)) tiles per stage).
+    """
+    flat = owner_pe(kmers, rows * cols)
+    return flat // cols, flat % cols

@@ -1,0 +1,1 @@
+from repro.data import corpus_stats, genome, tokens  # noqa: F401

@@ -1,0 +1,64 @@
+"""Corpus n-gram statistics via the DAKC counter (DESIGN.md Sec. 3.3).
+
+Dataset curation at scale needs n-gram histograms over token corpora
+(dedup, contamination screens, heavy-hitter analysis). A token n-gram is a
+k-mer over the vocabulary alphabet, so the counter IS core.fabsp: this
+module is the thin curation-facing API -- count over a token stream,
+return the top-k heavy hitters and summary stats.
+
+Token streams are Zipfian: exactly the paper's 'Human genome' regime where
+the L3 layer pays for itself (tests assert the compression shows up).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import ngram
+from repro.core.fabsp import DAKCStats
+
+
+class CorpusStats(NamedTuple):
+    top_ngrams: np.ndarray     # (k, n) int32 token ids, most frequent first
+    top_counts: np.ndarray     # (k,)
+    distinct: int              # number of distinct n-grams
+    total: int                 # n-gram instances counted
+    compression: float         # raw kmers / words on wire (L3 win)
+
+
+def corpus_ngram_stats(tokens: jax.Array, vocab_size: int, n: int,
+                       mesh: Mesh, *, top_k: int = 16,
+                       axis_names: Sequence[str] = ("pe",),
+                       chunk_rows: int = 64) -> CorpusStats:
+    """tokens: (rows, seq) int32, shardable over axis_names[0]."""
+    res, stats = ngram.count_ngrams(tokens, vocab_size, n, mesh,
+                                    axis_names=axis_names,
+                                    chunk_rows=chunk_rows)
+    bits = ngram.bits_for_vocab(vocab_size)
+    nsh = res.num_unique.shape[0]
+    per = res.unique.shape[0] // nsh
+    words, counts = [], []
+    u = np.asarray(res.unique).reshape(nsh, per)
+    c = np.asarray(res.counts).reshape(nsh, per)
+    nu = np.asarray(res.num_unique)
+    for s in range(nsh):
+        words.append(u[s, :nu[s]])
+        counts.append(c[s, :nu[s]])
+    words = np.concatenate(words)
+    counts = np.concatenate(counts)
+    order = np.argsort(-counts)[:top_k]
+    mask = (1 << bits) - 1
+    top = np.stack([
+        np.stack([(words[i] >> ((n - 1 - j) * bits)) & mask
+                  for j in range(n)]).astype(np.int32)
+        for i in order]) if len(order) else np.zeros((0, n), np.int32)
+    sent = float(stats.sent_words)
+    return CorpusStats(
+        top_ngrams=top, top_counts=counts[order],
+        distinct=int(nu.sum()), total=int(stats.raw_kmers),
+        compression=float(stats.raw_kmers) / max(sent, 1.0))

@@ -1,0 +1,128 @@
+"""Synthetic genome / read-set generation and FASTA/Q codecs.
+
+Mirrors the paper's experimental setup (Sec. VI, Table V): a synthetic genome
+sampled uniformly from {A,C,G,T} ("Synthetic XY" = 2^XY bases), from which
+fixed-length reads are sampled at random offsets (ART-Illumina-like, without
+the error model by default; an optional substitution-error rate is provided).
+
+Also provides the skewed generator that plants heavy-hitter repeats --
+the (AATGG)n-style runs the paper reports for the human genome (Sec. IV-D) --
+used by the aggregation-ablation benchmark to reproduce Fig. 12's regimes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.encoding import BASE_TO_CODE, CODE_TO_BASE
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadSetSpec:
+    genome_bases: int          # genome length (paper: 2^XY)
+    n_reads: int
+    read_len: int = 150        # paper Table V: 150bp reads
+    error_rate: float = 0.0    # per-base substitution probability
+    heavy_hitter_frac: float = 0.0   # fraction of genome covered by repeats
+    heavy_motif: str = "AATGG"       # the paper's human-genome repeat
+    seed: int = 0
+
+
+def synthesize_genome(spec: ReadSetSpec) -> np.ndarray:
+    """Uniform random 2-bit genome, optionally with planted repeat runs."""
+    rng = np.random.default_rng(spec.seed)
+    genome = rng.integers(0, 4, size=spec.genome_bases, dtype=np.uint8)
+    if spec.heavy_hitter_frac > 0:
+        motif = np.array([BASE_TO_CODE[b] for b in spec.heavy_motif],
+                         dtype=np.uint8)
+        run_len = max(len(motif) * 40, 200)
+        n_runs = int(spec.genome_bases * spec.heavy_hitter_frac / run_len)
+        reps = int(np.ceil(run_len / len(motif)))
+        run = np.tile(motif, reps)[:run_len]
+        for start in rng.integers(0, spec.genome_bases - run_len,
+                                  size=max(n_runs, 1)):
+            genome[start:start + run_len] = run
+    return genome
+
+
+def sample_reads(spec: ReadSetSpec,
+                 genome: Optional[np.ndarray] = None) -> np.ndarray:
+    """(n_reads, read_len) uint8 2-bit codes, random offsets, optional errors."""
+    rng = np.random.default_rng(spec.seed + 1)
+    if genome is None:
+        genome = synthesize_genome(spec)
+    if spec.genome_bases < spec.read_len:
+        raise ValueError("genome shorter than read length")
+    starts = rng.integers(0, spec.genome_bases - spec.read_len + 1,
+                          size=spec.n_reads)
+    idx = starts[:, None] + np.arange(spec.read_len)[None, :]
+    reads = genome[idx]
+    if spec.error_rate > 0:
+        flips = rng.random(reads.shape) < spec.error_rate
+        reads = np.where(flips, (reads + rng.integers(1, 4, reads.shape)) % 4,
+                         reads).astype(np.uint8)
+    return reads
+
+
+def pad_reads_for_mesh(reads: np.ndarray, num_pes: int, chunk_reads: int,
+                       k: int) -> Tuple[np.ndarray, int]:
+    """Pad the read set so every PE gets an equal, chunk-divisible share.
+
+    Padding reads are poly-A; the returned pad count lets callers subtract
+    the (pad * (m - k + 1)) spurious poly-A k-mer contributions, or tests can
+    simply generate divisible sizes. Returns (padded_reads, n_pad).
+    """
+    n, m = reads.shape
+    quantum = num_pes * chunk_reads
+    n_pad = (-n) % quantum
+    if n_pad == 0:
+        return reads, 0
+    pad = np.zeros((n_pad, m), dtype=reads.dtype)
+    return np.concatenate([reads, pad], axis=0), n_pad
+
+
+# ---------------------------------------------------------------------------
+# FASTA/Q codecs (host-side; the paper excludes I/O from timing, as do we)
+# ---------------------------------------------------------------------------
+
+
+def reads_to_fastq(reads: np.ndarray, path: str) -> None:
+    with open(path, "w") as f:
+        for i, row in enumerate(reads):
+            seq = "".join(CODE_TO_BASE[int(c)] for c in row)
+            f.write(f"@synthetic.{i}\n{seq}\n+\n{'I' * len(seq)}\n")
+
+
+def fastq_to_reads(path: str) -> np.ndarray:
+    rows = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    for i in range(1, len(lines), 4):
+        rows.append([BASE_TO_CODE[c] for c in lines[i].strip().upper()])
+    return np.asarray(rows, dtype=np.uint8)
+
+
+def fasta_to_reads(path: str, read_len: int) -> np.ndarray:
+    """Chop FASTA contigs into fixed-length windows (for real datasets)."""
+    seqs = []
+    cur: list = []
+    with open(path) as f:
+        for line in f:
+            if line.startswith(">"):
+                if cur:
+                    seqs.append("".join(cur))
+                    cur = []
+            else:
+                cur.append(line.strip().upper())
+    if cur:
+        seqs.append("".join(cur))
+    rows = []
+    for s in seqs:
+        for off in range(0, len(s) - read_len + 1, read_len):
+            window = s[off:off + read_len]
+            if all(c in BASE_TO_CODE for c in window):
+                rows.append([BASE_TO_CODE[c] for c in window])
+    return np.asarray(rows, dtype=np.uint8)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spots + LM attention.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), wrapped by ops.py
+(jit, backend dispatch: Mosaic on TPU / interpret elsewhere), oracled by
+ref.py (pure jnp). Validated by tests/test_kernels.py shape/dtype sweeps.
+EXAMPLE.md documents the layout convention.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

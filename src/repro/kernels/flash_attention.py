@@ -1,0 +1,204 @@
+"""Pallas TPU kernel: blockwise flash attention (forward).
+
+The LM-side compute hot spot. Online-softmax tiling adapted to the TPU
+memory hierarchy: a (block_q, d) query tile is pinned in VMEM while
+(block_k, d) key/value tiles stream HBM->VMEM; the (block_q, block_k) logit
+tile lives only in VREGs/VMEM scratch and never round-trips to HBM -- the
+O(S^2) intermediate the MXU would otherwise spill. Accumulation runs in f32
+scratch regardless of input dtype (bf16 inputs hit the MXU natively).
+
+Supports: causal masking, sliding windows (gemma2 local / danube SWA),
+logit softcapping (gemma2), GQA head grouping, and a KV offset for decode.
+Causal + window block-skipping is done in the index domain: fully-masked KV
+blocks are skipped by clamping the kv grid per q block (no wasted MXU work).
+
+Training uses the differentiable reference path under remat (DESIGN.md: the
+backward kernel is future work); this kernel serves the prefill/decode path
+and the roofline experiments.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_k: int,
+                  kv_len: int, q_offset: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    cols = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = cols < kv_len                            # padding guard
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # (bq, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)                     # exp(NEG_INF - m) underflow guard
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)        # fully-masked q rows -> 0
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           q_offset: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+
+    GQA: query head h reads kv head h // (Hq // Hkv) via the BlockSpec index
+    map (no materialized jnp.repeat -- the kv tile is fetched once per group).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sq_pad = (-sq) % bq
+    skv_pad = (-skv) % bk
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    if skv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+    nq = (sq + sq_pad) // bq
+    nk = (skv + skv_pad) // bk
+
+    grid = (b * hq, nq, nk)
+
+    def q_map(bh, qi, kj):
+        return (bh // hq, bh % hq, qi, 0)
+
+    def kv_map(bh, qi, kj):
+        return (bh // hq, (bh % hq) // group, kj, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, block_q=bq,
+                          block_k=bk, kv_len=skv, q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), q_map),
+            pl.BlockSpec((1, 1, bk, d), kv_map),
+            pl.BlockSpec((1, 1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq + sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu_vmem((bq, d), jnp.float32),   # acc
+            pltpu_vmem((bq, 1), jnp.float32),   # running max m
+            pltpu_vmem((bq, 1), jnp.float32),   # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]
+
+
+def pltpu_vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+# --- Forward emitting logsumexp (residual for the backward kernels) ----------
+
+def _flash_lse_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref,
+                      l_ref, *, scale, causal, window, softcap, block_q,
+                      block_k, kv_len, q_offset):
+    _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  scale=scale, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, kv_len=kv_len,
+                  q_offset=q_offset)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _emit_lse():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+
+
+def flash_attention_fwd_lse(q, k, v, *, causal=True, window=None,
+                            softcap=None, scale=None, q_offset=0,
+                            block_q=128, block_k=128, interpret=False):
+    """Forward returning (o, lse (B, Hq, Sq) f32) -- kv at FULL query-head
+    count (expanded by the ops.py wrapper for GQA)."""
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    sq_pad, skv_pad = (-sq) % bq, (-skv) % bk
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    if skv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+    nq, nk = (sq + sq_pad) // bq, (skv + skv_pad) // bk
+    qmap = lambda bh, i, j: (bh // hq, bh % hq, i, 0)
+    kmap = lambda bh, i, j: (bh // hq, bh % hq, j, 0)
+    rowmap = lambda bh, i, j: (bh // hq, bh % hq, i)
+    o, lse = pl.pallas_call(
+        functools.partial(_flash_lse_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, block_q=bq,
+                          block_k=bk, kv_len=skv, q_offset=q_offset),
+        grid=(b * hq, nq, nk),
+        in_specs=[pl.BlockSpec((1, 1, bq, d), qmap),
+                  pl.BlockSpec((1, 1, bk, d), kmap),
+                  pl.BlockSpec((1, 1, bk, d), kmap)],
+        out_specs=[pl.BlockSpec((1, 1, bq, d), qmap),
+                   pl.BlockSpec((1, 1, bq), rowmap)],
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype),
+                   jax.ShapeDtypeStruct(q.shape[:3], jnp.float32)],
+        scratch_shapes=[pltpu_vmem((bq, d), jnp.float32),
+                        pltpu_vmem((bq, 1), jnp.float32),
+                        pltpu_vmem((bq, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return o[:, :, :sq, :], lse[:, :, :sq]

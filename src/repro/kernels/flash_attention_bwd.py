@@ -1,0 +1,204 @@
+"""Pallas TPU kernels: flash attention BACKWARD (dq / dk / dv).
+
+Completes the training story for the flash kernel: forward saves only the
+per-row logsumexp (O(S) instead of the O(S^2) probability matrix); the
+backward recomputes probabilities blockwise -- the flash-attention memory
+trade in both directions.
+
+Math (per q row i, kv col j):
+  p_ij = exp(s_ij - lse_i)
+  dv_j = sum_i p_ij dO_i
+  dp_ij = dO_i . v_j
+  ds_ij = p_ij (dp_ij - D_i),   D_i = dO_i . O_i    (rowsum, precomputed)
+  softcap chain: s = c tanh(z/c)  =>  dz = ds (1 - (s/c)^2)
+  dq_i = sum_j ds_ij k_j * scale ;  dk_j = sum_i ds_ij q_i * scale
+
+Two kernels: dq iterates kv blocks for a fixed q block; dkv iterates q
+blocks for a fixed kv block. Both are MXU matmuls over (bq, bk) tiles with
+the same masking as the forward. GQA is resolved in ops.py (backward runs
+at full query-head count; dk/dv are summed over the head group).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import NEG_INF, pltpu_vmem
+
+
+def _band_mask(rows, cols, *, causal, window, kv_len):
+    mask = cols < kv_len
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= (rows - cols) < window
+    return mask
+
+
+def _recompute_p(q, k, lse, rows, cols, *, scale, causal, window, softcap,
+                 kv_len):
+    """(p, s_capped) at one (bq, bk) tile; p zero outside the band."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = _band_mask(rows, cols, causal=causal, window=window,
+                      kv_len=kv_len)
+    s_masked = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s_masked - lse[:, None])
+    p = jnp.where(mask, p, 0.0)
+    return p, s
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, dq_ref,
+               acc_ref, *, scale, causal, window, softcap, block_q, block_k,
+               kv_len, q_offset):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    dsum = dsum_ref[0, 0]
+
+    rows = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    cols = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    p, s = _recompute_p(q, k, lse, rows, cols, scale=scale, causal=causal,
+                        window=window, softcap=softcap, kv_len=kv_len)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dsum[:, None])
+    if softcap is not None:
+        ds = ds * (1.0 - (s / softcap) ** 2)
+    acc_ref[...] += jax.lax.dot(ds, k,
+                                preferred_element_type=jnp.float32) * scale
+
+    @pl.when(kj == nk - 1)
+    def _out():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *, scale, causal, window,
+                softcap, block_q, block_k, kv_len, q_offset):
+    kj = pl.program_id(1)
+    qi = pl.program_id(2)
+    nq = pl.num_programs(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    dsum = dsum_ref[0, 0]
+
+    rows = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    cols = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    p, s = _recompute_p(q, k, lse, rows, cols, scale=scale, causal=causal,
+                        window=window, softcap=softcap, kv_len=kv_len)
+    # dv += p^T dO
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dsum[:, None])
+    if softcap is not None:
+        ds = ds * (1.0 - (s / softcap) ** 2)
+    # dk += ds^T q * scale
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(qi == nq - 1)
+    def _out():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_pallas(q, k, v, o, lse, do, *, scale, causal,
+                               window, softcap, q_offset=0,
+                               block_q=128, block_k=128, interpret=False):
+    """Full-head backward. q/do/o: (B, H, Sq, D); k/v: (B, H, Skv, D)
+    (kv already expanded to H query heads); lse: (B, H, Sq) f32.
+    Returns (dq, dk, dv) at the expanded head count."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    sq_pad, skv_pad = (-sq) % bq, (-skv) % bk
+    pad_q = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    pad_k = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+    dsum = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                   axis=-1)                                 # (B, H, Sq)
+    if sq_pad:
+        q, o, do = pad_q(q), pad_q(o), pad_q(do)
+        lse = jnp.pad(lse, ((0, 0), (0, 0), (0, sq_pad)),
+                      constant_values=1.0)
+        dsum = jnp.pad(dsum, ((0, 0), (0, 0), (0, sq_pad)))
+    if skv_pad:
+        k, v = pad_k(k), pad_k(v)
+    nq, nk = (sq + sq_pad) // bq, (skv + skv_pad) // bk
+
+    qmap = lambda bh, i, j: (bh // h, bh % h, i, 0)
+    kmap = lambda bh, i, j: (bh // h, bh % h, j, 0)
+    rowmap = lambda bh, i, j: (bh // h, bh % h, i)
+
+    common = dict(scale=scale, causal=causal, window=window,
+                  softcap=softcap, block_q=bq, block_k=bk, kv_len=skv,
+                  q_offset=q_offset)
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **common),
+        grid=(b * h, nq, nk),
+        in_specs=[pl.BlockSpec((1, 1, bq, d), qmap),
+                  pl.BlockSpec((1, 1, bk, d), kmap),
+                  pl.BlockSpec((1, 1, bk, d), kmap),
+                  pl.BlockSpec((1, 1, bq, d), qmap),
+                  pl.BlockSpec((1, 1, bq), rowmap),
+                  pl.BlockSpec((1, 1, bq), rowmap)],
+        out_specs=pl.BlockSpec((1, 1, bq, d), qmap),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu_vmem((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, dsum)
+
+    kvmap = lambda bh, j, i: (bh // h, bh % h, j, 0)
+    qmap2 = lambda bh, j, i: (bh // h, bh % h, i, 0)
+    rowmap2 = lambda bh, j, i: (bh // h, bh % h, i)
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, **common),
+        grid=(b * h, nk, nq),
+        in_specs=[pl.BlockSpec((1, 1, bq, d), qmap2),
+                  pl.BlockSpec((1, 1, bk, d), kvmap),
+                  pl.BlockSpec((1, 1, bk, d), kvmap),
+                  pl.BlockSpec((1, 1, bq, d), qmap2),
+                  pl.BlockSpec((1, 1, bq), rowmap2),
+                  pl.BlockSpec((1, 1, bq), rowmap2)],
+        out_specs=[pl.BlockSpec((1, 1, bk, d), kvmap),
+                   pl.BlockSpec((1, 1, bk, d), kvmap)],
+        out_shape=[jax.ShapeDtypeStruct(k.shape, k.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        scratch_shapes=[pltpu_vmem((bk, d), jnp.float32),
+                        pltpu_vmem((bk, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, dsum)
+
+    return dq[:, :, :sq, :], dk[:, :, :skv, :], dv[:, :, :skv, :]

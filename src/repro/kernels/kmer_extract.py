@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: k-mer extraction (paper Alg. 1 parse loop, Phase 1).
+
+The paper's Phase-1 hot spot: stream read codes once through fast memory and
+emit one packed word per window position. On TPU this is VPU work: the block
+of reads sits in VMEM, the shift-or runs over vector registers, and the
+output tile streams back to HBM -- one pass, matching the analytical model's
+Eq. 10 traffic (read bytes in, word bytes out).
+
+Tiling: grid over read-row blocks; each kernel instance owns a
+(block_reads, m) tile of codes and produces the (block_reads, m-k+1) word
+tile. m (= read length, 100-151nt) is padded to the 128-lane boundary by the
+ops.py wrapper so the VMEM tiles are hardware-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import encoding
+
+
+def _kmer_extract_kernel(codes_ref, out_ref, *, k: int, bits_per_symbol: int,
+                         n_pos: int):
+    codes = codes_ref[...]
+    dt = out_ref.dtype
+    acc = jnp.zeros(codes.shape[:-1] + (n_pos,), dt)
+    shift = dt.type(bits_per_symbol)
+    for j in range(k):  # k static: unrolled shift-or, pure VPU ops
+        window = jax.lax.slice_in_dim(codes, j, j + n_pos, axis=-1)
+        acc = (acc << shift) | window.astype(dt)
+    out_ref[...] = acc
+
+
+def kmer_extract_pallas(reads: jax.Array, k: int, bits_per_symbol: int = 2,
+                        block_reads: int = 8, interpret: bool = False
+                        ) -> jax.Array:
+    """(n_reads, m) codes -> (n_reads, m-k+1) packed words via pallas_call."""
+    n_reads, m = reads.shape
+    n_pos = m - k + 1
+    dt = encoding.kmer_dtype(k, bits_per_symbol)
+    if n_reads % block_reads != 0:
+        raise ValueError(f"n_reads {n_reads} % block_reads {block_reads} != 0")
+    grid = (n_reads // block_reads,)
+    return pl.pallas_call(
+        functools.partial(_kmer_extract_kernel, k=k,
+                          bits_per_symbol=bits_per_symbol, n_pos=n_pos),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_reads, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_reads, n_pos), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_reads, n_pos), dt),
+        interpret=interpret,
+    )(reads)

@@ -1,0 +1,132 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Backend dispatch: Pallas kernels lower to Mosaic only on TPU. On CPU (this
+container, and any unit-test environment) the wrappers run the kernels in
+`interpret=True` mode -- the kernel *body* executes with real Python/XLA
+semantics, so correctness of the tiled algorithm is what the tests validate.
+`force` overrides for tests; `prefer_ref` routes to the jnp oracle (used by
+the dry-run so the lowered HLO contains no custom calls).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.kmer_extract import kmer_extract_pallas
+from repro.kernels.radix_hist import radix_hist_pallas
+from repro.kernels.segment_count import segment_boundaries_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def kmer_extract(reads: jax.Array, k: int, bits_per_symbol: int = 2,
+                 block_reads: int = 8) -> jax.Array:
+    return kmer_extract_pallas(reads, k, bits_per_symbol,
+                               block_reads=block_reads,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def radix_hist(keys: jax.Array, shift: int, digit_bits: int = 4,
+               tile: int = 1024) -> jax.Array:
+    return radix_hist_pallas(keys, shift, digit_bits, tile=tile,
+                             interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("sentinel_val", "tile"))
+def segment_boundaries(sorted_keys: jax.Array, *, sentinel_val: int,
+                       tile: int = 1024) -> jax.Array:
+    return segment_boundaries_pallas(sorted_keys, sentinel_val, tile=tile,
+                                     interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "q_offset", "block_q", "block_k",
+    "impl"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    impl: str = "auto") -> jax.Array:
+    """impl: 'auto' (pallas on TPU, else interpret), 'pallas', 'ref'.
+
+    'ref' is the differentiable path used inside train_step; 'auto' is the
+    serving path.
+    """
+    if impl == "ref":
+        return ref.mha_ref(q, k, v, causal=causal, window=window,
+                           softcap=softcap, scale=scale, q_offset=q_offset)
+    interpret = _interpret() if impl == "auto" else (impl != "pallas")
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  q_offset=q_offset, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k"))
+def flash_attention_trainable(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                              causal: bool = True,
+                              window: Optional[int] = None,
+                              softcap: Optional[float] = None,
+                              scale: Optional[float] = None,
+                              block_q: int = 128, block_k: int = 128
+                              ) -> jax.Array:
+    """Flash attention with the Pallas BACKWARD kernels (training path).
+
+    Forward saves only the per-row logsumexp; backward recomputes
+    probabilities blockwise (flash_attention_bwd.py). GQA: kv expands to
+    query heads for the kernels; dk/dv group-sum back.
+    """
+    from repro.kernels.flash_attention import flash_attention_fwd_lse
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
+
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    resolved_scale = d ** -0.5 if scale is None else scale
+    interp = _interpret()
+
+    @jax.custom_vjp
+    def _flash(q, k, v):
+        kq = jnp.repeat(k, group, axis=1)
+        vq = jnp.repeat(v, group, axis=1)
+        o, _ = flash_attention_fwd_lse(
+            q, kq, vq, causal=causal, window=window, softcap=softcap,
+            scale=resolved_scale, block_q=block_q, block_k=block_k,
+            interpret=interp)
+        return o
+
+    def _fwd(q, k, v):
+        kq = jnp.repeat(k, group, axis=1)
+        vq = jnp.repeat(v, group, axis=1)
+        o, lse = flash_attention_fwd_lse(
+            q, kq, vq, causal=causal, window=window, softcap=softcap,
+            scale=resolved_scale, block_q=block_q, block_k=block_k,
+            interpret=interp)
+        return o, (q, kq, vq, o, lse)
+
+    def _bwd(res, do):
+        q, kq, vq, o, lse = res
+        dq, dk_full, dv_full = flash_attention_bwd_pallas(
+            q, kq, vq, o, lse, do, scale=resolved_scale, causal=causal,
+            window=window, softcap=softcap, block_q=block_q,
+            block_k=block_k, interpret=interp)
+        skv = kq.shape[2]
+        dk = dk_full.reshape(b, hkv, group, skv, d).sum(axis=2)
+        dv = dv_full.reshape(b, hkv, group, skv, d).sum(axis=2)
+        return (dq.astype(q.dtype), dk.astype(kq.dtype),
+                dv.astype(vq.dtype))
+
+    _flash.defvjp(_fwd, _bwd)
+    return _flash(q, k, v)

@@ -1,0 +1,189 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` is the semantic ground truth: kernels must match it to
+float/integer exactness (tests sweep shapes and dtypes against these).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+
+
+# --- kmer_extract ----------------------------------------------------------
+
+def kmer_extract_ref(reads: jax.Array, k: int, bits_per_symbol: int = 2
+                     ) -> jax.Array:
+    """(n_reads, m) codes -> (n_reads, m-k+1) packed words."""
+    return encoding.pack_kmers(reads, k, bits_per_symbol)
+
+
+# --- radix_hist -------------------------------------------------------------
+
+def radix_hist_ref(keys: jax.Array, shift: int, digit_bits: int,
+                   tile: int) -> jax.Array:
+    """Per-tile digit histograms: (n,) keys -> (n//tile, 2**digit_bits) int32.
+
+    The histogram pass of an LSD radix sort (paper Eq. 12/13's per-pass
+    streaming sweep); tiles correspond to the blocks a TPU core would stream
+    through VMEM.
+    """
+    radix = 1 << digit_bits
+    dt = keys.dtype.type
+    digits = ((keys >> dt(shift)) & dt(radix - 1)).astype(jnp.int32)
+    tiles = digits.reshape(-1, tile)
+    return jax.vmap(lambda d: jnp.bincount(d, length=radix))(tiles).astype(
+        jnp.int32)
+
+
+# --- segment_count ----------------------------------------------------------
+
+def segment_boundaries_ref(sorted_keys: jax.Array, sentinel_val: int
+                           ) -> jax.Array:
+    """Boundary flags of runs in a sorted array (the Accumulate sweep's
+    comparison pass). bool (n,): True at the first element of each valid run.
+    """
+    sent = sorted_keys.dtype.type(sentinel_val)
+    prev = jnp.concatenate([jnp.full((1,), sent, sorted_keys.dtype),
+                            sorted_keys[:-1]])
+    return (sorted_keys != sent) & (sorted_keys != prev)
+
+
+# --- flash_attention --------------------------------------------------------
+
+def flash_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              window: Optional[int] = None,
+              softcap: Optional[float] = None,
+              scale: Optional[float] = None,
+              q_offset: int = 0,
+              block_q: int = 1024, block_k: int = 1024) -> jax.Array:
+    """Blockwise online-softmax attention in pure jnp (differentiable).
+
+    The XLA-level twin of the Pallas kernel: a scan over q blocks with an
+    inner scan over kv blocks keeps only (block_q, block_k) logits live, so
+    32k-token prefill never materializes the (S, S) score matrix (36 GB ->
+    ~2 GB temp on the prefill_32k cells -- EXPERIMENTS.md §Perf). Blocks
+    fully outside the causal/window band are skipped via lax.cond, so SWA
+    archs also keep their FLOP advantage. Used by models/attention.py for
+    long sequences; gradients flow through the scans (remat-friendly).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sq_pad, skv_pad = (-sq) % bq, (-skv) % bk
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    if skv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+    nq, nk = (sq + sq_pad) // bq, (skv + skv_pad) // bk
+    kb = jnp.moveaxis(k.reshape(b, hkv, nk, bk, d), 2, 0)  # (nk,B,Hkv,bk,D)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nk, bk, d), 2, 0)
+    qb = jnp.moveaxis(q.reshape(b, hq, nq, bq, d), 2, 0)   # (nq,B,Hq,bq,D)
+    kq = jnp.repeat(kb, group, axis=2)                     # GQA broadcast
+    vq = jnp.repeat(vb, group, axis=2)
+
+    def q_block(qi, q_blk):
+        q32 = q_blk.astype(jnp.float32)
+        rows = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_block(carry, inp):
+            kj, k_blk, v_blk = inp
+            m_prev, l_prev, acc = carry
+
+            def update(_):
+                s = jnp.einsum("bhqd,bhkd->bhqk", q32,
+                               k_blk.astype(jnp.float32)) * scale
+                if softcap is not None:
+                    s = softcap * jnp.tanh(s / softcap)
+                cols = kj * bk + jnp.arange(bk)
+                mask = (cols < skv)[None, :]
+                if causal:
+                    mask = mask & (rows[:, None] >= cols[None, :])
+                if window is not None:
+                    mask = mask & ((rows[:, None] - cols[None, :]) < window)
+                s = jnp.where(mask[None, None], s, -jnp.inf)
+                m_new = jnp.maximum(m_prev, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                p = jnp.where(jnp.isnan(p), 0.0, p)
+                alpha = jnp.exp(m_prev - m_new)
+                alpha = jnp.where(jnp.isnan(alpha), 0.0, alpha)
+                l_new = alpha * l_prev + p.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhqk,bhkd->bhqd", p, v_blk.astype(jnp.float32))
+                return m_new, l_new, acc_new
+
+            # Static band check is impossible (kj traced), so use cond to
+            # skip fully-masked blocks without spending MXU flops on them.
+            lo = kj * bk
+            needed = lo < skv
+            if causal:
+                needed = needed & (lo <= rows[-1])
+            if window is not None:
+                needed = needed & (lo + bk - 1 >= rows[0] - window + 1)
+            return jax.lax.cond(needed, update,
+                                lambda _: (m_prev, l_prev, acc), None), None
+
+        init = (jnp.full((b, hq, bq), -jnp.inf, jnp.float32),
+                jnp.zeros((b, hq, bq), jnp.float32),
+                jnp.zeros((b, hq, bq, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(nk), kq, vq))
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l_safe[..., None]).astype(q_blk.dtype)
+
+    out = jax.lax.map(lambda inp: q_block(*inp), (jnp.arange(nq), qb))
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, sq + sq_pad, d)
+    return out[:, :, :sq, :]
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True,
+            window: Optional[int] = None,
+            softcap: Optional[float] = None,
+            scale: Optional[float] = None,
+            q_offset: int = 0) -> jax.Array:
+    """Reference attention. q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).
+
+    GQA: Hq must be a multiple of Hkv; query head h attends kv head
+    h // (Hq // Hkv). `window`: only keys with (q_pos - k_pos) < window
+    attend (sliding window, causal side). `softcap`: logits squashed to
+    cap * tanh(logits / cap) (gemma2). `q_offset`: absolute position of
+    q[0] (decode steps attend a longer KV cache).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    # f32 via matmul accumulation (preferred_element_type), NOT input casts:
+    # .astype(f32) on a 32k-token KV cache materializes a 2x-sized copy per
+    # layer -- decode_32k bytes-accessed drops ~40% without it (§Perf).
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kq,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(vq.dtype), vq,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: sorted-run boundary detection (the Accumulate sweep).
+
+Paper Alg. 1 `Accumulate`: one comparison pass over the sorted k-mer stream.
+Cross-tile dependence (the first element of a tile compares against the last
+element of the previous tile) is resolved by passing a second input block
+offset by one tile -- each instance reads its own tile plus the single
+preceding word, so tiles stay independent and the grid is fully parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_kernel(keys_ref, prev_ref, out_ref, *, sentinel_val: int):
+    keys = keys_ref[...]
+    dt = keys.dtype.type
+    sent = dt(sentinel_val)
+    prev = jnp.concatenate([prev_ref[...][-1:], keys[:-1]])
+    out_ref[...] = (keys != sent) & (keys != prev)
+
+
+def segment_boundaries_pallas(sorted_keys: jax.Array, sentinel_val: int,
+                              tile: int = 1024, interpret: bool = False
+                              ) -> jax.Array:
+    """(n,) sorted keys -> (n,) bool run-start flags (sentinel-aware).
+
+    Index 0 is a boundary iff valid (matches ref: prev of the stream is the
+    sentinel); ops.py pads a leading sentinel word to make the offset-by-one
+    block well-defined for the first tile.
+    """
+    n = sorted_keys.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n {n} % tile {tile} != 0")
+    sent = jnp.full((tile,), sentinel_val, sorted_keys.dtype)
+    padded = jnp.concatenate([sent, sorted_keys])  # tile-aligned lookback
+    grid = (n // tile,)
+    return pl.pallas_call(
+        functools.partial(_segment_kernel, sentinel_val=sentinel_val),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i + 1,)),   # my tile
+                  pl.BlockSpec((tile,), lambda i: (i,))],      # previous tile
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(padded, padded)

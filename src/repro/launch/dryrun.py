@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+- the sharding config is coherent (SPMD partitioner accepts it),
+- the per-device program fits (memory_analysis),
+- and it yields the roofline inputs (cost_analysis FLOPs/bytes + collective
+  bytes parsed from the partitioned HLO).
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline report (launch/roofline.py) and EXPERIMENTS.md read from there.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.models import model as model_lib
+from repro.models import sharding as shd
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|f16|bf16|f64|s32|u32|s64|u64|s8|u8|s16|u16|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO shape string, incl. tuple shapes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _BYTES[dtype]
+    return total
+
+
+def _parse_computations(hlo_text: str):
+    """Split optimized HLO into named computations with their op lines."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{",
+                     line.strip())
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps
+
+
+def _loop_multipliers(comps: Dict[str, list]) -> Dict[str, float]:
+    """Execution-count multiplier per computation.
+
+    Ops inside a `while` body run trip-count times but appear ONCE in the
+    HLO text (the layer scan hides a x num_periods factor; the grad-accum
+    scan another x num_microbatches). Trip counts are read from the loop
+    condition's `compare(..., constant(N), direction=LT` pattern that
+    lax.scan lowers to; multipliers propagate through nested loops.
+    """
+    # while op -> (caller comp, body comp, trip count)
+    edges = []
+    for caller, lines in comps.items():
+        for ls in lines:
+            if " while(" not in ls:
+                continue
+            mb = re.search(r"body=%?([\w.\-]+)", ls)
+            mc = re.search(r"condition=%?([\w.\-]+)", ls)
+            if not mb or not mc:
+                continue
+            trip = 1
+            cond_lines = comps.get(mc.group(1), [])
+            consts = [int(x) for cl in cond_lines
+                      for x in re.findall(r"constant\((\d+)\)", cl)]
+            if consts:
+                trip = max(consts)
+            edges.append((caller, mb.group(1), max(trip, 1)))
+    mult = {name: 1.0 for name in comps}
+    for _ in range(4):  # nesting depth fixpoint
+        for caller, body, trip in edges:
+            mult[body] = mult.get(caller, 1.0) * trip
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum RESULT-buffer bytes of every collective op in the partitioned
+    module (per-device shapes -> per-chip traffic), weighted by loop
+    execution counts, plus static op counts."""
+    comps = _parse_computations(hlo_text)
+    mult = _loop_multipliers(comps)
+    out: Dict[str, Dict[str, float]] = {
+        op: {"bytes": 0.0, "count": 0} for op in COLLECTIVE_OPS}
+    for name, lines in comps.items():
+        m_factor = mult.get(name, 1.0)
+        for ls in lines:
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+                         r"(\([^)]*\)|[^=(]+?)\s*"
+                         r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                         r"collective-permute)\(", ls)
+            if not m:
+                continue
+            type_str, op = m.groups()
+            # Wire-byte weighting per op (ring algorithms): result bytes
+            # approximate the per-device traffic for all-gather/all-to-all/
+            # permute; all-reduce moves ~2x its (= input-sized) result;
+            # reduce-scatter moves ~group_size x its (1/P-sized) result.
+            wire = _shape_bytes(type_str)
+            if op == "all-reduce":
+                wire *= 2
+            elif op == "reduce-scatter":
+                g = re.search(r"replica_groups=\[(\d+),(\d+)\]", ls)
+                wire *= int(g.group(2)) if g else 1
+            out[op]["bytes"] += wire * m_factor
+            out[op]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def abstract_state(cfg, mesh):
+    """Abstract params + optimizer state with production shardings."""
+    p_shapes = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+    shardings = jax.tree_util.tree_map_with_path(
+        lambda path, v: NamedSharding(mesh, shd.param_spec(path, v, mesh)),
+        p_shapes)
+
+    def attach(sd, sh):
+        return jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh)
+
+    params = jax.tree.map(attach, p_shapes, shardings)
+    opt = opt_lib.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())),
+        mu=jax.tree.map(attach, p_shapes, shardings),
+        nu=jax.tree.map(attach, p_shapes, shardings))
+    return params, opt
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               compile_it: bool = True, num_microbatches: int = 8) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    batch_axes = data_axes_of(mesh)
+    t0 = time.time()
+    params, opt = abstract_state(cfg, mesh)
+    kwargs = specs_lib.input_specs(cfg, cell, mesh, batch_axes)
+
+    if cell.kind == "train":
+        tcfg = ts_lib.TrainConfig(num_microbatches=num_microbatches)
+        step = ts_lib.make_train_step(cfg, tcfg, mesh=mesh,
+                                      data_axes=batch_axes)
+        lowered = jax.jit(step).lower(params, opt, kwargs["batch"])
+    elif cell.kind == "prefill":
+        def prefill_logits(params, batch):
+            lg, _ = model_lib.forward(params, batch, cfg, mesh=mesh,
+                                      data_axes=batch_axes)
+            return lg
+        lowered = jax.jit(prefill_logits).lower(params, kwargs["batch"])
+    else:  # decode
+        def serve_step(params, tokens, caches, cache_index):
+            lg, new_caches = model_lib.decode_step(
+                params, tokens, caches, cache_index, cfg, mesh=mesh,
+                data_axes=batch_axes)
+            nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, new_caches
+        lowered = jax.jit(serve_step).lower(
+            params, kwargs["tokens"], kwargs["caches"],
+            kwargs["cache_index"])
+    t_lower = time.time() - t0
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "kind": cell.kind,
+        "lower_seconds": round(t_lower, 2),
+        "num_microbatches": num_microbatches if cell.kind == "train" else None,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if not compile_it:
+        return rec
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_seconds"] = round(time.time() - t0, 2)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed",
+                             "bytes accessed output", "optimal_seconds")}
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+    rec["collectives"] = collective_bytes(compiled.as_text())
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="grad-accum microbatches for train cells")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mname = "pod2x16x16" if multi_pod else "pod16x16"
+        for arch in archs:
+            cfg = get_config(arch)
+            applicable = applicable_shapes(cfg)
+            for shape_name in shapes:
+                ok, reason = applicable[shape_name]
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mname}.json")
+                if not ok:
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape_name,
+                                   "mesh": dict(mesh.shape),
+                                   "skipped": reason}, f, indent=1)
+                    print(f"[skip] {arch} {shape_name} {mname}: {reason}",
+                          flush=True)
+                    continue
+                try:
+                    rec = lower_cell(arch, shape_name, mesh,
+                                     compile_it=not args.no_compile,
+                                     num_microbatches=args.microbatches)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    mem = rec.get("memory", {})
+                    print(f"[ok]   {arch} {shape_name} {mname} "
+                          f"lower={rec['lower_seconds']}s "
+                          f"compile={rec.get('compile_seconds', '-')}s "
+                          f"temp={mem.get('temp_size_in_bytes', '?')}",
+                          flush=True)
+                except Exception as e:
+                    failures.append((arch, shape_name, mname, str(e)))
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape_name,
+                                   "mesh": dict(mesh.shape),
+                                   "error": str(e)[-2000:]}, f, indent=1)
+                    print(f"[FAIL] {arch} {shape_name} {mname}: "
+                          f"{str(e)[:300]}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         f"{[(a, s, m) for a, s, m, _ in failures]}")
+    print("dry-run complete: all cells lowered and compiled")
+
+
+if __name__ == "__main__":
+    main()

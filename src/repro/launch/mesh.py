@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (one TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis rides DCN
+(pure DP + optionally compressed gradient all-reduce), `data`/`model` ride
+ICI. Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}; have {len(devices)} "
+            "(the dry-run sets --xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_test_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
+                   devices: Optional[Sequence] = None) -> Mesh:
+    """Small meshes for unit tests (e.g. (2, 4) on 8 forced host devices)."""
+    import numpy as np
+    devs = list(devices if devices is not None else jax.devices())
+    need = math.prod(shape)
+    return Mesh(np.array(devs[:need]).reshape(shape), axes)
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch-bearing axes: ('pod', 'data') on multi-pod, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

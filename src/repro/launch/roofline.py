@@ -1,0 +1,194 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs / peak_FLOP/s            [s/step/chip]
+  memory term     = HLO_bytes / HBM_bw                 [s/step/chip]
+  collective term = collective_bytes / link_bw         [s/step/chip]
+
+cost_analysis() of the SPMD-partitioned module reports PER-DEVICE flops and
+bytes, so no further division by chip count is needed; collective bytes are
+the per-device result buffers summed from the partitioned HLO
+(launch/dryrun.collective_bytes).
+
+Also reported per cell:
+  MODEL_FLOPS = 6 N D (dense train) / 6 N_active D (MoE) / 2 N D (inference)
+  usefulness  = MODEL_FLOPS_per_chip / HLO_FLOPs  (remat/redundancy waste;
+                >1 means XLA's flop counter under-counts fused ops --
+                both are reported so the discrepancy is visible)
+
+Hardware: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(42.5 GB/s/dir x 2 links usable per axis on a 2D torus is folded into one
+effective 50 GB/s figure per the assignment).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun \
+      [--mesh pod16x16] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+DCN_BW = 6.25e9            # bytes/s / pod link (assumed 50 Gbit DCN)
+
+
+def load_cells(dirpath: str, mesh: Optional[str] = None) -> List[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        r = json.load(open(f))
+        r["_mesh_name"] = os.path.basename(f).split("__")[2].split(".")[0]
+        if mesh and r["_mesh_name"] != mesh:
+            continue
+        cells.append(r)
+    return cells
+
+
+def analytic_flops_per_chip(rec: dict) -> float:
+    """MODEL_FLOPS per chip: 6*N_active*D (train) / 2*N_active*D (inference)
+    plus the attention score/value matmuls, which 6ND omits and which
+    dominate at 32k+ context.
+
+    Needed because XLA:CPU's cost analysis does not count flops inside
+    oneDNN custom-call matmuls (the 'useful_ratio' column makes the gap
+    visible); the compute roofline term uses max(HLO, analytic)."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    cfg = get_config(rec["arch"])
+    cell = SHAPES[rec["shape"]]
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    tokens = _tokens_of(rec)
+    n_active = rec.get("active_param_count") or rec.get("param_count")
+    mult = 6 if rec["kind"] == "train" else 2
+    core = mult * n_active * tokens
+    # attention context flops: 4 * S_eff * H * hd per token per attn layer
+    s_ctx = cell.seq_len
+    attn_layers = sum(1 for kind in cfg.period
+                      if kind in ("attn", "attn_local", "moe")) \
+        * cfg.num_periods
+    if "mamba_shared_attn" in cfg.period:
+        attn_layers += cfg.num_periods
+    s_eff = s_ctx / 2 if cfg.causal else s_ctx          # causal half-band
+    if cfg.sliding_window:
+        s_eff = min(s_eff, cfg.sliding_window)
+    attn = (mult / 2) * 4 * s_eff * cfg.num_heads * cfg.resolved_head_dim \
+        * attn_layers * tokens
+    return (core + attn) / chips
+
+
+def roofline_terms(rec: dict) -> Optional[Dict[str, float]]:
+    if "skipped" in rec or "error" in rec:
+        return None
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    hlo_flops = rec["cost"].get("flops", 0.0)
+    model_flops = analytic_flops_per_chip(rec)
+    flops = max(hlo_flops, model_flops)
+    bytes_acc = rec["cost"].get("bytes accessed", 0.0)
+    # memory floor: params (+grads+opt) traffic per step per chip
+    param_bytes = 4.0 * (rec.get("param_count") or 0) / chips
+    mem_mult = 3.0 if rec["kind"] == "train" else 0.5   # bf16 read at serve
+    bytes_eff = max(bytes_acc, mem_mult * param_bytes)
+    coll = rec["collectives"]["total_bytes"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_eff / HBM_BW
+    t_coll = coll / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    total_overlap = max(t_compute, t_memory, t_coll)
+    total_serial = t_compute + t_memory + t_coll
+    t_useful = model_flops / PEAK_FLOPS
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": rec["_mesh_name"], "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": model_flops,
+        "hlo_flops_per_chip": hlo_flops,
+        "useful_ratio": (model_flops / hlo_flops) if hlo_flops
+        else float("inf"),
+        "bound_time_s": total_overlap,
+        # roofline fractions: achieved fraction of peak FLOPs if the step
+        # runs exactly at its resource limits. 'overlap' assumes the two
+        # non-dominant terms hide perfectly under the dominant one (upper
+        # bound); 'serial' assumes zero overlap (lower bound). The perf
+        # loop drives serial -> overlap by shrinking non-dominant terms.
+        "mfu_overlap": t_useful / total_overlap if total_overlap else 0.0,
+        "mfu_serial": t_useful / total_serial if total_serial else 0.0,
+        "temp_gb": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def _tokens_of(rec: dict) -> float:
+    from repro.configs.base import SHAPES
+    cell = SHAPES[rec["shape"]]
+    if rec["kind"] == "decode":
+        return cell.global_batch          # one token per sequence per step
+    return cell.global_batch * cell.seq_len
+
+
+def render(rows: List[dict], markdown: bool = False) -> str:
+    cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "mfu_overlap", "mfu_serial",
+            "temp_gb"]
+    out = []
+    if markdown:
+        out.append("| " + " | ".join(cols) + " |")
+        out.append("|" + "---|" * len(cols))
+        for r in rows:
+            out.append("| " + " | ".join(_fmt(r[c]) for c in cols) + " |")
+    else:
+        out.append(",".join(cols))
+        for r in rows:
+            out.append(",".join(_fmt(r[c]) for c in cols))
+    return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-3 or abs(v) >= 1e4:
+            return f"{v:.3e}"
+        return f"{v:.4f}"
+    return str(v)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = []
+    skips = []
+    for rec in load_cells(args.dir, args.mesh):
+        t = roofline_terms(rec)
+        if t is None:
+            skips.append((rec["arch"], rec["shape"], rec["_mesh_name"],
+                          rec.get("skipped", rec.get("error", "?"))))
+        else:
+            rows.append(t)
+    text = render(rows, args.markdown)
+    if skips:
+        text += "\n\nskipped cells:\n" + "\n".join(
+            f"  {a} {s} {m}: {r}" for a, s, m, r in skips)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero device allocation -- the dry-run lowers
+train_step / serve_step against these. For [vlm], text tokens shrink by
+num_patches so the backbone sequence matches the cell's seq_len; [audio]
+provides frame embeddings + frame labels.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import model as model_lib
+from repro.models import sharding as shd
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], spec: Optional[P]):
+    if mesh is None or spec is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def train_inputs(cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh],
+                 batch_axes: Tuple[str, ...]) -> Dict[str, jax.Array]:
+    b, s = cell.global_batch, cell.seq_len
+    specs = shd.batch_specs(cfg, batch_axes=batch_axes)
+    out = {}
+    if cfg.frontend.kind == "audio":
+        out["frames"] = _sds((b, s, cfg.frontend.frontend_dim), jnp.float32,
+                             mesh, specs["frames"])
+        out["labels"] = _sds((b, s), jnp.int32, mesh,
+                             P(*tuple(specs["frames"])[:2]))
+        return out
+    n_text = s - (cfg.frontend.num_patches
+                  if cfg.frontend.kind == "vision" else 0)
+    out["tokens"] = _sds((b, n_text), jnp.int32, mesh, specs["tokens"])
+    if cfg.frontend.kind == "vision":
+        out["patches"] = _sds(
+            (b, cfg.frontend.num_patches, cfg.frontend.frontend_dim),
+            jnp.float32, mesh, specs["patches"])
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh],
+                  batch_axes: Tuple[str, ...], seq_axis: Optional[str]
+                  ) -> Tuple[Dict, object, object]:
+    """(tokens, caches, cache_index) specs for one decode step against a
+    seq_len cache."""
+    b, s = cell.global_batch, cell.seq_len
+    caches = model_lib.init_caches(cfg, b, s, jnp.bfloat16, abstract=True)
+    if mesh is not None:
+        cspecs = shd.cache_specs(cfg, mesh, batch_axes=batch_axes,
+                                 seq_axis=seq_axis)
+        # Mirror the stacked structure: attach shardings leaf-wise.
+        def attach(sd, spec):
+            fixed = shd._fit(spec, sd.shape, mesh)
+            return jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                        sharding=NamedSharding(mesh, fixed))
+        caches = jax.tree.map(attach, caches, cspecs,
+                              is_leaf=lambda x: isinstance(
+                                  x, jax.ShapeDtypeStruct))
+    tok_spec = (P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+                if cell.global_batch > 1 else P(None, None))
+    tokens = _sds((b, 1), jnp.int32, mesh, tok_spec)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, caches, index
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Optional[Mesh],
+                batch_axes: Tuple[str, ...]):
+    """Dispatch per cell kind. Returns kwargs for the lowered step fn."""
+    if cell.kind == "train":
+        return {"batch": train_inputs(cfg, cell, mesh, batch_axes)}
+    if cell.kind == "prefill":
+        return {"batch": train_inputs(cfg, cell, mesh, batch_axes)}
+    seq_axis = "data" if cell.global_batch == 1 else None
+    tokens, caches, index = decode_inputs(cfg, cell, mesh, batch_axes,
+                                          seq_axis)
+    return {"tokens": tokens, "caches": caches, "cache_index": index}

@@ -1,0 +1,179 @@
+"""GQA attention block: QKV(+bias) / RoPE / flash-or-ref attention / output.
+
+Covers every attention variant the assigned archs need: grouped KV heads
+(gemma2/minitron/danube/llava), full MHA (zamba2 shared block), QKV bias
+(qwen1.5), sliding windows (gemma2 local layers, danube), logit softcap
+(gemma2), bidirectional (hubert), and single-token decode against a KV
+cache. Distributed flash-decode for sequence-sharded caches lives in
+train/serve_step.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops, ref
+from repro.models import layers
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, Hkv, S_max, hd)
+    v: jax.Array
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, h, hkv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                     cfg.resolved_head_dim)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.truncated_normal(ks[0], (d, h, hd), d ** -0.5),
+        "wk": layers.truncated_normal(ks[1], (d, hkv, hd), d ** -0.5),
+        "wv": layers.truncated_normal(ks[2], (d, hkv, hd), d ** -0.5),
+        "wo": layers.truncated_normal(ks[3], (h, hd, d), (h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    return p
+
+
+def _decode_shard_specs(cfg: ModelConfig, mesh, batch: int):
+    """Sharding strategy for decode attention, mirroring
+    models.sharding.cache_specs: (q_spec, kv_spec, out_spec) or None.
+
+    When kv heads shard over `model`, decode is head-parallel. Otherwise the
+    cache SEQUENCE is sharded over `model` (+ over `data` when batch==1,
+    the long_500k regime) and decode is the distributed flash-decode: the
+    per-shard partial softmax combines through GSPMD's partial reductions.
+    Constraining q/kv/out consistently is what stops the partitioner from
+    'resolving' the q-heads-vs-kv-seq conflict with a full cache gather.
+    """
+    if mesh is None:
+        return None
+    from jax.sharding import NamedSharding
+    import math as _m
+    d_sz = mesh.shape.get("data", 1)
+    heads_div = cfg.num_kv_heads % mesh.shape["model"] == 0
+    b_ax = "data" if (batch >= d_sz and batch % d_sz == 0) else None
+    if heads_div:
+        # Head-parallel decode; at batch==1 (long_500k) the cache sequence
+        # additionally shards over the idle `data` axis -- matching
+        # sharding.cache_specs, otherwise GSPMD re-gathers the multi-GB
+        # cache over `data` every layer (zamba2 long_500k: 0.20 s -> ~0 of
+        # collective time, §Perf).
+        seq_ax = "data" if (b_ax is None and "data" in mesh.shape) else None
+        kv = P(b_ax, "model", seq_ax, None)
+        q = P(b_ax, "model", None, None)
+        out = P(b_ax, "model", None, None)
+    else:
+        s_ax = "model" if b_ax == "data" else (
+            ("data", "model") if "data" in mesh.shape else "model")
+        kv = P(b_ax, None, s_ax, None)
+        q = P(b_ax, None, None, None)
+        out = P(b_ax, None, None, None)
+    mk = lambda s: NamedSharding(mesh, s)
+    return mk(q), mk(kv), mk(out)
+
+
+def attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
+              window: Optional[int], positions: jax.Array,
+              cache: Optional[KVCache] = None,
+              cache_index: Optional[jax.Array] = None,
+              mesh=None,
+              ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x: (B, T, D). With a cache, T is the new-token count (decode: 1) and
+    `cache_index` is the write offset; returns (y, updated_cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(cdt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(cdt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cdt)
+        k = k + params["bk"].astype(cdt)
+        v = v + params["bv"].astype(cdt)
+
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    # (B, H, T, hd)
+    q, k, v = (jnp.swapaxes(a, 1, 2) for a in (q, k, v))
+
+    if cache is not None:
+        assert cache_index is not None
+        if t == 1:
+            # Decode: update via a positional mask, NOT dynamic_update_slice.
+            # A DUS at a traced index on a sequence-sharded cache forces
+            # GSPMD into a full all-gather of the cache (4 x 2.1 GB/step on
+            # gemma2 decode_32k -- EXPERIMENTS.md §Perf); the elementwise
+            # select partitions under any sharding and fuses with the
+            # attention read.
+            s_max = cache.k.shape[2]
+            hit = (jnp.arange(s_max) == cache_index)[None, None, :, None]
+            new_k = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
+            new_v = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
+        else:
+            new_k = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, cache_index, 0))
+            new_v = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, cache_index, 0))
+        cache = KVCache(k=new_k, v=new_v)
+        kd, vd = new_k.astype(q.dtype), new_v.astype(q.dtype)
+        if t == 1:
+            specs = _decode_shard_specs(cfg, mesh, b)
+            if specs is not None:
+                qs, kvs, _ = specs
+                q = jax.lax.with_sharding_constraint(q, qs)
+                kd = jax.lax.with_sharding_constraint(kd, kvs)
+                vd = jax.lax.with_sharding_constraint(vd, kvs)
+        # Decode path: cache_index is traced, so use the differentiable ref
+        # (the Pallas q_offset is a compile-time block-skipping parameter).
+        out = ref.mha_ref(q, kd, vd,
+                          causal=cfg.causal, window=window,
+                          softcap=cfg.attn_logit_softcap,
+                          q_offset=cache_index)
+        if t == 1 and mesh is not None:
+            specs = _decode_shard_specs(cfg, mesh, b)
+            if specs is not None:
+                out = jax.lax.with_sharding_constraint(out, specs[2])
+    elif cfg.attn_impl == "flash_train":
+        # Pallas forward + backward kernels (lse residual; O(S) memory in
+        # both directions). The TPU training default; interpret-mode
+        # elsewhere.
+        out = ops.flash_attention_trainable(
+            q, k, v, causal=cfg.causal, window=window,
+            softcap=cfg.attn_logit_softcap)
+    elif k.shape[2] > 8192:
+        # Long sequences: blockwise online-softmax attention (pure jnp,
+        # differentiable) -- never materializes the (S, S) score matrix.
+        out = ref.flash_ref(q, k, v, causal=cfg.causal, window=window,
+                            softcap=cfg.attn_logit_softcap)
+    else:
+        out = ops.flash_attention(
+            q, k, v, causal=cfg.causal, window=window,
+            softcap=cfg.attn_logit_softcap, q_offset=0,
+            impl=cfg.attn_impl)
+    out = jnp.swapaxes(out, 1, 2)  # (B, T, H, hd)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(cdt))
+    return y, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.num_kv_heads, max_seq, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    """ShapeDtypeStruct cache stand-in for dry-runs (no allocation)."""
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.num_kv_heads, max_seq, hd)
+    return KVCache(k=jax.ShapeDtypeStruct(shape, dtype),
+                   v=jax.ShapeDtypeStruct(shape, dtype))

@@ -1,0 +1,32 @@
+"""Modality frontend STUBS (per the assignment: [vlm]/[audio] entries specify
+the transformer backbone only; `input_specs()` provides precomputed
+frame/patch embeddings).
+
+The stub owns only the projector that maps precomputed frontend features
+(CLIP-L patches for llava-next, conv-frame features for hubert) into
+d_model. Feature extraction itself (vision tower / waveform CNN) is out of
+scope by assignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def init_frontend(key, cfg: ModelConfig) -> dict:
+    f = cfg.frontend
+    if f.kind == "none":
+        return {}
+    return {"proj": layers.truncated_normal(
+        key, (f.frontend_dim, cfg.d_model), f.frontend_dim ** -0.5)}
+
+
+def project(params: dict, features: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, N, frontend_dim) -> (B, N, d_model)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return jnp.einsum("bnf,fd->bnd", features.astype(cdt),
+                      params["proj"].astype(cdt))

@@ -1,0 +1,381 @@
+"""Config-driven model assembly for all 10 assigned architectures.
+
+Layer stacks are expressed as a repeating `period` of layer kinds
+(configs/base.py); parameters for each period slot are STACKED over the
+`num_periods` groups and the forward runs `lax.scan` over groups. HLO size
+is therefore depth-independent -- a 48-layer model lowers the same program
+as a 2-layer one -- which is what makes 40 (arch x shape) dry-run compiles
+at 512 partitions tractable (DESIGN.md Sec. 4).
+
+Caches (KV for attention slots, SSM states for mamba slots) are pytrees
+stacked along the same group axis and threaded through the scan as
+scanned-over inputs/outputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, frontends, layers, moe, ssm
+
+
+def _constrain(x, mesh: Optional[Mesh], spec: Optional[P]):
+    """Activation sharding hint; no-op without a mesh (CPU smoke tests).
+
+    These constraints are what keep GSPMD from replicating the big
+    intermediates (embeddings, residual stream, logits) -- see the qwen
+    train_4k baseline->fix in EXPERIMENTS.md §Perf."""
+    if mesh is None or spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _batch_spec(data_axes) -> object:
+    return data_axes if len(data_axes) > 1 else data_axes[0]
+
+
+def _axis_prod(mesh: Mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _act_spec(shape, mesh: Optional[Mesh], data_axes,
+              last: Optional[str] = None) -> Optional[P]:
+    """(B, T, ...) activation spec: batch over the data axes when divisible,
+    else sequence over `data` (the long_500k regime), else replicated.
+    `last`: optional axis for the trailing dim (e.g. 'model' for logits)."""
+    if mesh is None:
+        return None
+    rest = [None] * (len(shape) - 3)
+    if last is not None and shape[-1] % mesh.shape[last] == 0:
+        tail = rest + [last]
+    else:
+        tail = rest + [None]
+    b_ax = _batch_spec(data_axes)
+    if shape[0] >= _axis_prod(mesh, data_axes) \
+            and shape[0] % _axis_prod(mesh, data_axes) == 0:
+        return P(b_ax, None, *tail)
+    if shape[1] >= mesh.shape["data"] and shape[1] % mesh.shape["data"] == 0:
+        return P(None, "data", *tail)
+    return P(*([None, None] + tail))
+
+
+# --- Per-slot init -----------------------------------------------------------
+
+def _init_slot(key, kind: str, cfg: ModelConfig) -> dict:
+    if kind in ("attn", "attn_local"):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": layers.init_rmsnorm(cfg.d_model),
+                "attn": attention.init_attention(k1, cfg),
+                "ln2": layers.init_rmsnorm(cfg.d_model),
+                "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff)}
+    if kind == "mamba":
+        return {"ln": layers.init_rmsnorm(cfg.d_model),
+                "mamba": ssm.init_mamba(key, cfg)}
+    if kind == "mamba_shared_attn":
+        # The attention/MLP params are SHARED (zamba2); only per-layer norms
+        # and the mamba block live here.
+        return {"ln": layers.init_rmsnorm(cfg.d_model),
+                "mamba": ssm.init_mamba(key, cfg),
+                "ln_sa": layers.init_rmsnorm(cfg.d_model),
+                "ln_sm": layers.init_rmsnorm(cfg.d_model)}
+    if kind == "moe":
+        k1, k2 = jax.random.split(key)
+        return {"ln1": layers.init_rmsnorm(cfg.d_model),
+                "attn": attention.init_attention(k1, cfg),
+                "ln2": layers.init_rmsnorm(cfg.d_model),
+                "moe": moe.init_moe(k2, cfg)}
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    if cfg.frontend.kind != "audio":
+        params["embed"] = layers.init_embed(keys[0], cfg.vocab_size,
+                                            cfg.d_model)
+    if cfg.frontend.kind != "none":
+        params["frontend"] = frontends.init_frontend(keys[1], cfg)
+    if not cfg.tie_embeddings or cfg.frontend.kind == "audio":
+        params["head"] = layers.init_head(keys[2], cfg.vocab_size,
+                                          cfg.d_model)
+    params["final_norm"] = layers.init_rmsnorm(cfg.d_model)
+    if "mamba_shared_attn" in cfg.period:
+        k1, k2 = jax.random.split(keys[3])
+        params["shared_attn"] = {
+            "attn": attention.init_attention(k1, cfg),
+            "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff)}
+    # Stacked per-slot blocks: leaves (num_periods, ...).
+    blocks = []
+    for slot, kind in enumerate(cfg.period):
+        gkeys = jax.random.split(jax.random.fold_in(keys[4], slot),
+                                 cfg.num_periods)
+        slot_params = [_init_slot(k, kind, cfg) for k in gkeys]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *slot_params))
+    params["blocks"] = tuple(blocks)
+    return params
+
+
+# --- Per-slot apply ----------------------------------------------------------
+
+def _apply_slot(p: dict, kind: str, x, *, cfg: ModelConfig, shared,
+                positions, mesh, data_axes, cache, cache_index):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window if kind == "attn_local" else None
+    if kind in ("attn", "attn_local"):
+        h, new_kv = attention.attention(
+            p["attn"], layers.rmsnorm(p["ln1"], x, cfg.rms_eps), cfg=cfg,
+            window=window, positions=positions,
+            cache=None if cache is None else cache["kv"],
+            cache_index=cache_index, mesh=mesh)
+        x = x + h
+        x = x + layers.mlp(p["mlp"], layers.rmsnorm(p["ln2"], x, cfg.rms_eps),
+                           jnp.dtype(cfg.compute_dtype))
+        return x, (None if cache is None else {"kv": new_kv}), aux
+    if kind == "mamba":
+        h, new_state = ssm.mamba_block(
+            p["mamba"], layers.rmsnorm(p["ln"], x, cfg.rms_eps), cfg=cfg,
+            state=None if cache is None else cache["ssm"])
+        x = x + h
+        return x, (None if cache is None else {"ssm": new_state}), aux
+    if kind == "mamba_shared_attn":
+        h, new_state = ssm.mamba_block(
+            p["mamba"], layers.rmsnorm(p["ln"], x, cfg.rms_eps), cfg=cfg,
+            state=None if cache is None else cache["ssm"])
+        x = x + h
+        # Shared attention block (zamba2): shared weights, per-slot norms,
+        # per-occurrence KV cache; windowed to stay sub-quadratic.
+        h, new_kv = attention.attention(
+            shared["attn"], layers.rmsnorm(p["ln_sa"], x, cfg.rms_eps),
+            cfg=cfg, window=cfg.sliding_window, positions=positions,
+            cache=None if cache is None else cache["kv"],
+            cache_index=cache_index, mesh=mesh)
+        x = x + h
+        x = x + layers.mlp(shared["mlp"],
+                           layers.rmsnorm(p["ln_sm"], x, cfg.rms_eps),
+                           jnp.dtype(cfg.compute_dtype))
+        new_cache = (None if cache is None
+                     else {"ssm": new_state, "kv": new_kv})
+        return x, new_cache, aux
+    if kind == "moe":
+        h, new_kv = attention.attention(
+            p["attn"], layers.rmsnorm(p["ln1"], x, cfg.rms_eps), cfg=cfg,
+            window=None, positions=positions,
+            cache=None if cache is None else cache["kv"],
+            cache_index=cache_index, mesh=mesh)
+        x = x + h
+        h, moe_aux = moe.moe_block(
+            p["moe"], layers.rmsnorm(p["ln2"], x, cfg.rms_eps), cfg=cfg,
+            mesh=mesh, data_axes=data_axes)
+        x = x + h
+        aux = aux + cfg.moe.router_aux_weight * moe_aux.load_balance_loss
+        return x, (None if cache is None else {"kv": new_kv}), aux
+    raise ValueError(kind)
+
+
+# --- Stack -------------------------------------------------------------------
+
+def _run_stack(params, x, *, cfg: ModelConfig, positions, mesh, data_axes,
+               caches, cache_index):
+    """x: (B, T, D) -> (x, new_caches, aux_total). caches: per-slot stacked
+    pytrees (leading num_periods axis) or None."""
+    shared = params.get("shared_attn")
+
+    resid_spec = _act_spec(x.shape, mesh, data_axes)
+    if (cfg.seq_parallel and mesh is not None and resid_spec is not None
+            and x.shape[1] % mesh.shape["model"] == 0
+            and list(resid_spec)[1] is None):
+        # Megatron-style sequence parallelism: between blocks the residual
+        # is SEQUENCE-sharded over `model`, so GSPMD lowers each TP
+        # boundary as reduce-scatter + all-gather instead of a full
+        # all-reduce (and the norms compute on 1/TP of the tokens).
+        resid_spec = P(list(resid_spec)[0], "model", None)
+
+    def group_body(carry, xs):
+        xg, aux_in = carry
+        block_slices, cache_slices = xs
+        if mesh is not None:
+            # Pin the per-group weight slices to their FSDP-sharded layout
+            # INSIDE the scan body: without this, GSPMD hoists the ZeRO-3
+            # all-gather of the whole stacked (num_periods, ...) tensor out
+            # of the loop (54 GB gathered / 96 GB temp on moonshot train_4k
+            # -- EXPERIMENTS.md §Perf). With it, each iteration gathers one
+            # layer group and the buffer is reused.
+            from repro.models import sharding as _shd
+            block_slices = jax.tree_util.tree_map_with_path(
+                lambda p, v: _constrain(
+                    v, mesh, _shd.param_spec(p, v, mesh)), block_slices)
+            # Cast matrices to compute dtype WHILE STILL SHARDED, so the
+            # FSDP all-gather moves bf16, not f32 -- halves the dominant
+            # weight-gather volume (426 GB -> ~213 GB on moonshot train_4k,
+            # §Perf). Layer fns' .astype(compute_dtype) becomes a no-op;
+            # vectors (norm scales, dt_bias, A_log) stay f32 for their
+            # f32-sensitive math.
+            cdt = jnp.dtype(cfg.compute_dtype)
+            block_slices = jax.tree.map(
+                lambda v: v.astype(cdt)
+                if (v.dtype == jnp.float32 and v.ndim >= 2) else v,
+                block_slices)
+        new_caches_out = []
+        aux = aux_in
+        for slot, kind in enumerate(cfg.period):
+            c = None if cache_slices is None else cache_slices[slot]
+            xg, new_c, a = _apply_slot(
+                block_slices[slot], kind, xg, cfg=cfg, shared=shared,
+                positions=positions, mesh=mesh, data_axes=data_axes,
+                cache=c, cache_index=cache_index)
+            xg = _constrain(xg, mesh, resid_spec)
+            new_caches_out.append(new_c)
+            aux = aux + a
+        ys = tuple(new_caches_out) if caches is not None else None
+        return (xg, aux), ys
+
+    # Remat only where there is a backward pass to save memory for: wrapping
+    # the DECODE body in jax.checkpoint is pure overhead and (observed)
+    # derails GSPMD on sequence-sharded caches into full f32 all-gathers of
+    # the KV cache (4 x 2.1 GB/step on gemma2 decode_32k, §Perf).
+    if cfg.remat != "none" and caches is None:
+        group_body = jax.checkpoint(group_body)
+
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(
+            group_body, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], caches))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        new_list = []
+        for g in range(cfg.num_periods):
+            blocks_g = jax.tree.map(lambda v: v[g], params["blocks"])
+            caches_g = (None if caches is None
+                        else jax.tree.map(lambda v: v[g], caches))
+            (x, aux), ys = group_body((x, aux), (blocks_g, caches_g))
+            new_list.append(ys)
+        new_caches = (None if caches is None
+                      else jax.tree.map(lambda *vs: jnp.stack(vs), *new_list))
+    return x, new_caches, aux
+
+
+# --- Public forward passes ---------------------------------------------------
+
+def embed_inputs(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Token/frontend embedding -> (B, T, D) activations."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend.kind == "audio":
+        return frontends.project(params["frontend"], batch["frames"], cfg)
+    x = layers.embed(params["embed"], batch["tokens"], cdt)
+    if cfg.frontend.kind == "vision":
+        patches = frontends.project(params["frontend"], batch["patches"],
+                                    cfg)
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+            mesh: Optional[Mesh] = None,
+            data_axes: Tuple[str, ...] = ("data",),
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits (B, T, V) f32, aux_loss scalar)."""
+    x = embed_inputs(params, batch, cfg)
+    x = _constrain(x, mesh, _act_spec(x.shape, mesh, data_axes))
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _run_stack(params, x, cfg=cfg, positions=positions,
+                           mesh=mesh, data_axes=data_axes, caches=None,
+                           cache_index=None)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    g_spec = _act_spec((x.shape[0], x.shape[1], cfg.vocab_size), mesh,
+                       data_axes, last="model")
+    lg = layers.logits(params.get("embed", {}), x, params.get("head"),
+                       cfg.final_logit_softcap,
+                       dw_sharding=_head_dw_sharding(params, mesh),
+                       g_sharding=(None if mesh is None or g_spec is None
+                                   else NamedSharding(mesh, g_spec)))
+    # Vocab stays model-sharded: the CE loss consumes sharded logits via
+    # one-hot reductions (train_step.cross_entropy) without a gather.
+    lg = _constrain(lg, mesh, _act_spec(lg.shape, mesh, data_axes,
+                                        last="model"))
+    return lg, aux
+
+
+def _head_dw_sharding(params, mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+    from repro.models import sharding as _shd
+    w = (params.get("head") or {}).get("w")
+    if w is None:
+        w = params["embed"]["tok"]
+    return NamedSharding(mesh, _shd._fit(P("model", "data"), w.shape, mesh))
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16, abstract: bool = False):
+    """Stacked per-slot caches: tuple over slots, leaves (num_periods, ...)."""
+    kv_fn = attention.cache_spec if abstract else attention.init_cache
+    ssm_fn = ssm.ssm_state_spec if abstract else ssm.init_ssm_state
+
+    def stack(tree):
+        if abstract:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((cfg.num_periods,) + s.shape,
+                                               s.dtype), tree)
+        return jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (cfg.num_periods,) + v.shape),
+            tree)
+
+    out = []
+    for kind in cfg.period:
+        if kind in ("attn", "attn_local"):
+            c = {"kv": kv_fn(cfg, batch, max_seq, dtype)}
+        elif kind == "mamba":
+            c = {"ssm": ssm_fn(cfg, batch, dtype)}
+        elif kind == "mamba_shared_attn":
+            c = {"ssm": ssm_fn(cfg, batch, dtype),
+                 "kv": kv_fn(cfg, batch, max_seq, dtype)}
+        elif kind == "moe":
+            c = {"kv": kv_fn(cfg, batch, max_seq, dtype)}
+        else:
+            raise ValueError(kind)
+        out.append(stack(c))
+    return tuple(out)
+
+
+def decode_step(params, tokens: jax.Array, caches, cache_index: jax.Array,
+                cfg: ModelConfig, *, mesh: Optional[Mesh] = None,
+                data_axes: Tuple[str, ...] = ("data",),
+                ) -> Tuple[jax.Array, Any]:
+    """One-token decode. tokens: (B, 1) -> (logits (B, 1, V), new_caches)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = layers.embed(params["embed"], tokens, cdt)
+    positions = cache_index + jnp.arange(1)
+    x, new_caches, _ = _run_stack(params, x, cfg=cfg, positions=positions,
+                                  mesh=mesh, data_axes=data_axes,
+                                  caches=caches, cache_index=cache_index)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    lg = layers.logits(params.get("embed", {}), x, params.get("head"),
+                       cfg.final_logit_softcap)
+    return lg, new_caches
+
+
+def prefill(params, batch, caches, cfg: ModelConfig, *,
+            mesh: Optional[Mesh] = None,
+            data_axes: Tuple[str, ...] = ("data",)):
+    """Prompt pass that also fills the caches (cache_index=0)."""
+    x = embed_inputs(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    x, new_caches, _ = _run_stack(params, x, cfg=cfg, positions=positions,
+                                  mesh=mesh, data_axes=data_axes,
+                                  caches=caches, cache_index=jnp.int32(0))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    lg = layers.logits(params.get("embed", {}), x[:, -1:], params.get("head"),
+                       cfg.final_logit_softcap)
+    return lg, new_caches

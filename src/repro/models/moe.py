@@ -1,0 +1,240 @@
+"""Mixture-of-Experts with DAKC-style dispatch (DESIGN.md Sec. 3.1).
+
+Token -> expert routing IS the paper's owner-PE routing problem: each
+(token, choice) pair has an owner (the expert), owners live on shards
+(expert parallelism over the `model` axis), and the exchange is a
+fixed-capacity, destination-major packed-tile all_to_all -- the exact L2
+machinery of core/aggregation.py with `owner = router top-k` instead of
+`owner = hash(kmer)`. Capacity planning, overflow accounting, and slack
+semantics are shared with the k-mer counter.
+
+Two dispatch engines:
+- 'dakc'  : explicit shard_map packed tiles (above). The production path.
+- 'gshard': classic one-hot-einsum dispatch under plain pjit/GSPMD.
+  Used as the correctness cross-check (tests assert both produce identical
+  outputs) and as the fallback when no mesh is available (CPU smoke tests).
+
+Shared experts (deepseek/moonlight) are fused into one always-on MLP of
+width num_shared * expert_d_ff.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array   # scalar
+    dropped_frac: jax.Array        # fraction of (token, k) pairs dropped
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    e, f = m.num_experts, m.expert_d_ff
+    return {
+        "router": layers.truncated_normal(ks[0], (d, e), d ** -0.5),
+        # Stacked expert weights: (E, d, f) / (E, f, d); sharded over 'model'.
+        "wi": layers.truncated_normal(ks[1], (e, d, f), d ** -0.5),
+        "wg": layers.truncated_normal(ks[2], (e, d, f), d ** -0.5),
+        "wo": layers.truncated_normal(ks[3], (e, f, d), f ** -0.5),
+        "shared": layers.init_mlp(ks[4], d, m.num_shared_experts * f),
+    }
+
+
+def _router(params, x, cfg: ModelConfig):
+    """x: (N, D) -> (expert_ids (N, K) int32, weights (N, K) f32, aux)."""
+    m = cfg.moe
+    logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # GShard load-balance aux: E * sum_e mean_prob_e * frac_routed_e
+    frac = jnp.mean(
+        jax.nn.one_hot(ids, m.num_experts, dtype=jnp.float32), axis=(0, 1))
+    aux = m.num_experts * jnp.sum(jnp.mean(probs, axis=0) * frac)
+    return ids.astype(jnp.int32), weights, aux
+
+
+def _expert_ffn(wi, wg, wo, x, cdt):
+    """Batched per-expert gated MLP. x: (E, C, D) -> (E, C, D)."""
+    h = jnp.einsum("ecd,edf->ecf", x, wi.astype(cdt))
+    g = jnp.einsum("ecd,edf->ecf", x, wg.astype(cdt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cdt) * h
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(cdt))
+
+
+# --- GShard one-hot dispatch (pjit/GSPMD path + correctness oracle) ---------
+
+def _gshard_dispatch(params, x2d, ids, weights, cfg: ModelConfig,
+                     capacity: int):
+    m = cfg.moe
+    cdt = jnp.dtype(cfg.compute_dtype)
+    n, d = x2d.shape
+    nk = n * m.top_k
+    flat_ids = ids.reshape(nk)
+    flat_w = weights.reshape(nk)
+    onehot = jax.nn.one_hot(flat_ids, m.num_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot           # rank within expert
+    mypos = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]
+    keep = mypos < capacity
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    disp = (jax.nn.one_hot(flat_ids, m.num_experts, dtype=cdt)[:, :, None]
+            * jax.nn.one_hot(jnp.where(keep, mypos, capacity), capacity,
+                             dtype=cdt)[:, None, :]
+            * keep.astype(cdt)[:, None, None])          # (NK, E, C)
+    xk = jnp.repeat(x2d, m.top_k, axis=0)               # (NK, D)
+    expert_in = jnp.einsum("nec,nd->ecd", disp, xk)
+    expert_out = _expert_ffn(params["wi"], params["wg"], params["wo"],
+                             expert_in, cdt)
+    combined = jnp.einsum("nec,ecd->nd", disp, expert_out)
+    out = (combined * flat_w.astype(cdt)[:, None]).reshape(n, m.top_k, d)
+    return jnp.sum(out, axis=1), dropped
+
+
+# --- DAKC packed-tile dispatch (shard_map over the EP axis) ------------------
+
+def _dakc_local(x_local, wi, wg, wo, router_w, *, cfg: ModelConfig,
+                ep_size: int, capacity: int, axis_name: str,
+                pmean_axes: Tuple[str, ...],
+                fsdp_axis: Optional[str] = None):
+    """Per-device body. x_local: (n_loc, D); wi/wg/wo: (E_local, ...)."""
+    m = cfg.moe
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if fsdp_axis is not None:
+        # Expert weights arrive D-sharded over the FSDP axis; cast to the
+        # compute dtype FIRST (half the gather bytes), then all-gather
+        # explicitly. The transpose of lax.all_gather is psum_scatter, so
+        # the expert-grad reduction lowers as a bf16 reduce-scatter instead
+        # of the f32 all-reduce GSPMD otherwise emits at the shard_map
+        # boundary (53 GB -> ~1.7 GB/step on moonshot train_4k, §Perf).
+        wi = jax.lax.all_gather(wi.astype(cdt), fsdp_axis, axis=1,
+                                tiled=True)
+        wg = jax.lax.all_gather(wg.astype(cdt), fsdp_axis, axis=1,
+                                tiled=True)
+        wo = jax.lax.all_gather(wo.astype(cdt), fsdp_axis, axis=1,
+                                tiled=True)  # (E, F, D): F is the FSDP dim
+    n_loc, d = x_local.shape
+    e = m.num_experts
+    e_local = e // ep_size
+    ids, weights, aux = _router({"router": router_w}, x_local, cfg)
+    nk = n_loc * m.top_k
+    flat_ids = ids.reshape(nk)                          # owner = expert id
+    xk = jnp.repeat(x_local, m.top_k, axis=0)           # payload vectors
+
+    # L2 bucketing: destination-major (E, cap) placement for vector payloads
+    # (same plan as core.aggregation.bucket_by_owner, float payload lane).
+    order = jnp.argsort(flat_ids, stable=True)
+    s_ids = flat_ids[order]
+    hist = jnp.bincount(flat_ids, length=e)
+    offsets = jnp.concatenate([jnp.zeros((1,), hist.dtype),
+                               jnp.cumsum(hist)[:-1]])
+    within = jnp.arange(nk) - offsets[s_ids]
+    ok = within < capacity
+    dropped = 1.0 - jnp.mean(ok.astype(jnp.float32))
+    rows = jnp.where(ok, s_ids, e)
+    cols = jnp.where(ok, within, 0)
+    tile = jnp.zeros((e, capacity, d), cdt)
+    tile = tile.at[rows, cols].set(xk[order].astype(cdt), mode="drop")
+
+    # Exchange: (E, cap, D) -> (ep, E_local*cap, D) -> all_to_all -> my
+    # experts' tokens from every source shard.
+    tile = tile.reshape(ep_size, e_local * capacity, d)
+    recv = jax.lax.all_to_all(tile, axis_name, 0, 0, tiled=True)
+    recv = recv.reshape(ep_size, e_local, capacity, d)
+    grouped = jnp.moveaxis(recv, 0, 1).reshape(e_local,
+                                               ep_size * capacity, d)
+    y = _expert_ffn(wi, wg, wo, grouped, cdt)
+    # Return trip: the inverse all_to_all restores the send-side layout.
+    y = jnp.moveaxis(y.reshape(e_local, ep_size, capacity, d), 0, 1)
+    back = jax.lax.all_to_all(y.reshape(ep_size, e_local * capacity, d),
+                              axis_name, 0, 0, tiled=True)
+    back = back.reshape(e, capacity, d)
+    # Gather each pair's result from its slot; dropped pairs contribute 0.
+    gathered = back[rows, cols]                         # (NK, D) sorted order
+    gathered = jnp.where(ok[:, None], gathered, 0)
+    unsort = jnp.zeros_like(gathered)
+    unsort = unsort.at[order].set(gathered)
+    out = (unsort.reshape(n_loc, m.top_k, d)
+           * weights.astype(cdt)[..., None]).sum(axis=1)
+    aux = jax.lax.pmean(aux, pmean_axes)
+    dropped = jax.lax.pmean(dropped, pmean_axes)
+    return out, aux, dropped
+
+
+def moe_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
+              mesh: Optional[Mesh] = None,
+              ep_axis: str = "model",
+              data_axes: Tuple[str, ...] = ("data",),
+              ) -> Tuple[jax.Array, MoEAux]:
+    """x: (B, S, D) -> (y, aux). Routed experts + fused shared experts.
+
+    With a mesh, dispatch runs the DAKC packed-tile engine over `ep_axis`;
+    without one (smoke tests) the GShard path computes the same function.
+    """
+    m = cfg.moe
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s_len, d = x.shape
+    x2d = x.reshape(b * s_len, d)
+    total_shards = (1 if mesh is None else
+                    mesh.shape[ep_axis] * _prod(mesh.shape[a]
+                                                for a in data_axes))
+    # DAKC tiles need >= 1 token per shard; tiny decode batches fall back to
+    # the dense dispatch (identical function, no exchange).
+    use_dakc = (mesh is not None and m.dispatch == "dakc"
+                and (b * s_len) % total_shards == 0
+                and (b * s_len) >= total_shards)
+
+    if use_dakc:
+        ep_size = mesh.shape[ep_axis]
+        n_total = b * s_len
+        n_loc = n_total // mesh.shape[ep_axis] // _prod(
+            mesh.shape[a] for a in data_axes)
+        capacity = _capacity(n_loc * m.top_k, m.num_experts,
+                             m.capacity_factor)
+        in_spec = P((*data_axes, ep_axis))
+        fsdp = "data" if ("data" in mesh.shape
+                          and d % mesh.shape["data"] == 0
+                          and m.expert_d_ff % mesh.shape["data"] == 0)             else None
+        w_spec = P(ep_axis, fsdp) if fsdp else P(ep_axis)
+        body = functools.partial(_dakc_local, cfg=cfg, ep_size=ep_size,
+                                 capacity=capacity, axis_name=ep_axis,
+                                 pmean_axes=(*data_axes, ep_axis),
+                                 fsdp_axis=fsdp)
+        y2d, aux, dropped = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(in_spec, w_spec, w_spec, w_spec, P()),
+            out_specs=(in_spec, P(), P()), check_vma=False,
+        )(x2d, params["wi"], params["wg"], params["wo"], params["router"])
+    else:
+        ids, weights, aux = _router(params, x2d, cfg)
+        capacity = _capacity(x2d.shape[0] * m.top_k, m.num_experts,
+                             m.capacity_factor)
+        y2d, dropped = _gshard_dispatch(params, x2d, ids, weights, cfg,
+                                        capacity)
+
+    shared = layers.mlp(params["shared"], x2d.astype(cdt), cdt)
+    y = (y2d + shared).reshape(b, s_len, d)
+    return y, MoEAux(load_balance_loss=aux, dropped_frac=dropped)
+
+
+def _capacity(nk: int, e: int, factor: float, align: int = 8) -> int:
+    cap = int(nk / e * factor) + 1
+    return max(align, ((cap + align - 1) // align) * align)
+
+
+def _prod(it):
+    out = 1
+    for v in it:
+        out *= v
+    return out

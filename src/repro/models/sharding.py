@@ -1,0 +1,165 @@
+"""Parameter and activation PartitionSpecs for the production mesh.
+
+Scheme (DESIGN.md Sec. 5): TP over `model` (heads / MLP hidden / experts /
+vocab), FSDP (ZeRO-3 via GSPMD) over `data` on a non-TP axis of every large
+matrix, pure DP over `pod` (cross-pod FSDP all-gathers would ride DCN).
+Optimizer state inherits param specs.
+
+Rules are path-pattern based, then made DIVISIBILITY-AWARE against the
+concrete mesh: any sharded dim whose size does not divide by its axis size
+falls back to replication on that dim (e.g. gemma2's 8 KV heads vs a 16-way
+model axis -> KV projections replicate over `model`, the Megatron GQA
+convention; mamba2's vocab 50280 % 16 != 0 -> vocab replicates and the
+embedding FSDPs over d_model instead).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import KVCache
+from repro.models.ssm import SSMState
+
+# (path regex, spec WITHOUT the stacked-layer axis).
+_RULES: Tuple[Tuple[str, P], ...] = (
+    (r"embed/tok$",        P("model", "data")),     # vocab-sharded embedding
+    (r"head/w$",           P("model", "data")),
+    (r"attn/wq$",          P("data", "model", None)),
+    (r"attn/wk$",          P("data", "model", None)),
+    (r"attn/wv$",          P("data", "model", None)),
+    (r"attn/wo$",          P("model", None, "data")),
+    (r"attn/b[qkv]$",      P("model", None)),
+    (r"mlp/w[ig]$",        P("data", "model")),
+    (r"mlp/wo$",           P("model", "data")),
+    (r"moe/router$",       P("data", None)),
+    (r"moe/w[ig]$",        P("model", "data", None)),  # experts over model
+    (r"moe/wo$",           P("model", "data", None)),
+    (r"moe/shared/w[ig]$", P("data", "model")),
+    (r"moe/shared/wo$",    P("model", "data")),
+    (r"mamba/in_proj$",    P("data", "model")),
+    (r"mamba/out_proj$",   P("model", "data")),
+    (r"mamba/conv_w$",     P(None, "model")),
+    (r"mamba/conv_b$",     P("model")),
+    (r"mamba/(a_log|dt_bias|d_skip)$", P("model")),
+    (r"frontend/proj$",    P(None, "model")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def _fit(spec: P, shape, mesh: Optional[Mesh]) -> P:
+    """Trim/pad the spec to the leaf rank and drop indivisible shardings."""
+    entries = list(spec)[:len(shape)]
+    entries += [None] * (len(shape) - len(entries))
+    if mesh is not None:
+        fixed = []
+        for i, e in enumerate(entries):
+            if e is None:
+                fixed.append(None)
+                continue
+            names = e if isinstance(e, (tuple, list)) else (e,)
+            if any(n not in mesh.shape for n in names):
+                fixed.append(None)
+                continue
+            fixed.append(e if shape[i] % _axis_size(mesh, e) == 0 else None)
+        entries = fixed
+    return P(*entries)
+
+
+def param_spec(path, leaf, mesh: Optional[Mesh]) -> P:
+    s = _path_str(path)
+    for pat, spec in _RULES:
+        if re.search(pat, s):
+            if s.startswith("blocks/"):
+                spec = P(None, *spec)   # stacked num_periods axis
+            return _fit(spec, leaf.shape, mesh)
+    return P()  # norms, scalars: replicated
+
+
+def param_specs(params, mesh: Optional[Mesh] = None) -> dict:
+    """Pytree of PartitionSpecs matching `params` (abstract or concrete)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, v: param_spec(p, v, mesh), params)
+
+
+def param_shardings(params, mesh: Mesh) -> dict:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def batch_specs(cfg: ModelConfig, *, batch_axes: Tuple[str, ...],
+                seq_axis: Optional[str] = None) -> dict:
+    """Input batch specs. `seq_axis` activates sequence sharding (long_500k:
+    batch=1 cannot occupy the data axis, so the sequence does)."""
+    b_ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    out = {"tokens": P(b_ax, seq_axis)}
+    if cfg.frontend.kind == "vision":
+        out["patches"] = P(b_ax, None, None)
+    if cfg.frontend.kind == "audio":
+        out = {"frames": P(b_ax, seq_axis, None)}
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, *,
+                batch_axes: Tuple[str, ...],
+                seq_axis: Optional[str] = None):
+    """Stacked cache specs (mirrors model.init_caches structure).
+
+    KV layout: (periods, B, Hkv, S, hd). Heads shard over `model` when
+    divisible; otherwise the cache SEQUENCE dim takes `model` (distributed
+    flash-decode regime). With `seq_axis` (long_500k) the sequence is
+    additionally sharded over the data axis.
+    """
+    b_ax = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) \
+        if seq_axis is None else None
+    heads_div = cfg.num_kv_heads % mesh.shape["model"] == 0
+    head_ax = "model" if heads_div else None
+    kv_seq_ax = seq_axis if heads_div else (
+        (seq_axis, "model") if seq_axis is not None else "model")
+    kv = KVCache(k=P(None, b_ax, head_ax, kv_seq_ax, None),
+                 v=P(None, b_ax, head_ax, kv_seq_ax, None))
+    ssm_heads_div = True  # ssm head counts are multiples of 16 in our archs
+    sstate = SSMState(
+        conv=P(None, b_ax, "model", None),
+        ssm=P(None, b_ax, "model" if ssm_heads_div else None, None, None))
+    out = []
+    for kind in cfg.period:
+        if kind in ("attn", "attn_local", "moe"):
+            out.append({"kv": kv})
+        elif kind == "mamba":
+            out.append({"ssm": sstate})
+        elif kind == "mamba_shared_attn":
+            out.append({"ssm": sstate, "kv": kv})
+    return tuple(out)
+
+
+def logits_spec(batch_axes: Tuple[str, ...],
+                seq_axis: Optional[str] = None) -> P:
+    b_ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    if seq_axis is not None:
+        return P(None, seq_axis, "model")
+    return P(b_ax, None, "model")

@@ -1,0 +1,237 @@
+"""Mamba2 (SSD: state-space duality) block -- arXiv:2405.21060.
+
+Chunked SSD: the sequence is split into chunks of length Q; within a chunk
+the output is an attention-like masked matmul (MXU-friendly), across chunks
+a tiny (H, P, N) state is carried by a `lax.scan` -- this is the
+chunk-parallel formulation that makes SSMs trainable at long context and,
+for this repo, what makes `long_500k` a *linear*-cost cell.
+
+Decode is the dual recurrent view: one (B, H, P, N) state update per token,
+plus a depthwise-conv ring buffer -- no KV cache, O(1) per step.
+
+Layout notes (TPU): x is (B, L, H, P) with P=headdim=64..128 -> the SSD
+matmuls are (Q x P) @ (P x N) MXU tiles; chunk length Q=256 keeps the
+(Q, Q) decay mask within a VREG-friendly tile.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, conv_dim, W-1) rolling conv inputs
+    ssm: jax.Array     # (B, H, P, N) recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.headdim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, n_heads, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * d_in + 2 * s.n_groups * s.d_state + n_heads  # z,xBC,dt
+    dt = jnp.exp(jax.random.uniform(ks[2], (n_heads,)) *
+                 (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    return {
+        "in_proj": layers.truncated_normal(ks[0], (d, in_dim), d ** -0.5),
+        "conv_w": layers.truncated_normal(ks[1], (s.conv_width, conv_dim),
+                                          s.conv_width ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),      # inv softplus
+        "a_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": layers.init_rmsnorm(d_in),
+        "out_proj": layers.truncated_normal(ks[3], (d_in, d), d_in ** -0.5),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(…, q) -> (…, q, q) lower-triangular segment sums:
+    out[i, j] = sum(a[j+1 : i+1]) for i >= j, -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B, L, C); w: (W, C). Returns
+    (y, new_conv_state (B, C, W-1))."""
+    width = w.shape[0]
+    xt = jnp.swapaxes(x, 1, 2)                         # (B, C, L)
+    if state is None:
+        pad = jnp.zeros(xt.shape[:2] + (width - 1,), xt.dtype)
+    else:
+        pad = state.astype(xt.dtype)
+    xp = jnp.concatenate([pad, xt], axis=-1)           # (B, C, L+W-1)
+    y = sum(xp[:, :, i:i + x.shape[1]] * w[i][None, :, None].astype(xt.dtype)
+            for i in range(width))
+    y = y + b[None, :, None].astype(xt.dtype)
+    new_state = xp[:, :, -(width - 1):]
+    return jnp.swapaxes(y, 1, 2), new_state
+
+
+def ssd_chunked(x: jax.Array, a_dt: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x: (B, L, H, P); a_dt: (B, L, H) (= dt * A, negative);
+    b, c: (B, L, G, N) broadcast over heads in group. Returns (y, final
+    (B, H, P, N) state)."""
+    bsz, L, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    reps = h // g
+    nc = L // chunk
+    assert nc * chunk == L, (L, chunk)
+    xb = x.reshape(bsz, nc, chunk, h, p)
+    ab = a_dt.reshape(bsz, nc, chunk, h)
+    bb = jnp.repeat(b.reshape(bsz, nc, chunk, g, n), reps, axis=3)
+    cb = jnp.repeat(c.reshape(bsz, nc, chunk, g, n), reps, axis=3)
+
+    a_cum = jnp.cumsum(ab, axis=2)                     # (B, nc, Q, H) f32
+    # Intra-chunk (the 'attention-like' quadratic-within-chunk term).
+    lmat = jnp.exp(_segsum(jnp.swapaxes(ab, 2, 3)))    # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", cb, bb)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp",
+                        scores.astype(jnp.float32) * lmat, xb)
+    # Per-chunk end states (f32: the recurrent state is precision-critical).
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B, nc, Q, H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", bb, decay_states, xb)
+    states = states.astype(jnp.float32)
+    # Inter-chunk recurrence (tiny state; sequential over chunks only).
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])          # (B, nc, H) f32
+
+    def scan_fn(s, inp):
+        st_c, dec_c = inp                              # (B,H,P,N), (B,H)
+        prev = s
+        s = s * dec_c[..., None, None] + st_c
+        return s, prev
+
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # (B, nc, H, P, N)
+    # Contribution of earlier chunks, decayed to each position.
+    state_decay = jnp.exp(a_cum)                       # (B, nc, Q, H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cb.astype(jnp.float32),
+                       prev_states, state_decay)
+    y = (y_diag + y_off).astype(x.dtype).reshape(bsz, L, h, p)
+    return y, final
+
+
+def mamba_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
+                state: Optional[SSMState] = None
+                ) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full Mamba2 block. x: (B, L, D). With `state`, L must be 1 (decode)
+    and the recurrent view is used."""
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    bsz, L, _ = x.shape
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(cdt))
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                      # (H,) negative
+
+    if L > 1:  # prefill / training; `state` (if any) seeds the recurrence
+        xbc, conv_state = _causal_conv(xbc, params["conv_w"],
+                                       params["conv_b"],
+                                       None if state is None else state.conv)
+        xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(cdt)
+        xs, b, c = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state],
+                             axis=-1)
+        xs = xs.reshape(bsz, L, n_heads, s.headdim)
+        b = b.reshape(bsz, L, s.n_groups, s.d_state)
+        c = c.reshape(bsz, L, s.n_groups, s.d_state)
+        # Pad L to a chunk multiple; padded steps carry dt=0 => decay 1 and
+        # zero state injection, so y[:, :L] and the final state are exact.
+        chunk = min(cfg.ssm.chunk, L)
+        pad = (-L) % chunk
+        if pad:
+            zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) +
+                                     ((0, 0),) * (t.ndim - 2))
+            xs, b, c, dt = zpad(xs), zpad(b), zpad(c), zpad(dt)
+        a_dt = (dt * a[None, None, :]).astype(jnp.float32)
+        y, final = ssd_chunked(
+            (xs * dt.astype(cdt)[..., None]),
+            a_dt, b, c, chunk,
+            initial_state=None if state is None else state.ssm)
+        if pad:
+            y, xs = y[:, :L], xs[:, :L]
+        y = y + xs * params["d_skip"].astype(cdt)[None, None, :, None]
+        y = y.reshape(bsz, L, d_in)
+        y = layers.gated_rmsnorm(params["norm"], y, z, cfg.rms_eps)
+        out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(cdt))
+        new_state = SSMState(conv=conv_state.astype(cdt),
+                             ssm=final.astype(cdt))
+        return out, new_state
+
+    # Recurrent single-step (decode).
+    assert L == 1
+    if state is None:
+        state = init_ssm_state(cfg, bsz, cdt)
+    width = s.conv_width
+    xbc_t = xbc[:, 0]                                  # (B, conv_dim)
+    conv_in = jnp.concatenate([state.conv.astype(cdt),
+                               xbc_t[:, :, None]], axis=-1)  # (B,C,W)
+    conv_out = jnp.einsum("bcw,wc->bc", conv_in,
+                          params["conv_w"].astype(cdt)) \
+        + params["conv_b"].astype(cdt)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(cdt)
+    xs, b, c = jnp.split(conv_out, [d_in, d_in + s.n_groups * s.d_state],
+                         axis=-1)
+    xs = xs.reshape(bsz, n_heads, s.headdim)
+    b = b.reshape(bsz, s.n_groups, s.d_state)
+    c = c.reshape(bsz, s.n_groups, s.d_state)
+    reps = n_heads // s.n_groups
+    bh = jnp.repeat(b, reps, axis=1)                   # (B, H, N)
+    ch = jnp.repeat(c, reps, axis=1)
+    dt0 = dt[:, 0]                                     # (B, H) f32
+    da = jnp.exp(dt0 * a[None, :])                     # (B, H) f32
+    # State recurrence in f32: the chunked prefill path carries its state in
+    # f32, and bf16 state updates drift visibly within a few dozen steps.
+    upd = jnp.einsum("bhp,bhn->bhpn",
+                     xs.astype(jnp.float32) * dt0[..., None],
+                     bh.astype(jnp.float32))
+    new_ssm = state.ssm.astype(jnp.float32) * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm,
+                   ch.astype(jnp.float32)).astype(cdt)
+    y = y + xs * params["d_skip"].astype(cdt)[None, :, None]
+    y = y.reshape(bsz, 1, d_in)
+    y = layers.gated_rmsnorm(params["norm"], y, z, cfg.rms_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(cdt))
+    return out, SSMState(conv=conv_in[:, :, 1:],
+                         ssm=new_ssm.astype(state.ssm.dtype))
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                   ) -> SSMState:
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, conv_dim, s.conv_width - 1), dtype),
+        ssm=jnp.zeros((batch, n_heads, s.headdim, s.d_state), dtype))
+
+
+def ssm_state_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                   ) -> SSMState:
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    return SSMState(
+        conv=jax.ShapeDtypeStruct((batch, conv_dim, s.conv_width - 1), dtype),
+        ssm=jax.ShapeDtypeStruct((batch, n_heads, s.headdim, s.d_state),
+                                 dtype))

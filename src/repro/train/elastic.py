@@ -1,0 +1,96 @@
+"""Elastic scaling and straggler mitigation.
+
+- `remesh`: after a node failure, rebuild the mesh from the surviving device
+  set. The `model` extent is preserved (TP degree is baked into layer math
+  and kernel tiling); the `data` (and `pod`) extents shrink to what the
+  surviving device count supports. Restore then reshards the last checkpoint
+  onto the new mesh (checkpoint.restore handles arbitrary reshard) and the
+  data pipeline resumes from its manifest cursor with the reduced global
+  batch (gradient-accumulation steps scale up to keep the effective batch).
+
+- `StragglerWatchdog`: EWMA step-time monitor. A step slower than
+  mean + k*sigma is flagged; sustained flags trigger the caller's policy
+  (log, checkpoint-now, or exclude-host on next remesh). On single-
+  controller JAX a slow *host* shows up as a slow step, so this watchdog is
+  the detection layer for both compute and input stalls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def remesh(devices: Sequence, model_parallel: int,
+           pods: Optional[int] = None) -> Mesh:
+    """Build the largest legal (pod?, data, model) mesh from `devices`.
+
+    Keeps `model` fixed, maximizes `data`, drops stragglers that no longer
+    fill a data row (a data row = `model_parallel` devices).
+    """
+    devs = list(devices)
+    rows = len(devs) // model_parallel
+    if rows == 0:
+        raise ValueError(
+            f"{len(devs)} devices cannot host model_parallel="
+            f"{model_parallel}")
+    devs = devs[:rows * model_parallel]
+    if pods is not None and rows % pods == 0 and pods > 1:
+        arr = np.array(devs).reshape(pods, rows // pods, model_parallel)
+        return Mesh(arr, ("pod", "data", "model"))
+    arr = np.array(devs).reshape(rows, model_parallel)
+    return Mesh(arr, ("data", "model"))
+
+
+def scale_microbatches(old_data_rows: int, new_data_rows: int,
+                       old_num_microbatches: int) -> int:
+    """Keep the effective global batch constant across a shrink: fewer data
+    rows -> proportionally more grad-accumulation microbatches."""
+    scale = old_data_rows / new_data_rows
+    return max(1, math.ceil(old_num_microbatches * scale))
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    k_sigma: float = 3.0
+    ewma_alpha: float = 0.05
+    warmup_steps: int = 5
+    trip_after: int = 3           # consecutive flags before tripping
+
+    _mean: float = 0.0
+    _var: float = 0.0
+    _n: int = 0
+    _consecutive: int = 0
+    _last_start: Optional[float] = None
+    events: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+
+    def step_start(self) -> None:
+        self._last_start = time.perf_counter()
+
+    def step_end(self, step: int) -> bool:
+        """Returns True if the watchdog TRIPS (sustained straggling)."""
+        assert self._last_start is not None
+        dt = time.perf_counter() - self._last_start
+        self._n += 1
+        if self._n <= self.warmup_steps:
+            self._mean = dt if self._n == 1 else (
+                self._mean + (dt - self._mean) / self._n)
+            self._var = max(self._var, (dt - self._mean) ** 2)
+            return False
+        sigma = math.sqrt(self._var) if self._var > 0 else self._mean * 0.1
+        slow = dt > self._mean + self.k_sigma * sigma
+        if slow:
+            self._consecutive += 1
+            self.events.append((step, dt))
+        else:
+            self._consecutive = 0
+            a = self.ewma_alpha
+            self._mean = (1 - a) * self._mean + a * dt
+            self._var = (1 - a) * self._var + a * (dt - self._mean) ** 2
+        return self._consecutive >= self.trip_after

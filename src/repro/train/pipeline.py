@@ -1,0 +1,96 @@
+"""GPipe-style pipeline parallelism over a `stage` mesh axis.
+
+Optional feature (DESIGN.md Sec. 5): the assigned production mesh is fully
+consumed by DP x TP, but deployments beyond one pod often trade the DCN
+`pod` axis for pipeline stages. This module provides the schedule as a
+composable primitive:
+
+- Each device along `stage` holds ONLY its stage's weights (leading stacked
+  axis sharded P('stage')) -- pipeline model parallelism.
+- `shard_map` + `lax.ppermute` implement the classic GPipe rotation: at
+  tick t, stage s processes microbatch (t - s) and forwards its activation
+  to stage s+1. S + M - 1 ticks stream M microbatches; bubble fraction is
+  (S-1)/(S+M-1).
+- Forward pass (serving / activation pipelines). Training composes through
+  `jax.grad` of the shard_map (ppermute transposes to the reverse
+  permutation), with GPipe's usual stash-per-tick activation memory.
+
+body_fn contract: body_fn(stage_params, x_mb) -> y_mb, applied by every
+stage to its parameter slice.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(body_fn: Callable, params, x: jax.Array, *,
+                     mesh: Mesh, stage_axis: str = "stage",
+                     num_microbatches: int) -> jax.Array:
+    """y = stage_{S-1}( ... stage_0(x)) via the GPipe rotation.
+
+    params: pytree, leaves with leading axis num_stages (sharded over
+    `stage_axis`). x: (M*mb, ...) input; returns same shape. The input is
+    replicated into the region (feature-scale: tests/serving pipelines);
+    outputs are collected on the last stage and broadcast out via a masked
+    psum.
+    """
+    num_stages = mesh.shape[stage_axis]
+    m = num_microbatches
+    if x.shape[0] % m != 0:
+        raise ValueError(f"batch {x.shape[0]} % microbatches {m} != 0")
+    mb = x.shape[0] // m
+    x_mbs = x.reshape(m, mb, *x.shape[1:])
+    perm = [(i, (i + 1) % num_stages) for i in range(num_stages)]
+
+    def local_fn(stage_params, x_all):
+        sp = jax.tree.map(lambda v: v[0], stage_params)
+        stage = jax.lax.axis_index(stage_axis)
+
+        def tick(carry, t):
+            buf, outbuf = carry
+            mb_idx = t - stage                 # microbatch at this stage now
+            active = (mb_idx >= 0) & (mb_idx < m)
+            # stage 0 injects fresh microbatch t; others consume the wire
+            inp = jnp.where(stage == 0, x_all[jnp.clip(t, 0, m - 1)], buf)
+            y = body_fn(sp, inp)
+            y = jnp.where(active, y, buf)
+            # last stage records its finished microbatch
+            outbuf = jnp.where(
+                (stage == num_stages - 1) & active,
+                outbuf.at[jnp.clip(mb_idx, 0, m - 1)].set(y), outbuf)
+            # rotate activations downstream
+            buf = jax.lax.ppermute(y, stage_axis, perm)
+            return (buf, outbuf), None
+
+        init = (jnp.zeros_like(x_all[0]), jnp.zeros_like(x_all))
+        (final_buf, outbuf), _ = jax.lax.scan(
+            tick, init, jnp.arange(num_stages + m - 1))
+        # broadcast the last stage's outputs to every device
+        mask = (stage == num_stages - 1).astype(outbuf.dtype)
+        return jax.lax.psum(outbuf * mask, stage_axis)
+
+    pspec = jax.tree.map(lambda _: P(stage_axis), params)
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(pspec, P()), out_specs=P(),
+                       check_vma=False)
+    out = fn(params, x_mbs)
+    return out.reshape(x.shape)
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    """GPipe idle fraction: (S-1)/(S+M-1)."""
+    return (num_stages - 1) / (num_stages + num_microbatches - 1)
+
+
+def sequential_oracle(body_fn: Callable, params, x: jax.Array) -> jax.Array:
+    """Single-device composition y = stage_{S-1}(...stage_0(x)) (tests)."""
+    num_stages = jax.tree.leaves(params)[0].shape[0]
+    for s in range(num_stages):
+        sp = jax.tree.map(lambda v: v[s], params)
+        x = body_fn(sp, x)
+    return x

@@ -1,0 +1,85 @@
+"""Serving: prefill + decode steps, batched requests, distributed decode.
+
+`decode_32k` / `long_500k` cells lower `serve_step` -- one new token against
+a seq_len KV cache -- NOT train_step. For long_500k (batch=1) the KV cache is
+sequence-sharded; attention over a sharded cache is a partial-softmax
+combine, which GSPMD derives from the sharding constraints (the flash-decode
+pattern). SSM/hybrid archs carry O(1) recurrent state instead.
+
+A light request-batching server loop (examples/serve_lm.py drives it):
+fixed decode batch, per-slot stop flags, greedy/temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int
+    temperature: float = 0.0      # 0 => greedy
+    cache_dtype: str = "bfloat16"
+
+
+def make_prefill_step(cfg: ModelConfig, scfg: ServeConfig, *,
+                      mesh: Optional[Mesh] = None, data_axes=("data",)):
+    def prefill_step(params, batch, caches):
+        return model_lib.prefill(params, batch, caches, cfg, mesh=mesh,
+                                 data_axes=data_axes)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, scfg: ServeConfig, *,
+                     mesh: Optional[Mesh] = None, data_axes=("data",)):
+    """serve_step(params, tokens (B,1), caches, index) ->
+    (next_tokens (B,1), logits, caches)."""
+
+    def decode(params, tokens, caches, cache_index, rng):
+        logits, caches = model_lib.decode_step(
+            params, tokens, caches, cache_index, cfg, mesh=mesh,
+            data_axes=data_axes)
+        if scfg.temperature > 0:
+            nxt = jax.random.categorical(
+                rng, logits[:, -1] / scfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, caches
+
+    return decode
+
+
+def generate(params, prompt: jax.Array, cfg: ModelConfig, scfg: ServeConfig,
+             num_tokens: int, *, mesh: Optional[Mesh] = None,
+             data_axes=("data",), rng: Optional[jax.Array] = None,
+             extra_batch: Optional[Dict[str, jax.Array]] = None
+             ) -> jax.Array:
+    """End-to-end batched generation (prefill once, decode in a lax loop)."""
+    b, s = prompt.shape
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    caches = model_lib.init_caches(cfg, b, scfg.max_seq,
+                                   jnp.dtype(scfg.cache_dtype))
+    batch = {"tokens": prompt, **(extra_batch or {})}
+    prefill = make_prefill_step(cfg, scfg, mesh=mesh, data_axes=data_axes)
+    decode = make_decode_step(cfg, scfg, mesh=mesh, data_axes=data_axes)
+
+    logits0, caches = jax.jit(prefill)(params, batch, caches)
+    first = jnp.argmax(logits0[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+    def body(carry, i):
+        tokens, caches, rng = carry
+        rng, sub = jax.random.split(rng)
+        nxt, _, caches = decode(params, tokens, caches, s + i, sub)
+        return (nxt, caches, rng), nxt[:, 0]
+
+    (_, _, _), out = jax.lax.scan(body, (first, caches, rng),
+                                  jnp.arange(num_tokens - 1))
+    return jnp.concatenate([first, out.T], axis=1)

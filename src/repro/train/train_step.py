@@ -1,0 +1,135 @@
+"""Loss and train step: microbatched grad accumulation, remat, metrics.
+
+The step is ONE jitted program (DAKC discipline: no host round-trips inside
+a step); gradient accumulation over microbatches is a `lax.scan`, so
+activation memory is bounded by one microbatch while the global batch
+matches the shape cell. Collective structure under the production mesh:
+FSDP all-gathers on use, reduce-scatters on grads, TP collectives inside
+layers, one cross-pod all-reduce per step (optionally compressed --
+train/compression.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    num_microbatches: int = 1
+    z_loss: float = 1e-4
+    optimizer: opt_lib.OptimizerConfig = opt_lib.OptimizerConfig()
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array], z_loss: float
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over valid positions (+ z-loss). logits (..., V) f32.
+
+    The gold logit is extracted with a one-hot reduction, NOT
+    take_along_axis: with vocab sharded over `model`, the one-hot multiply+
+    sum partitions as a local masked reduce + tiny all-reduce, whereas a
+    gather would force an all-gather of the full logits (the 80 GB
+    collective of the qwen baseline -- EXPERIMENTS.md §Perf)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    ce = lse - gold
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(ce), jnp.mean(lse)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce * mask) / denom, jnp.sum(lse * mask) / denom
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+            z_loss: float = 1e-4, mesh: Optional[Mesh] = None,
+            data_axes=("data",)) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token LM loss (decoder) or frame-target CE (encoder).
+
+    Decoder batches carry `tokens` (B, S); labels are tokens shifted left.
+    VLM: patch positions are prepended by the model; the text block is the
+    last S_text positions, so the shift stays within the text block.
+    Encoder (audio): `frames` + `labels` (B, S) cluster targets.
+    """
+    logits, aux = model_lib.forward(params, batch, cfg, mesh=mesh,
+                                    data_axes=data_axes)
+    if not cfg.causal:
+        labels = batch["labels"]
+        loss, lse = cross_entropy(logits, labels, batch.get("mask"), z_loss)
+    else:
+        tokens = batch["tokens"]
+        text_logits = logits[:, -tokens.shape[1]:-1]   # drop patch positions
+        loss, lse = cross_entropy(text_logits, tokens[:, 1:],
+                                  batch.get("mask"), z_loss)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux, "lse_mean": lse}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
+                    mesh: Optional[Mesh] = None, data_axes=("data",)):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Batch leading dim must divide by num_microbatches."""
+
+    def constrain_grads(g):
+        """Pin gradients to the parameter sharding as soon as they exist.
+
+        Without this the per-microbatch gradient reduction lowers as a full
+        f32 all-reduce (replicated grads, sliced later); constrained, GSPMD
+        emits the reduce-scatter form -- ~P x less wire per reduction
+        (166 GB -> 40 GB on moonshot train_4k, §Perf)."""
+        if mesh is None:
+            return g
+        from jax.sharding import NamedSharding
+        from repro.models import sharding as shd
+        return jax.tree_util.tree_map_with_path(
+            lambda p, v: jax.lax.with_sharding_constraint(
+                v, NamedSharding(mesh, shd.param_spec(p, v, mesh))), g)
+
+    def grads_of(params, mb):
+        (l, m), g = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, z_loss=tcfg.z_loss,
+                              mesh=mesh, data_axes=data_axes),
+            has_aux=True)(params, mb)
+        return l, m, constrain_grads(g)
+
+    def train_step(params, opt_state, batch):
+        nm = tcfg.num_microbatches
+        if nm == 1:
+            _, metrics, grads = grads_of(params, batch)
+        else:
+            def split(v):
+                return v.reshape((nm, v.shape[0] // nm) + v.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(acc, mb):
+                _, m, g = grads_of(params, mb)
+                acc_g, acc_m = acc
+                return (jax.tree.map(jnp.add, acc_g, g),
+                        jax.tree.map(jnp.add, acc_m, m)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"loss": jnp.float32(0), "aux_loss": jnp.float32(0),
+                      "lse_mean": jnp.float32(0)}
+            (grads, msum), _ = jax.lax.scan(acc_fn, (zero_g, zero_m), mbs)
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            metrics = jax.tree.map(lambda v: v / nm, msum)
+
+        params, opt_state, om = opt_lib.apply(tcfg.optimizer, params, grads,
+                                              opt_state)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS / device-count overrides here (the dry-run owns the
+# 512-device trick; tests run on the 1 real CPU device). Multi-device tests
+# spawn subprocesses with their own XLA_FLAGS (tests/multidevice_checks.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,181 @@
+"""Multi-device checks, run as a SUBPROCESS with 8 forced host devices
+(tests/test_multidevice.py drives this; keeps the main pytest process on the
+1 real device, per the no-global-XLA_FLAGS rule).
+
+Each check prints 'OK <name>'; any exception exits nonzero.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import bsp, fabsp, ngram, serial  # noqa: E402
+from repro.data import genome  # noqa: E402
+
+
+def merge(res):
+    out = {}
+    nsh = res.num_unique.shape[0]
+    L = res.unique.shape[0] // nsh
+    u = np.asarray(res.unique).reshape(nsh, L)
+    c = np.asarray(res.counts).reshape(nsh, L)
+    nu = np.asarray(res.num_unique)
+    for s in range(nsh):
+        for i in range(nu[s]):
+            out[int(u[s, i])] = int(c[s, i])
+    return out
+
+
+def check_kc_all_paths():
+    spec = genome.ReadSetSpec(genome_bases=8192, n_reads=512, read_len=90,
+                              seed=7)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    k = 13
+    oracle = serial.count_kmers_python(np.asarray(reads), k)
+    devs = np.array(jax.devices())
+    mesh = Mesh(devs, ("pe",))
+
+    for name, cfg in [
+        ("fabsp-dual", fabsp.DAKCConfig(k=k, chunk_reads=32, l3_mode="dual")),
+        ("fabsp-nol3", fabsp.DAKCConfig(k=k, chunk_reads=32, use_l3=False)),
+    ]:
+        res, stats = fabsp.count_kmers(reads, mesh, cfg)
+        assert merge(res) == oracle, name
+        assert int(stats.overflow) == 0
+        print(f"OK {name}")
+
+    mesh2 = Mesh(devs.reshape(2, 4), ("row", "col"))
+    cfg2 = fabsp.DAKCConfig(k=k, chunk_reads=32, topology="2d")
+    res2, s2 = fabsp.count_kmers(reads, mesh2, cfg2, ("row", "col"))
+    assert merge(res2) == oracle
+    print("OK fabsp-2d")
+
+    resb, sb = bsp.count_kmers(reads, mesh, bsp.BSPConfig(k=k,
+                                                          batch_reads=32))
+    assert merge(resb) == oracle
+    assert sb.num_global_syncs == (512 // 8) // 32 + 1
+    print("OK bsp")
+
+    # owner disjointness: each shard owns a disjoint k-mer set
+    nsh = res2.num_unique.shape[0]
+    L = res2.unique.shape[0] // nsh
+    u = np.asarray(res2.unique).reshape(nsh, L)
+    nu = np.asarray(res2.num_unique)
+    seen = set()
+    for s in range(nsh):
+        mine = set(int(x) for x in u[s, :nu[s]])
+        assert not (mine & seen)
+        seen |= mine
+    print("OK owner-disjoint")
+
+
+def check_ngram():
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, 50, (64, 17), dtype=np.int32))
+    mesh = Mesh(np.array(jax.devices()), ("pe",))
+    res, _ = ngram.count_ngrams(tokens, vocab_size=50, n=2, mesh=mesh,
+                                chunk_rows=8)
+    got = merge(res)
+    bits = ngram.bits_for_vocab(50)
+    oracle = {}
+    for row in np.asarray(tokens):
+        for i in range(len(row) - 1):
+            w = (int(row[i]) << bits) | int(row[i + 1])
+            oracle[w] = oracle.get(w, 0) + 1
+    assert got == oracle
+    print("OK ngram")
+
+
+def check_moe_dakc_multidev():
+    from repro.configs import reduced_config
+    from repro.models import model, moe
+    cfg = reduced_config("deepseek-moe-16b", compute_dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    mp = jax.tree.map(lambda v: v[0], params["blocks"][0])["moe"]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 16, cfg.d_model)) * 0.3, jnp.float32)
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    y_d, aux_d = moe.moe_block(mp, x, cfg=cfg, mesh=mesh,
+                               data_axes=("data",))
+    y_g, _ = moe.moe_block(mp, x, cfg=cfg, mesh=None)
+    err = float(jnp.abs(y_d - y_g).max())
+    assert err < 1e-4, err
+    assert float(aux_d.dropped_frac) == 0.0
+    print("OK moe-dakc-8dev")
+
+
+def check_sharded_train_step():
+    from repro.configs import reduced_config
+    from repro.models import model, sharding as shd
+    from repro.train import optimizer as opt_lib, train_step as ts_lib
+    cfg = reduced_config("qwen1.5-0.5b", num_layers=2, vocab_size=64,
+                         d_model=64, num_heads=4, num_kv_heads=4, head_dim=16)
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    shardings = shd.param_shardings(params, mesh)
+    params = jax.device_put(params, shardings)
+    opt_state = jax.device_put(opt_lib.init(params), opt_lib.OptState(
+        step=NamedSharding(mesh, P()), mu=shardings, nu=shardings))
+    tcfg = ts_lib.TrainConfig(num_microbatches=2)
+    step = jax.jit(ts_lib.make_train_step(cfg, tcfg, mesh=mesh))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jax.device_put(
+        jnp.asarray(rng.integers(0, 64, (8, 32)), jnp.int32),
+        NamedSharding(mesh, P("data", None)))}
+    p2, o2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # sharded result == single-device result
+    step1 = jax.jit(ts_lib.make_train_step(cfg, tcfg))
+    p_single = jax.device_put(params, jax.devices()[0])
+    p1, _, m1 = step1(p_single, opt_lib.init(p_single),
+                      jax.device_put(batch, jax.devices()[0]))
+    rel = abs(float(m1["loss"]) - float(metrics["loss"])) \
+        / max(1.0, abs(float(m1["loss"])))
+    assert rel < 3e-4, rel  # reduction-order noise only
+    print("OK sharded-train-step")
+
+
+def check_compression_psum():
+    from functools import partial
+    from repro.train import compression
+    mesh = Mesh(np.array(jax.devices()), ("pod",))
+    rng = np.random.default_rng(0)
+    g_global = rng.normal(size=(8, 64)).astype(np.float32)
+
+    def body(g):
+        err = compression.init_error_feedback({"w": g})
+        out, _ = compression.compress_psum({"w": g}, err, frac=1.0,
+                                           axis_name="pod")
+        return out["w"]
+
+    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("pod"),
+                                out_specs=P("pod"), check_vma=False))(
+        jnp.asarray(g_global))
+    # frac=1.0 -> exact mean over the pod axis, replicated back
+    want = g_global.mean(axis=0)
+    got = np.asarray(out)
+    for r in range(8):
+        np.testing.assert_allclose(got[r], want, atol=1e-5)
+    print("OK compression-psum")
+
+
+if __name__ == "__main__":
+    assert len(jax.devices()) == 8, jax.devices()
+    check_kc_all_paths()
+    check_ngram()
+    check_moe_dakc_multidev()
+    check_sharded_train_step()
+    check_compression_psum()
+    print("ALL-MULTIDEVICE-OK")

@@ -1,0 +1,91 @@
+"""Aggregation-layer invariants (paper Alg. 4), property-tested."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding
+from repro.core.aggregation import (aggregation_memory_bytes, bucket_by_owner,
+                                    l3_compress, l3_decompress, plan_capacity)
+
+SENT32 = int(np.iinfo(np.uint32).max)
+
+
+@given(st.integers(0, 10), st.integers(1, 8), st.integers(4, 64))
+@settings(max_examples=30, deadline=None)
+def test_bucket_by_owner_properties(seed, num_pes, capacity):
+    rng = np.random.default_rng(seed)
+    n = 128
+    words = jnp.asarray(rng.integers(0, 1 << 20, n, dtype=np.uint32))
+    owners = jnp.asarray(rng.integers(0, num_pes, n, dtype=np.int32))
+    valid = jnp.asarray(rng.random(n) < 0.9)
+    tile, fill, overflow = bucket_by_owner(words, owners, valid, num_pes,
+                                           capacity)
+    # conservation: routed + dropped == valid
+    assert int(fill.sum()) + int(overflow) == int(valid.sum())
+    # every routed word lands in its owner's row, before the fill mark
+    t = np.asarray(tile)
+    f = np.asarray(fill)
+    for p in range(num_pes):
+        row = t[p]
+        assert (row[f[p]:] == SENT32).all()
+        sent_vals = sorted(int(w) for w, o, v in
+                           zip(np.asarray(words), np.asarray(owners),
+                               np.asarray(valid)) if v and o == p)
+        got = sorted(int(x) for x in row[:f[p]])
+        if f[p] == len(sent_vals):        # no overflow on this row
+            assert got == sent_vals
+        else:
+            assert set(got) <= set(sent_vals)
+
+
+@given(st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_l3_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    k = 9  # uint32, 14 spare bits -> counts to 16382
+    n = 256
+    # skewed block: few distinct values, many repeats
+    vals = rng.integers(0, 12, n)
+    words = jnp.asarray(vals.astype(np.uint32))
+    packed, valid = l3_compress(words, k)
+    kmers, counts = l3_decompress(packed, k)
+    got = {}
+    for km, c in zip(np.asarray(kmers), np.asarray(counts)):
+        if c > 0:
+            got[int(km)] = got.get(int(km), 0) + int(c)
+    uniq, cnt = np.unique(vals, return_counts=True)
+    assert got == {int(u): int(c) for u, c in zip(uniq, cnt)}
+    # compression: one word per distinct value
+    assert int(valid.sum()) == len(uniq)
+
+
+def test_plan_capacity_monotone():
+    assert plan_capacity(1000, 4, 1.5) >= 1000 / 4 * 1.5 - 8
+    assert plan_capacity(1000, 4, 2.0) >= plan_capacity(1000, 4, 1.5)
+    assert plan_capacity(10, 64, 1.5) >= 8  # alignment floor
+
+
+def test_aggregation_memory_table_iii():
+    """Paper Table III at defaults: L1=264KB, L2=264B/PE, L3=80KB."""
+    mem = aggregation_memory_bytes(num_pes=1, protocol="1d")
+    assert abs(mem["L1"] - 264_000) < 8_000  # 264K in the paper's table
+    assert abs(mem["L2"] - 264) < 10
+    assert mem["L3"] == 80_000
+    # protocol memory law: 1D linear, 2D sqrt, 3D cube-root
+    m1 = aggregation_memory_bytes(4096, "1d")["L0"]
+    m2 = aggregation_memory_bytes(4096, "2d")["L0"]
+    m3 = aggregation_memory_bytes(4096, "3d")["L0"]
+    assert m1 / m2 == (4096 ** 0.5)
+    assert m1 > m2 > m3
+
+
+@given(st.integers(1, 12))
+@settings(max_examples=12, deadline=None)
+def test_sentinel_is_unreachable(k):
+    """No valid {kmer, count} packing may equal the sentinel."""
+    cap = encoding.count_capacity(k)
+    worst = encoding.pack_counts(
+        jnp.asarray([(1 << (2 * k)) - 1], jnp.uint32),
+        jnp.asarray([cap + 100]), k)
+    assert int(worst[0]) != int(encoding.sentinel(k))

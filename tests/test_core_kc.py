@@ -1,0 +1,131 @@
+"""System tests: the three KC algorithms agree with the Python oracle.
+
+Single-device here (the mesh degenerates to P=1: all_to_all is identity but
+every aggregation layer still runs); the 8-device versions of the same
+checks run in tests/test_multidevice.py subprocesses.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import bsp, fabsp, ngram, serial
+from repro.data import genome
+
+
+@pytest.fixture(scope="module")
+def reads():
+    spec = genome.ReadSetSpec(genome_bases=4096, n_reads=256, read_len=80,
+                              seed=11)
+    return genome.sample_reads(spec)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("pe",))
+
+
+def _merge(res):
+    out = {}
+    nsh = res.num_unique.shape[0]
+    L = res.unique.shape[0] // nsh
+    u = np.asarray(res.unique).reshape(nsh, L)
+    c = np.asarray(res.counts).reshape(nsh, L)
+    nu = np.asarray(res.num_unique)
+    for s in range(nsh):
+        for i in range(nu[s]):
+            out[int(u[s, i])] = int(c[s, i])
+    return out
+
+
+def test_serial_matches_python(reads):
+    k = 11
+    res = serial.count_kmers_serial(jnp.asarray(reads), k)
+    oracle = serial.count_kmers_python(reads, k)
+    n = int(res.num_unique)
+    got = {int(a): int(b) for a, b in zip(res.unique[:n], res.counts[:n])}
+    assert got == oracle
+
+
+@pytest.mark.parametrize("l3_mode", ["dual", "none", "packed"])
+def test_fabsp_matches_serial(reads, mesh, l3_mode):
+    k = 9 if l3_mode == "packed" else 13
+    oracle = serial.count_kmers_python(reads, k)
+    cfg = fabsp.DAKCConfig(k=k, chunk_reads=64,
+                           use_l3=l3_mode != "none",
+                           l3_mode="auto" if l3_mode == "none" else l3_mode)
+    res, stats = fabsp.count_kmers(jnp.asarray(reads), mesh, cfg)
+    assert _merge(res) == oracle
+    assert int(stats.overflow) == 0
+    assert stats.num_global_syncs == 3
+    assert int(stats.raw_kmers) == reads.shape[0] * (reads.shape[1] - k + 1)
+    if l3_mode != "none":
+        # L3 compresses duplicates: never more words than raw k-mers.
+        assert int(stats.sent_words) <= int(stats.raw_kmers)
+
+
+def test_bsp_matches_serial(reads, mesh):
+    k = 13
+    oracle = serial.count_kmers_python(reads, k)
+    res, stats = bsp.count_kmers(jnp.asarray(reads), mesh,
+                                 bsp.BSPConfig(k=k, batch_reads=64))
+    assert _merge(res) == oracle
+    # Eq. 1 sync law: ceil(reads/batch) + 1 host syncs.
+    assert stats.num_global_syncs == 256 // 64 + 1
+
+
+def test_fabsp_l3_compression_on_skewed_data(mesh):
+    """Paper Fig. 12: heavy-hitter genomes compress dramatically under L3."""
+    spec = genome.ReadSetSpec(genome_bases=4096, n_reads=256, read_len=80,
+                              heavy_hitter_frac=0.5, seed=5)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    k = 13
+    cfg_l3 = fabsp.DAKCConfig(k=k, chunk_reads=64, use_l3=True)
+    cfg_raw = fabsp.DAKCConfig(k=k, chunk_reads=64, use_l3=False)
+    res_l3, s_l3 = fabsp.count_kmers(reads, mesh, cfg_l3)
+    res_raw, s_raw = fabsp.count_kmers(reads, mesh, cfg_raw)
+    assert _merge(res_l3) == _merge(res_raw)
+    assert int(s_l3.sent_words) < int(s_raw.sent_words) * 0.7
+
+
+def test_canonical_counting(reads, mesh):
+    k = 9
+    cfg = fabsp.DAKCConfig(k=k, chunk_reads=64, canonical=True)
+    res, _ = fabsp.count_kmers(jnp.asarray(reads), mesh, cfg)
+    got = _merge(res)
+    from repro.core import encoding
+    oracle = {}
+    raw = serial.count_kmers_python(np.asarray(reads), k)
+    for km, c in raw.items():
+        can = int(encoding.canonical(jnp.asarray([km], jnp.uint32), k)[0])
+        oracle[can] = oracle.get(can, 0) + c
+    assert got == oracle
+
+
+def test_ngram_counting(mesh):
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, 100, (64, 33), dtype=np.int32))
+    res, _ = ngram.count_ngrams(tokens, vocab_size=100, n=2, mesh=mesh,
+                                chunk_rows=32)
+    got = _merge(res)
+    bits = ngram.bits_for_vocab(100)
+    oracle = {}
+    t = np.asarray(tokens)
+    for row in t:
+        for i in range(len(row) - 1):
+            word = (int(row[i]) << bits) | int(row[i + 1])
+            oracle[word] = oracle.get(word, 0) + 1
+    assert got == oracle
+
+
+def test_overflow_retry(mesh):
+    """Adversarial skew with L3 off trips capacity; the overflow round
+    (slack doubling) must still deliver exact counts."""
+    reads = np.zeros((64, 40), dtype=np.uint8)  # all-A: one k-mer repeated
+    k = 13
+    cfg = fabsp.DAKCConfig(k=k, chunk_reads=32, use_l3=False, slack=1.01)
+    res, stats = fabsp.count_kmers(jnp.asarray(reads), mesh, cfg)
+    oracle = serial.count_kmers_python(reads, k)
+    assert _merge(res) == oracle

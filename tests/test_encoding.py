@@ -1,0 +1,87 @@
+"""Unit + property tests for 2-bit encoding and k-mer packing."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding
+
+
+def test_kmer_dtype_widths():
+    assert encoding.kmer_dtype(15) == jnp.uint32
+    with pytest.raises(ValueError):
+        encoding.kmer_dtype(31)  # needs x64 (enabled only in genomics drivers)
+    with pytest.raises(ValueError):
+        encoding.kmer_dtype(40)
+
+
+def test_pack_kmers_matches_manual():
+    codes = jnp.asarray([[0, 1, 2, 3, 0, 1]], jnp.uint8)  # ACGTAC
+    out = encoding.pack_kmers(codes, 3)
+    # ACG = 0b000110, CGT = 0b011011, GTA = 0b101100, TAC = 0b110001
+    assert out.tolist() == [[0b000110, 0b011011, 0b101100, 0b110001]]
+
+
+def test_encode_ascii():
+    s = jnp.asarray(np.frombuffer(b"ACGTacgtN", dtype=np.uint8))
+    out = encoding.encode_ascii(s)
+    assert out.tolist() == [0, 1, 2, 3, 0, 1, 2, 3, 255]
+
+
+def test_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 4, (4, 20), dtype=np.uint8)
+    k = 7
+    words = np.asarray(encoding.pack_kmers(jnp.asarray(codes), k))
+    for r in range(4):
+        for i in range(20 - k + 1):
+            expect = "".join(encoding.CODE_TO_BASE[c]
+                             for c in codes[r, i:i + k])
+            assert encoding.unpack_kmer_np(words[r, i], k) == expect
+
+
+def test_revcomp_involution_and_canonical():
+    rng = np.random.default_rng(1)
+    k = 9
+    kmers = jnp.asarray(rng.integers(0, 1 << (2 * k), 100, dtype=np.uint32))
+    rc = encoding.revcomp(kmers, k)
+    assert (encoding.revcomp(rc, k) == kmers).all()
+    can = encoding.canonical(kmers, k)
+    assert (can <= kmers).all()
+    assert (encoding.canonical(rc, k) == can).all()  # strand-invariant
+
+
+def test_revcomp_known():
+    # ACG -> CGT: ACG=000110; CGT=011011
+    out = encoding.revcomp(jnp.asarray([0b000110], jnp.uint32), 3)
+    assert out.tolist() == [0b011011]
+
+
+@given(st.integers(1, 12), st.integers(1, 1000))
+@settings(max_examples=25, deadline=None)
+def test_count_pack_roundtrip(k, count):
+    cap = encoding.count_capacity(k)
+    kmers = jnp.asarray([min((1 << (2 * k)) - 1, 5)], jnp.uint32)
+    packed = encoding.pack_counts(kmers, jnp.asarray([count]), k)
+    km, c = encoding.unpack_counts(packed, k)
+    assert int(km[0]) == int(kmers[0])
+    assert int(c[0]) == min(count, cap)
+    # sentinel never collides with a packed word
+    assert int(packed[0]) != int(encoding.sentinel(k))
+
+
+@given(st.integers(2, 13), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_pack_kmers_property(k, seed):
+    rng = np.random.default_rng(seed)
+    m = k + rng.integers(0, 20)
+    codes = rng.integers(0, 4, (3, m), dtype=np.uint8)
+    words = np.asarray(encoding.pack_kmers(jnp.asarray(codes), k))
+    assert words.shape == (3, m - k + 1)
+    # rolling relation: w[i+1] = ((w[i] << 2) | c[i+k]) & mask
+    mask = (1 << (2 * k)) - 1
+    for r in range(3):
+        for i in range(m - k):
+            assert words[r, i + 1] == (
+                ((int(words[r, i]) << 2) | int(codes[r, i + k])) & mask)

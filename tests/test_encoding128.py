@@ -1,0 +1,59 @@
+"""128-bit k-mers (the paper's Sec.-VII future-work item): k in (31, 63].
+
+Runs in an x64 subprocess like the other uint64 paths."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_k45_serial_counting():
+    code = r"""
+import os
+os.environ["JAX_ENABLE_X64"] = "1"
+import sys; sys.path.insert(0, %r)
+import jax, jax.numpy as jnp, numpy as np
+from collections import Counter
+from repro.core import encoding128 as e128
+from repro.data import genome
+
+k = 45
+spec = genome.ReadSetSpec(genome_bases=2048, n_reads=96, read_len=100, seed=9)
+reads = genome.sample_reads(spec)
+
+res = e128.count_kmers_serial128(jnp.asarray(reads), k)
+n = int(res.num_unique)
+
+# python oracle with arbitrary-precision ints
+oracle = Counter()
+for row in reads:
+    word = 0
+    mask = (1 << (2 * k)) - 1
+    for j, b in enumerate(row.tolist()):
+        word = ((word << 2) | int(b)) & mask
+        if j >= k - 1:
+            oracle[word] += 1
+got = {}
+for i in range(n):
+    got[e128.kmer128_to_int(res.hi[i], res.lo[i])] = int(res.counts[i])
+assert got == dict(oracle), (len(got), len(oracle))
+
+# ownership partitions the 128-bit space
+owners = e128.owner_pe128(
+    e128.Kmer128(hi=res.hi[:n], lo=res.lo[:n]), 8)
+assert int(owners.min()) >= 0 and int(owners.max()) < 8
+counts = np.bincount(np.asarray(owners), minlength=8)
+assert counts.min() > 0  # hash spreads across all PEs
+print("K128-OK", n)
+""" % os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("JAX_ENABLE_X64", None)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=600)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-3000:])
+    assert proc.returncode == 0
+    assert "K128-OK" in proc.stdout

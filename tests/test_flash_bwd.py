@@ -1,0 +1,83 @@
+"""Flash attention backward Pallas kernels vs reference gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.mark.parametrize(
+    "hq,hkv,s,causal,window,softcap",
+    [(2, 2, 64, True, None, None),
+     (4, 2, 96, True, None, None),      # GQA group-sum of dk/dv
+     (2, 1, 64, True, 24, None),        # sliding window band
+     (2, 2, 64, True, None, 15.0),      # softcap chain rule
+     (2, 2, 64, False, None, None)])    # encoder
+def test_flash_bwd_matches_ref(hq, hkv, s, causal, window, softcap):
+    q = jnp.asarray(RNG.normal(size=(1, hq, s, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, hkv, s, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, hkv, s, 16)), jnp.float32)
+    t = jnp.asarray(RNG.normal(size=(1, hq, s, 16)), jnp.float32)
+
+    def loss_flash(q, k, v):
+        o = ops.flash_attention_trainable(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            block_q=32, block_k=32)
+        return jnp.sum(o * t)
+
+    def loss_ref(q, k, v):
+        o = ref.mha_ref(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+        return jnp.sum(o * t)
+
+    # forward parity
+    assert abs(float(loss_flash(q, k, v)) - float(loss_ref(q, k, v))) < 1e-3
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gf, gr, ("dq", "dk", "dv")):
+        assert float(jnp.abs(a - b).max()) < 5e-5, name
+
+
+def test_flash_bwd_nonmultiple_blocks():
+    """Padding path: sq/skv not multiples of the block sizes."""
+    q = jnp.asarray(RNG.normal(size=(1, 2, 50, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 50, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 50, 16)), jnp.float32)
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v) ** 2)
+
+    gf = jax.grad(loss(lambda q, k, v: ops.flash_attention_trainable(
+        q, k, v, block_q=32, block_k=32)), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss(lambda q, k, v: ref.mha_ref(q, k, v)),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        assert float(jnp.abs(a - b).max()) < 5e-5
+
+
+def test_flash_train_attention_in_model():
+    """End-to-end: a train step with attn_impl='flash_train' (Pallas fwd+bwd
+    kernels) matches the ref-attention step's loss."""
+    from repro.configs import reduced_config
+    from repro.models import model
+    from repro.train import optimizer as opt_lib, train_step as ts_lib
+    import dataclasses
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 128, (2, 32)), jnp.int32)}
+    losses = {}
+    for impl in ("ref", "flash_train"):
+        cfg = reduced_config("qwen1.5-0.5b", num_layers=2, vocab_size=128,
+                             compute_dtype="float32", attn_impl=impl)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        tcfg = ts_lib.TrainConfig(num_microbatches=1, z_loss=0.0)
+        step = jax.jit(ts_lib.make_train_step(cfg, tcfg))
+        _, _, metrics = step(params, opt_lib.init(params), batch)
+        losses[impl] = (float(metrics["loss"]), float(metrics["grad_norm"]))
+    assert abs(losses["ref"][0] - losses["flash_train"][0]) < 1e-4
+    assert abs(losses["ref"][1] - losses["flash_train"][1]) \
+        / losses["ref"][1] < 1e-3

@@ -1,0 +1,85 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("k", [3, 9, 15])
+@pytest.mark.parametrize("n_reads,m", [(8, 64), (32, 100), (16, 151)])
+def test_kmer_extract_sweep(k, n_reads, m):
+    reads = jnp.asarray(RNG.integers(0, 4, (n_reads, m), dtype=np.uint8))
+    out = ops.kmer_extract(reads, k)
+    exp = ref.kmer_extract_ref(reads, k)
+    assert out.dtype == exp.dtype
+    assert (out == exp).all()
+
+
+@pytest.mark.parametrize("digit_bits", [2, 4, 8])
+@pytest.mark.parametrize("shift", [0, 8, 24])
+def test_radix_hist_sweep(digit_bits, shift):
+    keys = jnp.asarray(RNG.integers(0, 1 << 31, 4096, dtype=np.uint32))
+    out = ops.radix_hist(keys, shift, digit_bits, tile=512)
+    exp = ref.radix_hist_ref(keys, shift, digit_bits, 512)
+    assert (out == exp).all()
+    assert int(out.sum()) == 4096  # every key lands in one bucket per tile
+
+
+@pytest.mark.parametrize("tile", [128, 1024])
+@pytest.mark.parametrize("frac_pad", [0.0, 0.3])
+def test_segment_boundaries_sweep(tile, frac_pad):
+    sent = int(np.iinfo(np.uint32).max)
+    n = 2048
+    keys = np.sort(RNG.integers(0, 300, n).astype(np.uint32))
+    pad = int(n * frac_pad)
+    if pad:
+        keys[-pad:] = sent
+    keys = jnp.asarray(keys)
+    out = ops.segment_boundaries(keys, sentinel_val=sent, tile=tile)
+    exp = ref.segment_boundaries_ref(keys, sent)
+    assert (out == exp).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "hq,hkv,sq,skv,causal,window,softcap",
+    [(4, 4, 128, 128, True, None, None),
+     (8, 2, 64, 64, True, None, None),
+     (4, 1, 128, 128, True, 32, None),
+     (2, 2, 64, 64, True, None, 20.0),
+     (2, 2, 96, 96, False, None, None)])
+def test_flash_attention_sweep(dtype, hq, hkv, sq, skv, causal, window,
+                               softcap):
+    q = jnp.asarray(RNG.normal(size=(2, hq, sq, 32)), dtype)
+    k = jnp.asarray(RNG.normal(size=(2, hkv, skv, 32)), dtype)
+    v = jnp.asarray(RNG.normal(size=(2, hkv, skv, 32)), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=32, block_k=32)
+    exp = ref.mha_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - exp.astype(jnp.float32)).max()) < tol
+
+
+def test_flash_attention_decode_offset():
+    """Decode: 1 query at position 255 against a 256-long cache."""
+    q = jnp.asarray(RNG.normal(size=(1, 4, 1, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 4, 256, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 4, 256, 32)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=255,
+                              block_q=32, block_k=64)
+    exp = ref.mha_ref(q, k, v, causal=True, q_offset=255)
+    assert float(jnp.abs(out - exp).max()) < 2e-5
+
+
+def test_flash_blocks_do_not_change_result():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 256, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 256, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 256, 32)), jnp.float32)
+    a = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    b = ops.flash_attention(q, k, v, block_q=128, block_k=64)
+    assert float(jnp.abs(a - b).max()) < 2e-5

@@ -1,0 +1,63 @@
+"""Drives tests/multidevice_checks.py in a subprocess with 8 forced host
+devices (the main pytest process keeps the 1 real CPU device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_multidevice_suite():
+    script = os.path.join(os.path.dirname(__file__), "multidevice_checks.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the script sets its own
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, env=env, timeout=900)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0
+    assert "ALL-MULTIDEVICE-OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_uint64_k31_subprocess():
+    """The paper's k=31 path (uint64 words) in an x64-enabled subprocess."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_ENABLE_X64"] = "1"
+import sys; sys.path.insert(0, %r)
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import fabsp, serial
+from repro.data import genome
+spec = genome.ReadSetSpec(genome_bases=2048, n_reads=128, read_len=80, seed=3)
+reads = genome.sample_reads(spec)
+k = 31
+oracle = serial.count_kmers_python(reads, k)
+mesh = Mesh(np.array(jax.devices()), ('pe',))
+cfg = fabsp.DAKCConfig(k=k, chunk_reads=32)   # auto -> dual at k=31
+res, stats = fabsp.count_kmers(jnp.asarray(reads), mesh, cfg)
+nsh = res.num_unique.shape[0]
+L = res.unique.shape[0] // nsh
+u = np.asarray(res.unique).reshape(nsh, L); c = np.asarray(res.counts).reshape(nsh, L)
+nu = np.asarray(res.num_unique)
+got = {}
+for s in range(nsh):
+    for i in range(nu[s]):
+        got[int(u[s, i])] = int(c[s, i])
+assert got == oracle, (len(got), len(oracle))
+assert res.unique.dtype == jnp.uint64
+print("K31-OK")
+""" % os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.pop("JAX_ENABLE_X64", None)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=600)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0
+    assert "K31-OK" in proc.stdout

@@ -1,0 +1,52 @@
+"""GPipe pipeline: schedule correctness vs sequential composition (runs in
+a 4-device subprocess so the main process keeps 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.train.pipeline import bubble_fraction
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(4, 4) == 3 / 7
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(4, 28) < 0.1   # deep microbatching hides bubble
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, %r)
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.train.pipeline import pipeline_forward, sequential_oracle
+
+S, M, MB, D = 4, 8, 2, 16
+rng = np.random.default_rng(0)
+params = {"w": jnp.asarray(rng.normal(size=(S, D, D)) * 0.3, jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(S, D)) * 0.1, jnp.float32)}
+x = jnp.asarray(rng.normal(size=(M * MB, D)), jnp.float32)
+
+def body(sp, x):
+    return jnp.tanh(x @ sp["w"] + sp["b"])
+
+mesh = Mesh(np.array(jax.devices()), ("stage",))
+y = pipeline_forward(body, params, x, mesh=mesh, num_microbatches=M)
+y_ref = sequential_oracle(body, params, x)
+err = float(jnp.abs(y - y_ref).max())
+assert err < 1e-5, err
+print("PIPELINE-OK", err)
+""" % os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=600)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-3000:])
+    assert proc.returncode == 0
+    assert "PIPELINE-OK" in proc.stdout

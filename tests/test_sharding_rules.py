@@ -1,0 +1,136 @@
+"""Sharding rules and dry-run analysis units: divisibility fallbacks,
+collective parser loop-multipliers, roofline term math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.models import sharding as shd
+
+
+class _FakeMesh:
+    """Minimal mesh stand-in: only .shape is consulted by the rules."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESH = _FakeMesh(data=16, model=16)
+
+
+def test_fit_drops_indivisible_axes():
+    # gemma2 KV heads (8) cannot shard over model=16 -> axis dropped
+    spec = shd._fit(P("data", "model", None), (3584, 8, 256), MESH)
+    assert tuple(spec) == ("data", None, None)
+    # mamba2 vocab 50280 % 16 != 0 -> vocab replicates, d_model FSDPs
+    spec = shd._fit(P("model", "data"), (50280, 1024), MESH)
+    assert tuple(spec) == (None, "data")
+    # clean case untouched
+    spec = shd._fit(P("model", "data"), (163840, 2048), MESH)
+    assert tuple(spec) == ("model", "data")
+
+
+def test_fit_handles_missing_axes_and_rank():
+    assert tuple(shd._fit(P("stage"), (8,), MESH)) == (None,)
+    assert tuple(shd._fit(P("data", "model"), (64,), MESH)) == ("data",)
+    assert tuple(shd._fit(P("data"), (64, 32, 16), MESH)) == (
+        "data", None, None)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "moonshot-v1-16b-a3b",
+                                  "mamba2-370m", "zamba2-1.2b"])
+def test_param_specs_cover_all_leaves(arch):
+    """Every parameter leaf gets a spec whose sharded dims divide."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+    specs = shd.param_specs(shapes, MESH)  # type: ignore[arg-type]
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    big_sharded = 0
+    for sd, spec in zip(flat_shapes, flat_specs):
+        for dim, entry in enumerate(tuple(spec)):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            sz = 1
+            for nm in names:
+                sz *= MESH.shape[nm]
+            assert sd.shape[dim] % sz == 0, (spec, sd.shape)
+        if np.prod(sd.shape) > 1e6:
+            big_sharded += int(any(e is not None for e in tuple(spec)))
+    assert big_sharded > 0  # all large tensors are sharded somewhere
+
+
+def test_loop_multiplier_parser():
+    from repro.launch.dryrun import _loop_multipliers, _parse_computations
+    hlo = """
+%cond.1 (arg: (s32[])) -> pred[] {
+  %c = s32[] constant(21)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+%body.1 (arg: (s32[])) -> (s32[]) {
+  %ag = f32[8,8]{1,0} all-gather(%p), replica_groups=[16,16]<=[256]
+  ROOT %t = (s32[]) tuple(%iter)
+}
+%cond.2 (arg2: (s32[])) -> pred[] {
+  %c2 = s32[] constant(8)
+  ROOT %lt2 = pred[] compare(%g, %c2), direction=LT
+}
+%body.2 (arg2: (s32[])) -> (s32[]) {
+  %w = (s32[]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %t2 = (s32[]) tuple(%i)
+}
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %outer = (s32[]) while(%start), condition=%cond.2, body=%body.2
+  ROOT %r = f32[4]{0} add(%p0, %p0)
+}
+"""
+    comps = _parse_computations(hlo)
+    mult = _loop_multipliers(comps)
+    assert mult["body.2"] == 8          # outer loop
+    assert mult["body.1"] == 8 * 21     # nested
+    assert mult["main"] == 1
+
+
+def test_collective_bytes_weighting():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %rs = f32[64]{0} reduce-scatter(%y), replica_groups=[16,16]<=[256]
+  %ag = bf16[2048]{0} all-gather(%z), replica_groups=[16,16]<=[256]
+  ROOT %r = f32[4]{0} add(%p, %p)
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"]["bytes"] == 1024 * 4 * 2       # x2 ring AR
+    assert out["reduce-scatter"]["bytes"] == 64 * 4 * 16    # x group
+    assert out["all-gather"]["bytes"] == 2048 * 2
+    assert out["total_bytes"] == sum(
+        out[k]["bytes"] for k in ("all-reduce", "reduce-scatter",
+                                  "all-gather", "all-to-all",
+                                  "collective-permute"))
+
+
+@given(st.integers(0, 4), st.sampled_from([None, 16, 48]),
+       st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_flash_ref_property(seed, window, causal):
+    """flash_ref == mha_ref across random shapes/windows (the long-context
+    attention used by every 32k+ cell)."""
+    from repro.kernels import ref
+    rng = np.random.default_rng(seed)
+    sq = int(rng.integers(17, 80))
+    q = jnp.asarray(rng.normal(size=(1, 2, sq, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, sq, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, sq, 16)), jnp.float32)
+    a = ref.flash_ref(q, k, v, causal=causal, window=window,
+                      block_q=16, block_k=16)
+    b = ref.mha_ref(q, k, v, causal=causal, window=window)
+    assert float(jnp.abs(a - b).max()) < 3e-5

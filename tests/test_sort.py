@@ -1,0 +1,88 @@
+"""Sorting + accumulate (paper Alg. 1) tests."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sort import accumulate, merge_accum, radix_sort, \
+    sort_with_weights
+
+SENT32 = int(np.iinfo(np.uint32).max)
+
+
+def test_radix_sort_matches_jnp_sort():
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 1 << 26, 4096, dtype=np.uint32))
+    out = radix_sort(keys, total_bits=26, digit_bits=4)
+    assert (out == jnp.sort(keys)).all()
+
+
+def test_radix_sort_digit_sizes():
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(rng.integers(0, 1 << 16, 512, dtype=np.uint32))
+    for db in (2, 4, 8):
+        assert (radix_sort(keys, 16, db) == jnp.sort(keys)).all()
+
+
+def test_accumulate_counts():
+    keys = jnp.asarray([1, 1, 2, 5, 5, 5, SENT32, SENT32], jnp.uint32)
+    res = accumulate(keys, sentinel_val=SENT32)
+    assert int(res.num_unique) == 3
+    assert res.unique[:3].tolist() == [1, 2, 5]
+    assert res.counts[:3].tolist() == [2, 1, 3]
+    assert res.counts[3:].tolist() == [0] * 5
+
+
+def test_accumulate_weighted():
+    keys = jnp.asarray([3, 3, 7, SENT32], jnp.uint32)
+    w = jnp.asarray([4, 1, 10, 99], jnp.int32)
+    res = accumulate(keys, w, sentinel_val=SENT32)
+    assert int(res.num_unique) == 2
+    assert res.unique[:2].tolist() == [3, 7]
+    assert res.counts[:2].tolist() == [5, 10]
+
+
+def test_merge_accum():
+    a = accumulate(jnp.asarray([1, 1, 4, SENT32], jnp.uint32),
+                   sentinel_val=SENT32)
+    b = accumulate(jnp.asarray([1, 4, 9, SENT32], jnp.uint32),
+                   sentinel_val=SENT32)
+    m = merge_accum(a, b, sentinel_val=SENT32)
+    assert int(m.num_unique) == 3
+    assert m.unique[:3].tolist() == [1, 4, 9]
+    assert m.counts[:3].tolist() == [3, 2, 1]
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=200),
+       st.integers(0, 30))
+@settings(max_examples=30, deadline=None)
+def test_accumulate_matches_numpy(values, pad):
+    arr = np.sort(np.asarray(values, np.uint32))
+    keys = jnp.asarray(np.concatenate(
+        [arr, np.full(pad, SENT32, np.uint32)]))
+    res = accumulate(keys, sentinel_val=SENT32)
+    uniq, counts = np.unique(arr, return_counts=True)
+    n = int(res.num_unique)
+    assert n == len(uniq)
+    assert np.array_equal(np.asarray(res.unique[:n]), uniq)
+    assert np.array_equal(np.asarray(res.counts[:n]), counts)
+    # invariant: total mass preserved
+    assert int(res.counts.sum()) == len(values)
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=5, deadline=None)
+def test_sort_with_weights_stability(seed):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 8, 64, dtype=np.uint32))
+    w = jnp.arange(64, dtype=jnp.int32)
+    sk, sw = sort_with_weights(keys, w)
+    assert (sk == jnp.sort(keys)).all()
+    # weights follow their keys
+    total = {}
+    for k_, w_ in zip(np.asarray(keys), np.asarray(w)):
+        total[int(k_)] = total.get(int(k_), 0) + int(w_)
+    got = {}
+    for k_, w_ in zip(np.asarray(sk), np.asarray(sw)):
+        got[int(k_)] = got.get(int(k_), 0) + int(w_)
+    assert got == total
