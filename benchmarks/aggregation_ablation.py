@@ -36,7 +36,26 @@ def _measure(reads, use_l3, l3_mode="auto"):
     return t, int(stats.sent_words), int(stats.raw_kmers)
 
 
+def _verify_partition_parity() -> None:
+    """The sort-free engine and the argsort oracle must agree end-to-end
+    before any timing is trusted (small read set, both L3 regimes)."""
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+    spec = genome.ReadSetSpec(genome_bases=2048, n_reads=256, read_len=100,
+                              heavy_hitter_frac=0.5, seed=3)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    for use_l3 in (False, True):
+        base = dict(k=13, chunk_reads=256, use_l3=use_l3)
+        r_radix, _ = fabsp.count_kmers(
+            reads, mesh, fabsp.DAKCConfig(**base))
+        r_arg, _ = fabsp.count_kmers(
+            reads, mesh, fabsp.DAKCConfig(**base, partition_impl="argsort",
+                                          phase2_impl="argsort"))
+        assert (r_radix.unique == r_arg.unique).all(), "partition parity"
+        assert (r_radix.counts == r_arg.counts).all(), "partition parity"
+
+
 def run() -> None:
+    _verify_partition_parity()
     n_reads = int(2048 * SCALE)
     for regime, heavy in (("uniform_synth32", 0.0), ("heavy_human", 0.6)):
         spec = genome.ReadSetSpec(genome_bases=8 * n_reads, n_reads=n_reads,

@@ -1,0 +1,136 @@
+"""Per-phase timing of the DAKC pipeline: the perf trajectory record.
+
+Times each stage of the hot path in isolation -- k-mer extract, L3
+compression, L2 owner partition, the all_to_all exchange, and Phase 2
+(sort + accumulate) -- for both `partition_impl` / `phase2_impl` settings
+('radix' = the sort-free partition engine, 'argsort' = the comparison-sort
+oracle), plus the end-to-end counter. Emits the usual CSV rows and writes
+`BENCH_phase_breakdown.json` so future PRs can diff stage-level timings
+instead of re-deriving them from end-to-end numbers.
+
+On CPU the Pallas kernels run in interpret mode, so absolute numbers are not
+TPU-representative; the *structure* (which stages dominate, how the two
+impls compare at equal semantics) is what the record tracks.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import SCALE, best_of, report
+from repro.core import encoding, fabsp
+from repro.core.aggregation import bucket_by_owner, l3_compress, plan_capacity
+from repro.core.owner import owner_pe
+from repro.core.sort import accumulate, radix_sort, sort_with_weights
+from repro.data import genome
+
+K = 13
+SIM_PES = 8            # owner-space fan-out for the local partition stages
+
+
+def _chunk_words(n_reads: int, read_len: int, heavy: float, seed: int):
+    spec = genome.ReadSetSpec(genome_bases=4 * n_reads, n_reads=n_reads,
+                              read_len=read_len, heavy_hitter_frac=heavy,
+                              seed=seed)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    return reads, encoding.extract_kmers(reads, K)
+
+
+def _time(fn, *args):
+    jitted = jax.jit(fn)
+    out = jitted(*args)          # compile outside the timed region
+    jax.tree.map(lambda x: x.block_until_ready(), out)
+
+    def go():
+        r = jitted(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), r)
+    return best_of(go)
+
+
+def run() -> None:
+    n_reads = int(1024 * SCALE)
+    read_len = 100
+    reads, words = _chunk_words(n_reads, read_len, heavy=0.3, seed=2)
+    n = int(words.shape[0])
+    owners = owner_pe(words, SIM_PES)
+    valid = jnp.ones((n,), bool)
+    cap = plan_capacity(n, SIM_PES, 1.5)
+    sent = int(jnp.iinfo(words.dtype).max)
+    total_bits = encoding.kmer_bits(K)
+    record: dict = {"workload": {"k": K, "n_reads": n_reads,
+                                 "read_len": read_len, "kmers": n,
+                                 "sim_pes": SIM_PES,
+                                 "backend": jax.default_backend()},
+                    "stages": {}}
+
+    # Stage: extract (impl-independent)
+    t_extract = _time(lambda r: encoding.extract_kmers(r, K), reads)
+    record["stages"]["extract"] = {"seconds": t_extract}
+    report("phase_breakdown.extract", t_extract, f"kmers={n}")
+
+    # Stage: L3 compress + L2 partition + phase 2, per impl
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+    for impl in ("radix", "argsort"):
+        t_l3 = _time(lambda w: l3_compress(w, K, impl=impl), words)
+
+        t_part = _time(
+            lambda w, o, v: bucket_by_owner(w, o, v, SIM_PES, cap, impl=impl),
+            words, owners, valid)
+
+        # Phase 2 over a multi-chunk-sized stream with a weights lane.
+        stream = jnp.concatenate([words] * 4)
+        wts = jnp.ones((stream.shape[0],), jnp.int32)
+        if impl == "radix":
+            def p2(s, w):
+                keys, ww = sort_with_weights(s, w, impl="radix",
+                                             total_bits=total_bits,
+                                             sentinel_val=sent)
+                return accumulate(keys, ww, sentinel_val=sent,
+                                  boundaries_impl="pallas")
+        else:
+            def p2(s, w):
+                keys, ww = sort_with_weights(s, w)
+                return accumulate(keys, ww, sentinel_val=sent)
+        t_p2 = _time(p2, stream, wts)
+
+        # End-to-end counter (includes the all_to_all; P=1 here so the
+        # exchange is a device-local identity -- the honest number needs a
+        # real mesh, which strong_scaling.py covers).
+        cfg = fabsp.DAKCConfig(k=K, chunk_reads=256, partition_impl=impl,
+                               phase2_impl=impl)
+        res = None
+
+        def e2e():
+            nonlocal res
+            res, _ = fabsp.count_kmers(reads, mesh, cfg)
+            res.unique.block_until_ready()
+        e2e()                      # compile via the executable cache
+        t_e2e = best_of(e2e)
+
+        record["stages"][impl] = {
+            "l3_compress": {"seconds": t_l3},
+            "partition": {"seconds": t_part},
+            "phase2": {"seconds": t_p2, "stream": int(stream.shape[0])},
+            "end_to_end": {"seconds": t_e2e},
+        }
+        report(f"phase_breakdown.{impl}.l3_compress", t_l3)
+        report(f"phase_breakdown.{impl}.partition", t_part,
+               f"pes={SIM_PES};cap={cap}")
+        report(f"phase_breakdown.{impl}.phase2", t_p2,
+               f"stream={int(stream.shape[0])}")
+        report(f"phase_breakdown.{impl}.end_to_end", t_e2e)
+
+    r = record["stages"]
+    speedup = (r["argsort"]["partition"]["seconds"]
+               / max(r["radix"]["partition"]["seconds"], 1e-9))
+    record["partition_speedup_radix_over_argsort"] = speedup
+    # comment line, not a CSV row: the ratio is not a timing
+    print(f"# phase_breakdown.partition radix_vs_argsort={speedup:.2f}x",
+          flush=True)
+    with open("BENCH_phase_breakdown.json", "w") as f:
+        json.dump(record, f, indent=1)

@@ -17,6 +17,7 @@ MODULES = [
     ("fig10.weak_scaling", "benchmarks.weak_scaling"),
     ("fig11.topology", "benchmarks.topology"),
     ("fig12.aggregation_ablation", "benchmarks.aggregation_ablation"),
+    ("perf.phase_breakdown", "benchmarks.phase_breakdown"),
     ("fig13.tuning", "benchmarks.tuning"),
     ("tab3+fig2.memory_overhead", "benchmarks.memory_overhead"),
     ("fig3+fig4+fig5.model_validation", "benchmarks.model_validation"),

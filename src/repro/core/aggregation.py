@@ -19,6 +19,16 @@ destination's fill are the sort-to-the-end sentinel; overflow (entries dropped
 because a destination exceeded capacity) is *counted and returned* -- callers
 either assert it is zero (tests; uniform/hash-spread traffic) or run the
 overflow round (`fabsp.count_kmers` does).
+
+Data path (the L2 hot loop): `bucket_by_owner` is **sort-free** by default.
+The owner key has only P distinct values, so packing the tile via a
+comparison `argsort` (O(n log^2 n) bitonic on TPU) is replaced by one stable
+radix partition -- per-tile Pallas owner histogram, exclusive-prefix offsets,
+one scatter (kernels/radix_partition.py, `impl='radix'`). The partition is
+multi-lane: an optional int32 counts lane (HEAVY {kmer, count} packets)
+rides the same plan, so NORMAL and HEAVY traffic share one bucketing code
+path. `impl='argsort'` keeps the stable-argsort oracle for parity tests; the
+two produce bit-identical tiles.
 """
 
 from __future__ import annotations
@@ -31,13 +41,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import encoding
-from repro.core.sort import accumulate, sort_with_weights
+from repro.core.sort import accumulate, radix_sort
+from repro.kernels import ops
 
 
 class BucketResult(NamedTuple):
     tile: jax.Array       # (P, capacity) words, sentinel-padded
     fill: jax.Array       # (P,) int32 valid entries per destination
     overflow: jax.Array   # () int32 dropped entries (capacity exceeded)
+    counts: Optional[jax.Array] = None  # (P, capacity) int32 lane (HEAVY)
 
 
 def plan_capacity(num_items: int, num_pes: int, slack: float = 1.5,
@@ -53,46 +65,91 @@ def plan_capacity(num_items: int, num_pes: int, slack: float = 1.5,
     return max(align, ((cap + align - 1) // align) * align)
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4))
+@functools.partial(jax.jit, static_argnums=(3, 4), static_argnames=("impl",))
 def bucket_by_owner(words: jax.Array, owners: jax.Array, valid: jax.Array,
-                    num_pes: int, capacity: int) -> BucketResult:
+                    num_pes: int, capacity: int,
+                    counts: Optional[jax.Array] = None, *,
+                    impl: str = "radix") -> BucketResult:
     """Pack words into a destination-major (P, capacity) tile (the L2 layer).
 
     words:  (n,) payload words (k-mers, possibly count-packed)
     owners: (n,) int32 destination PE per word
     valid:  (n,) bool; invalid entries are not routed
+    counts: optional (n,) int32 second lane (HEAVY {kmer, count} packets);
+            partitioned with the same plan, returned as `BucketResult.counts`
+            (zero-padded where the words tile holds the sentinel)
+    impl:   'radix' (sort-free partition, default) | 'argsort' (jnp oracle)
+
+    On overflow (a destination receiving more than `capacity` entries) the
+    first `capacity` entries in stream order are kept, identically for both
+    implementations.
     """
     n = words.shape[0]
     sent = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
-    key = jnp.where(valid, owners, num_pes)              # invalid sorts last
-    order = jnp.argsort(key, stable=True)
-    s_owner = key[order]
-    s_words = jnp.where(valid[order], words[order], sent)
-    hist = jnp.bincount(jnp.minimum(s_owner, num_pes), length=num_pes + 1)[:num_pes]
-    offsets = jnp.concatenate([jnp.zeros((1,), hist.dtype), jnp.cumsum(hist)[:-1]])
-    within = jnp.arange(n) - offsets[jnp.minimum(s_owner, num_pes - 1)]
-    ok = (s_owner < num_pes) & (within < capacity)
-    tile = jnp.full((num_pes, capacity), sent, words.dtype)
-    rows = jnp.where(ok, s_owner, num_pes)               # row P -> dropped
-    cols = jnp.where(ok, within, 0)
-    tile = tile.at[rows, cols].set(s_words, mode="drop")
+    key = jnp.where(valid, owners.astype(jnp.int32), num_pes)  # invalid last
+    if impl == "radix":
+        pos, totals = ops.radix_partition_plan(key, num_pes + 1)
+        hist = totals[:num_pes]
+        starts = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(totals)[:-1].astype(jnp.int32)])
+        within = pos - starts[key]                 # stable rank within owner
+        ok = valid & (within < capacity)
+        dst = jnp.where(ok, key * capacity + within, num_pes * capacity)
+        flat = jnp.full((num_pes * capacity,), sent, words.dtype)
+        tile = flat.at[dst].set(jnp.where(valid, words, sent),
+                                mode="drop").reshape(num_pes, capacity)
+        ctile = None
+        if counts is not None:
+            ctile = jnp.zeros((num_pes * capacity,), jnp.int32).at[dst].set(
+                jnp.where(valid, counts.astype(jnp.int32), 0),
+                mode="drop").reshape(num_pes, capacity)
+    elif impl == "argsort":
+        order = jnp.argsort(key, stable=True)
+        s_owner = key[order]
+        s_words = jnp.where(valid[order], words[order], sent)
+        hist = jnp.bincount(jnp.minimum(s_owner, num_pes),
+                            length=num_pes + 1)[:num_pes]
+        offsets = jnp.concatenate([jnp.zeros((1,), hist.dtype),
+                                   jnp.cumsum(hist)[:-1]])
+        within = jnp.arange(n) - offsets[jnp.minimum(s_owner, num_pes - 1)]
+        ok = (s_owner < num_pes) & (within < capacity)
+        tile = jnp.full((num_pes, capacity), sent, words.dtype)
+        rows = jnp.where(ok, s_owner, num_pes)           # row P -> dropped
+        cols = jnp.where(ok, within, 0)
+        tile = tile.at[rows, cols].set(s_words, mode="drop")
+        ctile = None
+        if counts is not None:
+            s_counts = jnp.where(valid[order], counts[order].astype(jnp.int32),
+                                 0)
+            ctile = jnp.zeros((num_pes, capacity), jnp.int32)
+            ctile = ctile.at[rows, cols].set(s_counts, mode="drop")
+    else:
+        raise ValueError(f"unknown bucket impl {impl!r}")
     fill = jnp.minimum(hist, capacity).astype(jnp.int32)
     overflow = jnp.sum(jnp.maximum(hist - capacity, 0)).astype(jnp.int32)
-    return BucketResult(tile=tile, fill=fill, overflow=overflow)
+    return BucketResult(tile=tile, fill=fill, overflow=overflow, counts=ctile)
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def l3_compress(words: jax.Array, k: int, bits_per_symbol: int = 2
-                ) -> Tuple[jax.Array, jax.Array]:
+@functools.partial(jax.jit, static_argnums=(1, 2), static_argnames=("impl",))
+def l3_compress(words: jax.Array, k: int, bits_per_symbol: int = 2, *,
+                impl: str = "radix") -> Tuple[jax.Array, jax.Array]:
     """L3: sort+accumulate a local block, pack counts into spare high bits.
 
     words: (C3,) raw k-mer words (sentinel for padding).
     returns (packed, valid): (C3,) count-packed words (sentinel-padded) and
     their validity mask. len(valid.sum()) == number of *distinct* k-mers in
     the block -- the compression the paper's Fig. 12 measures.
+    impl: 'radix' sorts the block with the sort-free partition engine and
+    sweeps boundaries with the Pallas kernel; 'argsort' is the jnp oracle.
     """
     sent = int(jnp.iinfo(words.dtype).max)
-    acc = accumulate(jnp.sort(words), sentinel_val=sent)
+    if impl == "radix":
+        swords = radix_sort(words, encoding.kmer_bits(k, bits_per_symbol),
+                            sentinel_val=sent)
+        acc = accumulate(swords, sentinel_val=sent, boundaries_impl="pallas")
+    else:
+        acc = accumulate(jnp.sort(words), sentinel_val=sent)
     valid = jnp.arange(words.shape[0]) < acc.num_unique
     packed = jnp.where(
         valid,

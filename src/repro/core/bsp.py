@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import encoding
+from repro.core import compat, encoding
 from repro.core.aggregation import bucket_by_owner, plan_capacity
 from repro.core.owner import owner_pe
 from repro.core.sort import AccumResult, accumulate
@@ -52,9 +52,9 @@ def _batch_round(batch_local, *, cfg: BSPConfig, num_pes: int, cap: int,
     if cfg.canonical:
         words = encoding.canonical(words, cfg.k)
     owners = owner_pe(words, num_pes)
-    tile, fill, ovf = bucket_by_owner(words, owners,
-                                      jnp.ones(words.shape, bool),
-                                      num_pes, cap)
+    tile, fill, ovf, _ = bucket_by_owner(words, owners,
+                                         jnp.ones(words.shape, bool),
+                                         num_pes, cap)
     recv = jax.lax.all_to_all(tile, axis_name, 0, 0, tiled=True)
     return recv, (jax.lax.psum(ovf, axis_name),
                   jax.lax.psum(fill.sum(), axis_name))
@@ -88,16 +88,14 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: BSPConfig,
     cap = plan_capacity(batch_kmers, num_pes, cfg.slack)
 
     spec = P(axis)
-    round_fn = jax.jit(jax.shard_map(
+    round_fn = jax.jit(compat.shard_map(
         functools.partial(_batch_round, cfg=cfg, num_pes=num_pes, cap=cap,
                           axis_name=axis),
-        mesh=mesh, in_specs=(spec,), out_specs=(spec, (P(), P())),
-        check_vma=False))
-    final_fn = jax.jit(jax.shard_map(
+        mesh=mesh, in_specs=(spec,), out_specs=(spec, (P(), P()))))
+    final_fn = jax.jit(compat.shard_map(
         functools.partial(_final_round, axis_name=axis),
         mesh=mesh, in_specs=(spec,),
-        out_specs=AccumResult(unique=spec, counts=spec, num_unique=spec),
-        check_vma=False))
+        out_specs=AccumResult(unique=spec, counts=spec, num_unique=spec)))
 
     # reads arrive PE-major: reshape host-side into per-batch global slabs.
     reads_r = reads.reshape(num_pes, n_batches, cfg.batch_reads, m)

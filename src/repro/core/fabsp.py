@@ -29,6 +29,19 @@ Heavy-hitter handling (L3): two wire formats, selected by `l3_mode`:
 Topologies (paper Table II): '1d' = direct all_to_all over the full axis;
 '2d' = two-stage all_to_all over a factorized (row, col) device grid -- the
 2D-HyperX analogue, trading an extra hop for O(sqrt(P)) tile memory.
+
+Sort-free hot path: with the default `partition_impl='radix'` /
+`phase2_impl='radix'` knobs the whole counting pipeline lowers without a
+single HLO `sort` -- L2 bucketing is a stable radix partition
+(aggregation.bucket_by_owner), and Phase 2 plus the L3 chunk-local
+compressors run the LSD radix sort built on the same partition engine
+(core/sort.py, kernels/radix_partition.py). Setting both knobs to 'argsort'
+restores the comparison-sort oracle; results are bit-identical.
+
+Executable cache: `count_kmers` memoizes the jitted shard_map executable on
+(cfg, mesh, axis names, reads shape/dtype, slack), so repeated same-shape
+calls -- including the overflow-retry round, benchmarks' best-of-3 loops and
+serving traffic -- pay tracing + compilation exactly once per shape.
 """
 
 from __future__ import annotations
@@ -42,10 +55,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import encoding
+from repro.core import compat, encoding
 from repro.core.aggregation import bucket_by_owner, plan_capacity
 from repro.core.owner import owner_pe
-from repro.core.sort import AccumResult, accumulate, sort_with_weights
+from repro.core.sort import (AccumResult, accumulate, radix_sort,
+                             sort_with_weights)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +74,17 @@ class DAKCConfig:
     topology: str = "1d"          # '1d' | '2d'
     canonical: bool = False
     bits_per_symbol: int = 2
+    # Implementation selectors ('radix' = sort-free partition engine,
+    # 'argsort' = jnp comparison-sort oracle; bit-identical results).
+    partition_impl: str = "radix"  # L2 bucketing (bucket_by_owner)
+    phase2_impl: str = "radix"     # Phase-2 sort + L3 chunk-local compressors
+
+    def __post_init__(self):
+        for knob in ("partition_impl", "phase2_impl"):
+            v = getattr(self, knob)
+            if v not in ("radix", "argsort"):
+                raise ValueError(
+                    f"{knob} must be 'radix' or 'argsort', got {v!r}")
 
 
 class DAKCStats(NamedTuple):
@@ -79,31 +104,8 @@ def _resolve_l3_mode(cfg: DAKCConfig, chunk_kmers: int) -> str:
     return "packed" if cap >= chunk_kmers else "dual"
 
 
-def _bucket_pair(words, counts, owners, valid, num_pes, capacity):
-    """bucket_by_owner for a (word, count) pair of lanes (HEAVY packets)."""
-    n = words.shape[0]
-    sent = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
-    key = jnp.where(valid, owners, num_pes)
-    order = jnp.argsort(key, stable=True)
-    s_owner = key[order]
-    s_words = jnp.where(valid[order], words[order], sent)
-    s_counts = jnp.where(valid[order], counts[order], 0)
-    hist = jnp.bincount(jnp.minimum(s_owner, num_pes), length=num_pes + 1)[:num_pes]
-    offsets = jnp.concatenate([jnp.zeros((1,), hist.dtype), jnp.cumsum(hist)[:-1]])
-    within = jnp.arange(n) - offsets[jnp.minimum(s_owner, num_pes - 1)]
-    ok = (s_owner < num_pes) & (within < capacity)
-    rows = jnp.where(ok, s_owner, num_pes)
-    cols = jnp.where(ok, within, 0)
-    wtile = jnp.full((num_pes, capacity), sent, words.dtype)
-    wtile = wtile.at[rows, cols].set(s_words, mode="drop")
-    ctile = jnp.zeros((num_pes, capacity), jnp.int32)
-    ctile = ctile.at[rows, cols].set(s_counts, mode="drop")
-    overflow = jnp.sum(jnp.maximum(hist - capacity, 0)).astype(jnp.int32)
-    fill = jnp.minimum(hist, capacity).astype(jnp.int32)
-    return wtile, ctile, fill, overflow
-
-
-def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int):
+def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int,
+                   impl: str = "radix"):
     """Alg. 4 AddToL2Buffer: local accumulate -> NORMAL dups + HEAVY pairs.
 
     Returns (normal_words, normal_valid, heavy_words, heavy_counts,
@@ -111,7 +113,14 @@ def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int):
     """
     sent = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
     masked = jnp.where(valid, words, sent)
-    acc = accumulate(jnp.sort(masked), sentinel_val=int(jnp.iinfo(words.dtype).max))
+    sent_i = int(jnp.iinfo(words.dtype).max)
+    if impl == "radix":
+        acc = accumulate(
+            radix_sort(masked, encoding.kmer_bits(k, bps),
+                       sentinel_val=sent_i),
+            sentinel_val=sent_i, boundaries_impl="pallas")
+    else:
+        acc = accumulate(jnp.sort(masked), sentinel_val=sent_i)
     n = words.shape[0]
     slot_valid = jnp.arange(n) < acc.num_unique
     cnt = acc.counts
@@ -128,25 +137,23 @@ def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int):
 
 
 def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
-           grid, k, bps):
+           grid, k, bps, impl="radix"):
     """Bucket + (possibly hierarchical) all_to_all for one lane set.
 
     Returns (recv_words, recv_counts_or_none, sent_valid, wire_words, overflow).
     `grid` is None for 1d or (rows, cols) for the 2d topology.
-    counts lane, when present, follows the words through every stage.
+    counts lane, when present, follows the words through every stage
+    (one multi-lane partition per hop; see aggregation.bucket_by_owner).
     """
     mask = encoding.kmer_mask(k, bps)
 
     def exchange(words_, counts_, valid_, owners, pes, cap, axis):
-        if counts_ is None:
-            tile, fill, ovf = bucket_by_owner(words_, owners, valid_, pes, cap)
-            recv = jax.lax.all_to_all(tile, axis, 0, 0, tiled=True)
-            return recv, None, fill, ovf
-        wtile, ctile, fill, ovf = _bucket_pair(words_, counts_, owners, valid_,
-                                               pes, cap)
-        recvw = jax.lax.all_to_all(wtile, axis, 0, 0, tiled=True)
-        recvc = jax.lax.all_to_all(ctile, axis, 0, 0, tiled=True)
-        return recvw, recvc, fill, ovf
+        br = bucket_by_owner(words_, owners, valid_, pes, cap,
+                             counts=counts_, impl=impl)
+        recvw = jax.lax.all_to_all(br.tile, axis, 0, 0, tiled=True)
+        recvc = None if br.counts is None else jax.lax.all_to_all(
+            br.counts, axis, 0, 0, tiled=True)
+        return recvw, recvc, br.fill, br.overflow
 
     if grid is None:
         owners = owner_pe(words & mask, num_pes)
@@ -193,23 +200,27 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
 
     if mode == "packed":
         from repro.core.aggregation import l3_compress
-        payload, pvalid = l3_compress(words, k, bps)
+        payload, pvalid = l3_compress(words, k, bps, impl=cfg.phase2_impl)
         rw, _, sentn, wire, ovf = _route(payload, None, pvalid,
                                          num_pes=num_pes, capacity=cap_n,
                                          axis_names=axis_names, grid=grid,
-                                         k=k, bps=bps)
+                                         k=k, bps=bps,
+                                         impl=cfg.partition_impl)
         return (rw, None, None), (raw, sentn, wire, ovf)
 
     if mode == "dual":
-        nw, nv, hw, hc, hv = _l3_split_dual(words, valid, k, bps)
+        nw, nv, hw, hc, hv = _l3_split_dual(words, valid, k, bps,
+                                            impl=cfg.phase2_impl)
         rnw, _, sentn, wire_n, ovf_n = _route(nw, None, nv, num_pes=num_pes,
                                               capacity=cap_n,
                                               axis_names=axis_names, grid=grid,
-                                              k=k, bps=bps)
+                                              k=k, bps=bps,
+                                              impl=cfg.partition_impl)
         rhw, rhc, senth, wire_h, ovf_h = _route(hw, hc, hv, num_pes=num_pes,
                                                 capacity=cap_h,
                                                 axis_names=axis_names,
-                                                grid=grid, k=k, bps=bps)
+                                                grid=grid, k=k, bps=bps,
+                                                impl=cfg.partition_impl)
         # HEAVY wire carries a word + an int32 count per slot.
         word_b = jnp.iinfo(nw.dtype).bits // 8
         wire = wire_n + (wire_h * (word_b + 4)) // word_b
@@ -218,21 +229,32 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
     # mode == 'none': BSP-style raw words, single lane, no compression.
     rw, _, sentn, wire, ovf = _route(words, None, valid, num_pes=num_pes,
                                      capacity=cap_n, axis_names=axis_names,
-                                     grid=grid, k=k, bps=bps)
+                                     grid=grid, k=k, bps=bps,
+                                     impl=cfg.partition_impl)
     return (rw, None, None), (raw, sentn, wire, ovf)
 
 
 def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
             mode: str) -> AccumResult:
-    """Sort + accumulate the received stream (paper Phase 2)."""
+    """Sort + accumulate the received stream (paper Phase 2).
+
+    phase2_impl='radix': ONE stable LSD radix sort of the full stream
+    (ceil(2k / 8) counting-partition passes over the Pallas engine, weights
+    riding the same scatters) followed by the Pallas boundary sweep -- no
+    comparison sort, no per-lane re-sorts. 'argsort' keeps the jnp oracle.
+    """
     k, bps = cfg.k, cfg.bits_per_symbol
+    impl = cfg.phase2_impl
+    total_bits = encoding.kmer_bits(k, bps)
+    bimpl = "pallas" if impl == "radix" else "jnp"
     sent = int(jnp.iinfo(recv_normal.dtype).max)
     flat = recv_normal.reshape(-1)
     if mode == "packed":
         from repro.core.aggregation import l3_decompress
         kmers, weights = l3_decompress(flat, k, bps)
-        keys, w = sort_with_weights(kmers, weights)
-        return accumulate(keys, w, sentinel_val=sent)
+        keys, w = sort_with_weights(kmers, weights, impl=impl,
+                                    total_bits=total_bits, sentinel_val=sent)
+        return accumulate(keys, w, sentinel_val=sent, boundaries_impl=bimpl)
     if mode == "dual":
         hflat = recv_heavy.reshape(-1)
         hcnt = recv_heavy_counts.reshape(-1)
@@ -240,9 +262,14 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
         weights = jnp.concatenate(
             [(flat != flat.dtype.type(sent)).astype(jnp.int32),
              jnp.where(hflat != hflat.dtype.type(sent), hcnt, 0)])
-        keys, w = sort_with_weights(keys, weights)
-        return accumulate(keys, w, sentinel_val=sent)
-    return accumulate(jnp.sort(flat), sentinel_val=sent)
+        keys, w = sort_with_weights(keys, weights, impl=impl,
+                                    total_bits=total_bits, sentinel_val=sent)
+        return accumulate(keys, w, sentinel_val=sent, boundaries_impl=bimpl)
+    if impl == "radix":
+        skeys = radix_sort(flat, total_bits, sentinel_val=sent)
+    else:
+        skeys = jnp.sort(flat)
+    return accumulate(skeys, sentinel_val=sent, boundaries_impl=bimpl)
 
 
 def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
@@ -281,6 +308,54 @@ def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
                        num_unique=result.num_unique.reshape(1)), stats
 
 
+# Jitted shard_map executables, keyed on everything that shapes the trace:
+# (cfg, mesh, axis names, reads shape/dtype, resolved slack). A jax.jit
+# callable built fresh on every count_kmers call re-traces every time; the
+# memo makes repeated same-shape calls (benchmark loops, serving traffic,
+# the overflow-retry round at its doubled slack) reuse the compiled
+# executable. Bounded in practice by the handful of distinct workload shapes
+# a process sees; `clear_executable_cache` resets it (tests).
+_EXEC_CACHE: dict = {}
+
+
+def clear_executable_cache() -> None:
+    _EXEC_CACHE.clear()
+
+
+def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
+                         dtype_name: str, slack: float):
+    key = (cfg, mesh, axis_names, shape, dtype_name, slack)
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    sizes = [mesh.shape[a] for a in axis_names]
+    num_pes = math.prod(sizes)
+    if cfg.topology == "2d":
+        if len(axis_names) != 2:
+            raise ValueError("2d topology needs two axis names (row, col)")
+        grid = (sizes[0], sizes[1])
+    else:
+        grid = None
+    n_reads, m = shape
+    chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
+    mode = _resolve_l3_mode(cfg, chunk_kmers)
+    # 'dual' NORMAL lane can carry up to 2x duplicated entries.
+    n_items = chunk_kmers * (2 if mode == "dual" else 1)
+    cap_n = plan_capacity(n_items, num_pes, slack)
+    cap_h = max(8, int(cap_n * cfg.heavy_frac))
+
+    spec = P(axis_names if len(axis_names) > 1 else axis_names[0])
+    fn = jax.jit(compat.shard_map(
+        functools.partial(_local_count, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
+                          cap_h=cap_h, mode=mode, axis_names=axis_names,
+                          grid=grid),
+        mesh=mesh, in_specs=(spec,),
+        out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
+                   (P(), P(), P(), P()))))
+    _EXEC_CACHE[key] = fn
+    return fn
+
+
 def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
                 axis_names: Sequence[str] = ("pe",),
                 _slack_override: Optional[float] = None
@@ -294,35 +369,13 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
 
     Capacity overflow (possible only under adversarial skew with L3 off) is
     detected post-hoc and retried with doubled slack -- the 'overflow round'.
+    The jitted executable is memoized per (cfg, mesh, shape, slack); see
+    `_counting_executable`.
     """
     axis_names = tuple(axis_names)
-    sizes = [mesh.shape[a] for a in axis_names]
-    num_pes = math.prod(sizes)
-    if cfg.topology == "2d":
-        if len(axis_names) != 2:
-            raise ValueError("2d topology needs two axis names (row, col)")
-        grid = (sizes[0], sizes[1])
-    else:
-        grid = None
-
-    n_reads, m = reads.shape
-    chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
-    mode = _resolve_l3_mode(cfg, chunk_kmers)
     slack = _slack_override if _slack_override is not None else cfg.slack
-    # 'dual' NORMAL lane can carry up to 2x duplicated entries.
-    n_items = chunk_kmers * (2 if mode == "dual" else 1)
-    cap_n = plan_capacity(n_items, num_pes, slack)
-    cap_h = max(8, int(cap_n * cfg.heavy_frac))
-
-    spec = P(axis_names if len(axis_names) > 1 else axis_names[0])
-    fn = jax.jit(jax.shard_map(
-        functools.partial(_local_count, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
-                          cap_h=cap_h, mode=mode, axis_names=axis_names,
-                          grid=grid),
-        mesh=mesh, in_specs=(spec,),
-        out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
-                   (P(), P(), P(), P())),
-        check_vma=False))
+    fn = _counting_executable(cfg, mesh, axis_names, tuple(reads.shape),
+                              str(reads.dtype), slack)
 
     result, (overflow, sent_w, wire_b, raw) = fn(reads)
     stats = DAKCStats(overflow=overflow, sent_words=sent_w, wire_bytes=wire_b,

@@ -1,26 +1,37 @@
 """Sorting and accumulation (paper Alg. 1 `Sort` + `Accumulate`, Sec. V Phase 2).
 
-The paper's Phase 2 sorts the received k-mers with an in-place radix sort and
-sweeps the sorted array to produce {k-mer, count} pairs. Here:
+The paper's Phase 2 sorts the received k-mers with an in-place LSD radix sort
+and sweeps the sorted array to produce {k-mer, count} pairs. The production
+data path here is **sort-free in the comparison sense**: every pass of
+`radix_sort` / `radix_sort_with_weights` is a stable counting partition built
+on the Pallas radix-partition engine (kernels/radix_partition.py) -- per-tile
+digit histogram, exclusive-prefix offsets, one scatter -- so the lowered HLO
+contains no `sort` op and the pass count matches the analytical model's
+ceil(total_bits / 8) at the default 8-bit digit (Eq. 13).
 
-- `sort_words` is the production path (XLA's sort; on TPU this lowers to a
-  bitonic/merge network scheduled by the compiler).
-- `radix_sort` is the explicit LSD counting-sort implementation matching the
-  paper's algorithm and analytical model (ceil(bits/digit_bits) passes, each a
-  histogram + stable scatter). Its per-tile histogram hot spot is also
-  implemented as a Pallas kernel (kernels/radix_hist.py).
-- `accumulate` is the sorted-run sweep. All shapes are static: outputs are
-  input-length arrays plus a `num_unique` scalar; invalid slots hold the
-  sentinel/zero. Padding entries must carry the sort-to-the-end sentinel.
+- `radix_sort(_with_weights)`: LSD passes over the partition engine. An
+  optional sentinel routes padding to a dedicated tail bucket every pass, so
+  sentinel-padded streams come out `[valid ascending..., sentinels...]`
+  without spending key bits on the sentinel (a poly-T k-mer whose masked bits
+  equal the sentinel's low bits is still ordered correctly).
+- `sort_with_weights(impl=)`: 'argsort' is the jnp oracle (stable XLA sort,
+  kept for parity tests and `merge_accum`); 'radix' routes through the
+  engine.
+- `accumulate`: the sorted-run sweep; `boundaries_impl='pallas'` computes the
+  run-start flags with the `segment_boundaries_pallas` kernel (the
+  memory-bound compare pass of Eq. 13), `'jnp'` stays the oracle. All shapes
+  are static: outputs are input-length arrays plus a `num_unique` scalar.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 
 class AccumResult(NamedTuple):
@@ -33,47 +44,114 @@ def sort_words(words: jax.Array) -> jax.Array:
     return jnp.sort(words)
 
 
-def sort_with_weights(keys: jax.Array, weights: jax.Array):
-    """Stable sort of keys carrying an int32 weight lane (L3-decompressed data)."""
+def _partition_tile(n: int) -> int:
+    """Tile for the segment-boundaries kernel (accumulate pads to it)."""
+    return min(1024, max(8, n))
+
+
+def _radix_sort_lanes(keys: jax.Array, lanes: Sequence[jax.Array],
+                      total_bits: int, digit_bits: int,
+                      sentinel_val: Optional[int]):
+    """LSD radix sort of `keys` with parallel lanes, via the partition engine.
+
+    When `sentinel_val` is given, elements equal to it (full-word compare)
+    are routed to a dedicated tail bucket on every pass: they stay stably at
+    the end and never mix with valid keys whose low `total_bits` happen to
+    collide with the sentinel's.
+    """
+    radix = 1 << digit_bits
+    num_buckets = radix + (1 if sentinel_val is not None else 0)
+    dt = keys.dtype.type
+    lanes = tuple(lanes)
+    for shift in range(0, total_bits, digit_bits):
+        digit = ((keys >> dt(shift)) & dt(radix - 1)).astype(jnp.int32)
+        if sentinel_val is not None:
+            digit = jnp.where(keys == dt(sentinel_val), radix, digit)
+        pos, _ = ops.radix_partition_plan(digit, num_buckets)
+        keys = jnp.zeros_like(keys).at[pos].set(keys)
+        lanes = tuple(jnp.zeros_like(l).at[pos].set(l) for l in lanes)
+    return keys, lanes
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2),
+                   static_argnames=("total_bits", "digit_bits",
+                                    "sentinel_val", "impl"))
+def radix_sort(words: jax.Array, total_bits: int, digit_bits: int = 8,
+               *, sentinel_val: Optional[int] = None,
+               impl: str = "radix") -> jax.Array:
+    """LSD radix sort by the low `total_bits` of each word (paper Phase-2 sort).
+
+    Each pass is a stable counting partition (per-tile Pallas histogram +
+    rank, one scatter) -- O(n) work and O(tile * radix) VMEM per pass, versus
+    the O(n * radix) whole-stream one-hot of the old implementation. Pass
+    count is ceil(total_bits / digit_bits); the 8-bit default matches the
+    analytical model. Bits above `total_bits` must be equal across elements
+    (they are ignored by the passes).
+    """
+    if impl == "argsort":
+        return jnp.sort(words)
+    if impl != "radix":
+        raise ValueError(f"unknown sort impl {impl!r}")
+    out, _ = _radix_sort_lanes(words, (), total_bits, digit_bits,
+                               sentinel_val)
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3),
+                   static_argnames=("total_bits", "digit_bits",
+                                    "sentinel_val"))
+def radix_sort_with_weights(keys: jax.Array, weights: jax.Array,
+                            total_bits: int, digit_bits: int = 8, *,
+                            sentinel_val: Optional[int] = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Stable radix sort of (key, weight) pairs by the low `total_bits`.
+
+    Sentinel-padded streams (padding == `sentinel_val`, the full-word
+    all-ones) come out `[valid ascending..., sentinels...]`, the layout
+    `accumulate` expects, regardless of whether a valid key's masked bits
+    collide with the sentinel's low bits.
+    """
+    keys, (w,) = _radix_sort_lanes(keys, (weights,), total_bits, digit_bits,
+                                   sentinel_val)
+    return keys, w
+
+
+def sort_with_weights(keys: jax.Array, weights: jax.Array, *,
+                      impl: str = "argsort",
+                      total_bits: Optional[int] = None,
+                      digit_bits: int = 8,
+                      sentinel_val: Optional[int] = None):
+    """Stable sort of keys carrying an int32 weight lane.
+
+    impl='argsort' (default) is the jnp oracle; impl='radix' requires
+    `total_bits` (and normally `sentinel_val`) and routes through the
+    sort-free partition engine.
+    """
+    if impl == "radix":
+        if total_bits is None:
+            raise ValueError("impl='radix' needs total_bits")
+        return radix_sort_with_weights(keys, weights, total_bits, digit_bits,
+                                       sentinel_val=sentinel_val)
+    if impl != "argsort":
+        raise ValueError(f"unknown sort impl {impl!r}")
     order = jnp.argsort(keys, stable=True)
     return keys[order], weights[order]
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def radix_sort(words: jax.Array, total_bits: int, digit_bits: int = 4) -> jax.Array:
-    """LSD radix sort via stable counting-sort passes (paper's Phase-2 sort).
-
-    Each pass ranks elements with a one-hot cumulative sum over the digit
-    alphabet (R = 2**digit_bits lanes); memory is n*R int32, so the default
-    digit is 4 bits. Matches the analytical model's pass count
-    ceil(total_bits / (8*digit_bytes)) when digit_bits=8.
-    """
-    n = words.shape[0]
-    radix = 1 << digit_bits
-    dt = words.dtype.type
-    out = words
-    for shift in range(0, total_bits, digit_bits):
-        digits = ((out >> dt(shift)) & dt(radix - 1)).astype(jnp.int32)
-        onehot = jax.nn.one_hot(digits, radix, dtype=jnp.int32)
-        within = jnp.cumsum(onehot, axis=0) - onehot        # rank among equal digits
-        hist = jnp.sum(onehot, axis=0)
-        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(hist)[:-1]])
-        pos = offsets[digits] + jnp.take_along_axis(
-            within, digits[:, None], axis=1)[:, 0]
-        out = jnp.zeros_like(out).at[pos].set(out)
-    return out
-
-
-@functools.partial(jax.jit, static_argnames=("sentinel_val",))
+@functools.partial(jax.jit, static_argnames=("sentinel_val",
+                                             "boundaries_impl"))
 def accumulate(sorted_keys: jax.Array,
                weights: Optional[jax.Array] = None,
                *,
-               sentinel_val) -> AccumResult:
+               sentinel_val,
+               boundaries_impl: str = "jnp") -> AccumResult:
     """Sweep a sorted array into (unique keys, counts) -- paper's `Accumulate`.
 
     sorted_keys: ascending, padding == sentinel_val (sorts last).
     weights: optional int32 per-entry multiplicity (L3 HEAVY packets carry
              count > 1); defaults to 1 per entry.
+    boundaries_impl: 'jnp' computes run-start flags inline; 'pallas' uses the
+             segment_boundaries kernel (the streaming compare pass).
     """
     n = sorted_keys.shape[0]
     sent = sorted_keys.dtype.type(sentinel_val)
@@ -82,11 +160,22 @@ def accumulate(sorted_keys: jax.Array,
         w = valid.astype(jnp.int32)
     else:
         w = jnp.where(valid, weights.astype(jnp.int32), 0)
-    prev = jnp.concatenate([jnp.full((1,), sent, sorted_keys.dtype),
-                            sorted_keys[:-1]])
-    # First element of each run of equal keys; sentinel-padding never starts one
-    # (prev sentinel trick makes index 0 a boundary iff it is valid).
-    is_new = valid & (sorted_keys != prev)
+    if boundaries_impl == "pallas":
+        tile = _partition_tile(n)
+        pad = (-n) % tile
+        padded = jnp.concatenate(
+            [sorted_keys, jnp.full((pad,), sent, sorted_keys.dtype)]) \
+            if pad else sorted_keys
+        is_new = ops.segment_boundaries(padded, sentinel_val=int(sentinel_val),
+                                        tile=tile)[:n]
+    elif boundaries_impl != "jnp":
+        raise ValueError(f"unknown boundaries impl {boundaries_impl!r}")
+    else:
+        prev = jnp.concatenate([jnp.full((1,), sent, sorted_keys.dtype),
+                                sorted_keys[:-1]])
+        # First element of each run of equal keys; sentinel-padding never
+        # starts one (prev sentinel trick makes index 0 a boundary iff valid).
+        is_new = valid & (sorted_keys != prev)
     seg_ids = jnp.cumsum(is_new.astype(jnp.int32)) - 1      # -1 before first run
     seg_safe = jnp.maximum(seg_ids, 0)
     counts = jax.ops.segment_sum(w, seg_safe, num_segments=n)

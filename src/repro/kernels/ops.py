@@ -20,6 +20,9 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.kmer_extract import kmer_extract_pallas
 from repro.kernels.radix_hist import radix_hist_pallas
+from repro.kernels.radix_partition import (bucket_hist_pallas,
+                                           bucket_positions_pallas,
+                                           partition_plan)
 from repro.kernels.segment_count import segment_boundaries_pallas
 
 
@@ -47,6 +50,27 @@ def segment_boundaries(sorted_keys: jax.Array, *, sentinel_val: int,
                        tile: int = 1024) -> jax.Array:
     return segment_boundaries_pallas(sorted_keys, sentinel_val, tile=tile,
                                      interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def bucket_hist(buckets: jax.Array, num_buckets: int,
+                tile: int = 1024) -> jax.Array:
+    return bucket_hist_pallas(buckets, num_buckets, tile,
+                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def bucket_positions(buckets: jax.Array, base: jax.Array,
+                     tile: int = 1024) -> jax.Array:
+    return bucket_positions_pallas(buckets, base, tile,
+                                   interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def radix_partition_plan(buckets: jax.Array, num_buckets: int,
+                         tile: int = 1024):
+    """(positions, per-bucket totals) of the stable sort-free partition."""
+    return partition_plan(buckets, num_buckets, tile, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -1,0 +1,147 @@
+"""Pallas TPU kernels: sort-free radix partition (the L2 routing engine).
+
+The owner key of a routed k-mer has only P (or, for a radix-sort digit pass,
+R = 2**digit_bits) distinct values, so a comparison sort of the stream is pure
+waste: a counting/radix partition moves every element exactly once. This is
+the KMC/Gerbil bucket-partition insight, and it is what the paper's Phase-2
+analytical model (Eq. 13) charges for -- streaming sweeps, not O(n log^2 n)
+bitonic networks.
+
+Two kernels, composed by `partition_plan`:
+
+1. `bucket_hist_pallas`: per-tile bucket histogram. Each grid instance
+   histograms a VMEM-resident tile of int32 bucket ids via a broadcast
+   compare against a 2-D iota and a lane reduction -- scatter-free, VPU-only
+   (same structure as radix_hist.py, generalized to arbitrary bucket counts).
+2. `bucket_positions_pallas`: per-tile stable rank + global offset. The
+   exclusive prefix over (bucket-major, then tile-major) histograms is a tiny
+   (T, B) XLA cumsum; each instance then computes every element's within-tile
+   rank among equal buckets (one-hot cumsum over the *tile*, so the working
+   set is O(tile * B) VMEM, never O(n * B) HBM) and adds its tile's base
+   offset. The emitted positions are a permutation: one XLA scatter finishes
+   the partition. No sort primitive appears anywhere in the lowering.
+
+Stability: ranks are computed in input order within a tile and tiles are
+offset in input order, so the partition is stable -- bit-identical to a
+stable-argsort oracle (kernels/ref.py) and safe for LSD radix passes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# tile * num_buckets ceiling for partition_plan's auto-clamp: 512K int32
+# elements = 2 MB per (tile, B) temp, ~6 MB live across the 3 temps.
+_VMEM_BUDGET_ELEMS = 512 * 1024
+
+
+def _bucket_hist_kernel(buckets_ref, out_ref, *, num_buckets: int):
+    b = buckets_ref[...]  # (tile,) int32
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (b.shape[0], num_buckets), 1)
+    onehot = (b[:, None] == lanes).astype(jnp.int32)
+    # explicit int32: x64 mode (k=31 words) promotes sum accumulators
+    out_ref[...] = jnp.sum(onehot, axis=0,
+                           dtype=jnp.int32).reshape(1, num_buckets)
+
+
+def bucket_hist_pallas(buckets: jax.Array, num_buckets: int, tile: int = 1024,
+                       interpret: bool = False) -> jax.Array:
+    """(n,) int32 bucket ids -> (n//tile, num_buckets) per-tile histograms."""
+    n = buckets.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n {n} % tile {tile} != 0")
+    grid = (n // tile,)
+    return pl.pallas_call(
+        functools.partial(_bucket_hist_kernel, num_buckets=num_buckets),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, num_buckets), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n // tile, num_buckets), jnp.int32),
+        interpret=interpret,
+    )(buckets)
+
+
+def _bucket_pos_kernel(buckets_ref, base_ref, out_ref, *, num_buckets: int):
+    b = buckets_ref[...]  # (tile,) int32
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (b.shape[0], num_buckets), 1)
+    onehot = (b[:, None] == lanes).astype(jnp.int32)
+    within = jnp.cumsum(onehot, axis=0,
+                        dtype=jnp.int32) - onehot     # stable rank in tile
+    base = base_ref[...]                              # (1, num_buckets)
+    # Select own-bucket lane without a gather: onehot is 1 exactly once/row.
+    out_ref[...] = jnp.sum((within + base) * onehot, axis=1, dtype=jnp.int32)
+
+
+def bucket_positions_pallas(buckets: jax.Array, base: jax.Array,
+                            tile: int = 1024,
+                            interpret: bool = False) -> jax.Array:
+    """Stable destination slot of every element of a bucket partition.
+
+    buckets: (n,) int32 bucket ids in [0, num_buckets)
+    base:    (n//tile, num_buckets) int32 start offset of each (tile, bucket)
+             segment (exclusive prefix of the per-tile histograms,
+             bucket-major then tile-major).
+    returns: (n,) int32 positions -- a permutation of [0, n).
+    """
+    n = buckets.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n {n} % tile {tile} != 0")
+    num_buckets = base.shape[1]
+    grid = (n // tile,)
+    return pl.pallas_call(
+        functools.partial(_bucket_pos_kernel, num_buckets=num_buckets),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((1, num_buckets), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(buckets, base)
+
+
+def partition_plan(buckets: jax.Array, num_buckets: int, tile: int = 1024,
+                   interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Full sort-free partition plan for (n,) int32 bucket ids.
+
+    Pads to a tile multiple internally (pad elements land in the LAST bucket,
+    stably after every real element, so real positions never see them --
+    callers reserve bucket `num_buckets - 1` as the trash/tail bucket or
+    accept a pure tail region).
+
+    returns (positions, totals):
+      positions: (n,) int32 -- element i's slot in the bucket-major layout;
+                 real elements always land in [0, n).
+      totals:    (num_buckets,) int32 per-bucket counts (pads excluded).
+    """
+    n = buckets.shape[0]
+    tile = min(tile, max(8, n))
+    # VMEM budget: the kernels materialize ~3 (tile, B) int32 arrays; clamp
+    # tile so large bucket counts (num_pes at paper scale) stay well inside
+    # the ~16 MB/core VMEM instead of failing to lower.
+    tile = max(8, min(tile, _VMEM_BUDGET_ELEMS // num_buckets))
+    pad = (-n) % tile
+    if pad:
+        buckets = jnp.concatenate(
+            [buckets.astype(jnp.int32),
+             jnp.full((pad,), num_buckets - 1, jnp.int32)])
+    else:
+        buckets = buckets.astype(jnp.int32)
+    hist = bucket_hist_pallas(buckets, num_buckets, tile, interpret=interpret)
+    totals = hist.sum(axis=0)
+    bucket_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(totals)[:-1].astype(jnp.int32)])
+    tiles_before = (jnp.cumsum(hist, axis=0) - hist).astype(jnp.int32)
+    base = bucket_start[None, :] + tiles_before
+    pos = bucket_positions_pallas(buckets, base, tile, interpret=interpret)
+    if pad:
+        pos = pos[:n]
+        totals = totals - jnp.asarray(
+            [0] * (num_buckets - 1) + [pad], jnp.int32)
+    return pos, totals

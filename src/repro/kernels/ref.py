@@ -41,6 +41,38 @@ def radix_hist_ref(keys: jax.Array, shift: int, digit_bits: int,
         jnp.int32)
 
 
+# --- radix_partition --------------------------------------------------------
+
+def bucket_hist_ref(buckets: jax.Array, num_buckets: int,
+                    tile: int) -> jax.Array:
+    """Per-tile bucket histograms: (n,) int32 ids -> (n//tile, B) int32."""
+    tiles = buckets.astype(jnp.int32).reshape(-1, tile)
+    return jax.vmap(lambda b: jnp.bincount(b, length=num_buckets))(
+        tiles).astype(jnp.int32)
+
+
+def bucket_positions_ref(buckets: jax.Array, base: jax.Array,
+                         tile: int) -> jax.Array:
+    """Stable partition slots via the argsort oracle: (n,) int32 positions.
+
+    Semantically: element i goes to base[i//tile, buckets[i]] + (stable rank
+    of i among equal-bucket elements of its tile).
+    """
+    n = buckets.shape[0]
+    b = buckets.astype(jnp.int32).reshape(-1, tile)
+
+    def one_tile(bt, baset):
+        order = jnp.argsort(bt, stable=True)
+        rank_sorted = jnp.arange(tile) - jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(jnp.bincount(bt, length=baset.shape[0]))[:-1].astype(
+                 jnp.int32)])[bt[order]]
+        within = jnp.zeros((tile,), jnp.int32).at[order].set(rank_sorted)
+        return baset[bt] + within
+
+    return jax.vmap(one_tile)(b, base).reshape(n)
+
+
 # --- segment_count ----------------------------------------------------------
 
 def segment_boundaries_ref(sorted_keys: jax.Array, sentinel_val: int

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import fabsp
+from repro.core import compat, fabsp
 from repro.core.aggregation import plan_capacity
 from repro.core.fabsp import DAKCConfig, _local_count, _resolve_l3_mode
 from repro.core.sort import AccumResult
@@ -46,14 +46,13 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
     cap_h = max(8, int(cap_n * cfg.heavy_frac))
 
     spec = P(axis_names[0])
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(compat.shard_map(
         functools.partial(_local_count, cfg=cfg, num_pes=num_pes,
                           cap_n=cap_n, cap_h=cap_h, mode=mode,
                           axis_names=axis_names, grid=None),
         mesh=flat_mesh, in_specs=(spec,),
         out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
-                   (P(), P(), P(), P())),
-        check_vma=False))
+                   (P(), P(), P(), P()))))
 
     reads = jax.ShapeDtypeStruct(
         (n_reads, read_len), jnp.uint8,

@@ -211,10 +211,11 @@ def moe_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
                                  capacity=capacity, axis_name=ep_axis,
                                  pmean_axes=(*data_axes, ep_axis),
                                  fsdp_axis=fsdp)
-        y2d, aux, dropped = jax.shard_map(
+        from repro.core import compat
+        y2d, aux, dropped = compat.shard_map(
             body, mesh=mesh,
             in_specs=(in_spec, w_spec, w_spec, w_spec, P()),
-            out_specs=(in_spec, P(), P()), check_vma=False,
+            out_specs=(in_spec, P(), P()),
         )(x2d, params["wi"], params["wg"], params["wo"], params["router"])
     else:
         ids, weights, aux = _router(params, x2d, cfg)

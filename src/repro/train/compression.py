@@ -52,7 +52,8 @@ def compress_psum(grads, error: dict, *, frac: float = 0.01,
         sparse = jnp.zeros(acc.size, jnp.float32).at[idx].set(vals)
         if axis_name is not None:
             sparse = jax.lax.psum(sparse, axis_name)
-            n = jax.lax.axis_size(axis_name)
+            # jax.lax.axis_size is a >=0.5 API; psum(1) works everywhere
+            n = jax.lax.psum(1, axis_name)
             sparse = sparse / n
         new_e = acc - jnp.zeros(acc.size, jnp.float32).at[idx].set(vals)
         return sparse.reshape(g.shape).astype(g.dtype), new_e.reshape(g.shape)

@@ -75,9 +75,9 @@ def pipeline_forward(body_fn: Callable, params, x: jax.Array, *,
         return jax.lax.psum(outbuf * mask, stage_axis)
 
     pspec = jax.tree.map(lambda _: P(stage_axis), params)
-    fn = jax.shard_map(local_fn, mesh=mesh,
-                       in_specs=(pspec, P()), out_specs=P(),
-                       check_vma=False)
+    from repro.core import compat
+    fn = compat.shard_map(local_fn, mesh=mesh,
+                          in_specs=(pspec, P()), out_specs=P())
     out = fn(params, x_mbs)
     return out.reshape(x.shape)
 

@@ -5,3 +5,13 @@ import sys
 # 512-device trick; tests run on the 1 real CPU device). Multi-device tests
 # spawn subprocesses with their own XLA_FLAGS (tests/multidevice_checks.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests use hypothesis when available; otherwise install the
+# deterministic shim (tests/_hypothesis_shim.py) so the five property-test
+# modules still collect and sweep seeded examples instead of erroring out.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+    sys.modules["hypothesis"] = _hypothesis_shim

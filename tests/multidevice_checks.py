@@ -160,8 +160,9 @@ def check_compression_psum():
                                            axis_name="pod")
         return out["w"]
 
-    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("pod"),
-                                out_specs=P("pod"), check_vma=False))(
+    from repro.core import compat
+    out = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P("pod"),
+                                   out_specs=P("pod")))(
         jnp.asarray(g_global))
     # frac=1.0 -> exact mean over the pod axis, replicated back
     want = g_global.mean(axis=0)

@@ -19,8 +19,15 @@ def test_bucket_by_owner_properties(seed, num_pes, capacity):
     words = jnp.asarray(rng.integers(0, 1 << 20, n, dtype=np.uint32))
     owners = jnp.asarray(rng.integers(0, num_pes, n, dtype=np.int32))
     valid = jnp.asarray(rng.random(n) < 0.9)
-    tile, fill, overflow = bucket_by_owner(words, owners, valid, num_pes,
-                                           capacity)
+    tile, fill, overflow, counts = bucket_by_owner(words, owners, valid,
+                                                   num_pes, capacity)
+    assert counts is None  # no counts lane requested
+    # the radix partition and the argsort oracle are bit-identical
+    oracle = bucket_by_owner(words, owners, valid, num_pes, capacity,
+                             impl="argsort")
+    assert (tile == oracle.tile).all()
+    assert (fill == oracle.fill).all()
+    assert int(overflow) == int(oracle.overflow)
     # conservation: routed + dropped == valid
     assert int(fill.sum()) + int(overflow) == int(valid.sum())
     # every routed word lands in its owner's row, before the fill mark
@@ -37,6 +44,42 @@ def test_bucket_by_owner_properties(seed, num_pes, capacity):
             assert got == sent_vals
         else:
             assert set(got) <= set(sent_vals)
+
+
+@given(st.integers(0, 10), st.integers(1, 8), st.integers(4, 32))
+@settings(max_examples=20, deadline=None)
+def test_bucket_by_owner_counts_lane(seed, num_pes, capacity):
+    """HEAVY {kmer, count} pairs ride the same partition plan."""
+    rng = np.random.default_rng(100 + seed)
+    n = 96
+    words = jnp.asarray(rng.integers(0, 1 << 20, n, dtype=np.uint32))
+    counts = jnp.asarray(rng.integers(1, 1000, n, dtype=np.int32))
+    owners = jnp.asarray(rng.integers(0, num_pes, n, dtype=np.int32))
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    got = bucket_by_owner(words, owners, valid, num_pes, capacity, counts)
+    oracle = bucket_by_owner(words, owners, valid, num_pes, capacity, counts,
+                             impl="argsort")
+    assert (got.tile == oracle.tile).all()
+    assert (got.counts == oracle.counts).all()
+    assert (got.fill == oracle.fill).all()
+    # counts lane is zero exactly where the words tile is the sentinel
+    assert ((np.asarray(got.counts) == 0)
+            == (np.asarray(got.tile) == SENT32)).all()
+
+
+def test_bucket_by_owner_adversarial_skew():
+    """All items to one owner: overflow bookkeeping agrees across impls."""
+    n, num_pes, capacity = 256, 4, 16
+    words = jnp.arange(n, dtype=jnp.uint32)
+    owners = jnp.full((n,), 2, jnp.int32)
+    valid = jnp.ones((n,), bool)
+    got = bucket_by_owner(words, owners, valid, num_pes, capacity)
+    oracle = bucket_by_owner(words, owners, valid, num_pes, capacity,
+                             impl="argsort")
+    assert int(got.overflow) == int(oracle.overflow) == n - capacity
+    assert (got.tile == oracle.tile).all()
+    # first `capacity` entries in stream order are the ones kept
+    assert np.asarray(got.tile)[2].tolist() == list(range(capacity))
 
 
 @given(st.integers(0, 10))

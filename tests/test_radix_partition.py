@@ -1,0 +1,240 @@
+"""Sort-free radix-partition engine: kernel properties, end-to-end parity
+with the argsort oracle, HLO sort-freeness, and executable caching.
+
+Randomized sweeps are seeded loops (hypothesis-style, no dependency).
+"""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import fabsp, serial
+from repro.core.aggregation import bucket_by_owner
+from repro.data import genome
+from repro.kernels import ops, ref
+
+SENT32 = int(np.iinfo(np.uint32).max)
+
+
+# --- kernel-level properties -------------------------------------------------
+
+
+@pytest.mark.parametrize("num_buckets", [2, 9, 64, 257])
+@pytest.mark.parametrize("tile", [64, 256, 1024])
+def test_bucket_hist_matches_ref(num_buckets, tile):
+    rng = np.random.default_rng(num_buckets * tile)
+    n = 4096
+    b = jnp.asarray(rng.integers(0, num_buckets, n, dtype=np.int32))
+    got = ops.bucket_hist(b, num_buckets, tile)
+    exp = ref.bucket_hist_ref(b, num_buckets, tile)
+    assert (got == exp).all()
+    assert int(got.sum()) == n
+
+
+@pytest.mark.parametrize("tile", [128, 512])
+def test_bucket_positions_matches_ref(tile):
+    rng = np.random.default_rng(tile)
+    n, num_buckets = 2048, 17
+    b = jnp.asarray(rng.integers(0, num_buckets, n, dtype=np.int32))
+    hist = ops.bucket_hist(b, num_buckets, tile)
+    tot = hist.sum(0)
+    start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(tot)[:-1].astype(jnp.int32)])
+    base = start[None, :] + (jnp.cumsum(hist, 0) - hist).astype(jnp.int32)
+    assert (ops.bucket_positions(b, base, tile)
+            == ref.bucket_positions_ref(b, base, tile)).all()
+
+
+def test_partition_plan_is_stable_partition():
+    """Positions are a permutation equal to a stable argsort by bucket id,
+    for many (n, B, skew) combinations including non-tile-aligned n."""
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        n = int(rng.integers(3, 5000))
+        num_buckets = int(rng.integers(2, 300))
+        if trial % 3 == 0:  # adversarial skew: one hot bucket
+            b = np.full(n, int(rng.integers(0, num_buckets)), np.int32)
+            b[rng.random(n) < 0.05] = 0
+        else:
+            b = rng.integers(0, num_buckets, n).astype(np.int32)
+        pos, totals = ops.radix_partition_plan(jnp.asarray(b), num_buckets,
+                                               min(1024, max(8, n)))
+        assert np.array_equal(np.asarray(totals),
+                              np.bincount(b, minlength=num_buckets))
+        p = np.asarray(pos)
+        assert sorted(p.tolist()) == list(range(n))  # permutation into [0, n)
+        payload = np.arange(n, dtype=np.uint32)
+        out = np.zeros(n, np.uint32)
+        out[p] = payload
+        assert np.array_equal(out, payload[np.argsort(b, kind="stable")])
+
+
+def test_bucket_by_owner_uint64_subprocess():
+    """uint64 words (k=31 regime) partition identically to the argsort
+    oracle; x64 mode needs a fresh process."""
+    code = r"""
+import os
+os.environ["JAX_ENABLE_X64"] = "1"
+import numpy as np, jax.numpy as jnp
+from repro.core.aggregation import bucket_by_owner
+rng = np.random.default_rng(0)
+n = 512
+words = jnp.asarray(rng.integers(0, 1 << 62, n, dtype=np.uint64))
+owners = jnp.asarray(rng.integers(0, 8, n, dtype=np.int32))
+valid = jnp.asarray(rng.random(n) < 0.9)
+a = bucket_by_owner(words, owners, valid, 8, 48)
+b = bucket_by_owner(words, owners, valid, 8, 48, impl="argsort")
+assert a.tile.dtype == jnp.uint64
+assert (a.tile == b.tile).all() and (a.fill == b.fill).all()
+assert int(a.overflow) == int(b.overflow)
+print("OK")
+"""
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
+def test_bucket_by_owner_sentinel_payload_padding():
+    """Invalid lanes and sentinel payloads never leak into routed slots."""
+    words = jnp.asarray([7, SENT32, 9, 11], jnp.uint32)
+    owners = jnp.asarray([0, 0, 1, 0], jnp.int32)
+    valid = jnp.asarray([True, False, True, True])
+    res = bucket_by_owner(words, owners, valid, 2, 4)
+    t = np.asarray(res.tile)
+    assert t[0].tolist() == [7, 11, SENT32, SENT32]
+    assert t[1].tolist() == [9, SENT32, SENT32, SENT32]
+    assert res.fill.tolist() == [2, 1]
+    assert int(res.overflow) == 0
+
+
+# --- end-to-end parity: phase2_impl / partition_impl -------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("pe",))
+
+
+@pytest.mark.parametrize("l3_mode", ["packed", "dual", "none"])
+def test_phase2_radix_bit_identical_to_argsort(mesh, l3_mode):
+    k = 9 if l3_mode == "packed" else 13
+    spec = genome.ReadSetSpec(genome_bases=2048, n_reads=128, read_len=60,
+                              heavy_hitter_frac=0.4, seed=21)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    results = {}
+    for impl in ("radix", "argsort"):
+        cfg = fabsp.DAKCConfig(k=k, chunk_reads=32, use_l3=l3_mode != "none",
+                               l3_mode="auto" if l3_mode == "none" else l3_mode,
+                               partition_impl=impl, phase2_impl=impl)
+        res, stats = fabsp.count_kmers(reads, mesh, cfg)
+        results[impl] = res
+        assert int(stats.overflow) == 0
+    a, b = results["radix"], results["argsort"]
+    assert (a.unique == b.unique).all()
+    assert (a.counts == b.counts).all()
+    assert (a.num_unique == b.num_unique).all()
+    # and both match the Python oracle
+    n = int(a.num_unique[0])
+    got = {int(u): int(c) for u, c in zip(a.unique[:n], a.counts[:n])}
+    assert got == serial.count_kmers_python(np.asarray(reads), k)
+
+
+# --- acceptance: the default path lowers without any HLO sort op -------------
+
+
+def _count_sort_ops(hlo_text: str) -> int:
+    import re
+    return len(re.findall(r"stablehlo\.sort|\bsort\(|sort\.[0-9]", hlo_text))
+
+
+@pytest.mark.parametrize("l3_mode", ["packed", "dual", "none"])
+def test_default_path_has_no_hlo_sort(mesh, l3_mode):
+    k = 9 if l3_mode == "packed" else 13
+    cfg = fabsp.DAKCConfig(k=k, chunk_reads=32, use_l3=l3_mode != "none",
+                           l3_mode="auto" if l3_mode == "none" else l3_mode)
+    fn = fabsp._counting_executable(cfg, mesh, ("pe",), (64, 60), "uint8",
+                                    cfg.slack)
+    txt = fn.lower(jax.ShapeDtypeStruct((64, 60), jnp.uint8)).as_text()
+    assert _count_sort_ops(txt) == 0, f"sort op leaked into {l3_mode} path"
+
+
+def test_argsort_oracle_does_lower_sorts(mesh):
+    """Sanity for the inspection: the oracle path must contain sort ops
+    (otherwise the zero-count above would be vacuous)."""
+    cfg = fabsp.DAKCConfig(k=13, chunk_reads=32, use_l3=False,
+                           partition_impl="argsort", phase2_impl="argsort")
+    fn = fabsp._counting_executable(cfg, mesh, ("pe",), (64, 60), "uint8",
+                                    cfg.slack)
+    txt = fn.lower(jax.ShapeDtypeStruct((64, 60), jnp.uint8)).as_text()
+    assert _count_sort_ops(txt) > 0
+
+
+# --- acceptance: executable caching ------------------------------------------
+
+
+def test_second_call_does_not_retrace(mesh):
+    spec = genome.ReadSetSpec(genome_bases=2048, n_reads=64, read_len=52,
+                              seed=9)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    cfg = fabsp.DAKCConfig(k=11, chunk_reads=16)
+    traces = [0]
+    orig = fabsp._local_count
+
+    def counting(*args, **kwargs):
+        traces[0] += 1
+        return orig(*args, **kwargs)
+
+    fabsp.clear_executable_cache()
+    fabsp._local_count = counting
+    try:
+        r1, _ = fabsp.count_kmers(reads, mesh, cfg)
+        first = traces[0]
+        r2, _ = fabsp.count_kmers(reads, mesh, cfg)
+        assert traces[0] == first, "second same-shape call re-traced"
+        assert first == 1
+        assert (r1.unique == r2.unique).all()
+    finally:
+        fabsp._local_count = orig
+        fabsp.clear_executable_cache()
+
+
+def test_overflow_round_uses_cache_for_repeat(mesh):
+    """The slack-doubled retry shape lands in the same executable cache: a
+    second adversarial round (base + retry slack) re-traces nothing.
+
+    (On a 1-device mesh capacity never overflows, so the retry is driven
+    explicitly through the `_slack_override` path the overflow round takes.)
+    """
+    reads = jnp.asarray(np.zeros((64, 40), dtype=np.uint8))  # all-A skew
+    cfg = fabsp.DAKCConfig(k=13, chunk_reads=32, use_l3=False, slack=1.01)
+    traces = [0]
+    orig = fabsp._local_count
+
+    def counting(*args, **kwargs):
+        traces[0] += 1
+        return orig(*args, **kwargs)
+
+    fabsp.clear_executable_cache()
+    fabsp._local_count = counting
+    try:
+        fabsp.count_kmers(reads, mesh, cfg)
+        fabsp.count_kmers(reads, mesh, cfg,
+                          _slack_override=cfg.slack * 2)   # the retry shape
+        first = traces[0]
+        assert first == 2                                  # two distinct caps
+        fabsp.count_kmers(reads, mesh, cfg)
+        fabsp.count_kmers(reads, mesh, cfg, _slack_override=cfg.slack * 2)
+        assert traces[0] == first, "overflow-round shape re-traced"
+    finally:
+        fabsp._local_count = orig
+        fabsp.clear_executable_cache()

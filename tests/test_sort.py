@@ -5,7 +5,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sort import accumulate, merge_accum, radix_sort, \
-    sort_with_weights
+    radix_sort_with_weights, sort_with_weights
 
 SENT32 = int(np.iinfo(np.uint32).max)
 
@@ -24,6 +24,53 @@ def test_radix_sort_digit_sizes():
         assert (radix_sort(keys, 16, db) == jnp.sort(keys)).all()
 
 
+def test_radix_sort_default_8bit_and_odd_lengths():
+    """8-bit digits are the default; n need not divide the engine tile."""
+    rng = np.random.default_rng(2)
+    for n in (100, 999, 1025, 4096):
+        keys = jnp.asarray(rng.integers(0, 1 << 26, n, dtype=np.uint32))
+        assert (radix_sort(keys, 26) == jnp.sort(keys)).all(), n
+
+
+def test_radix_sort_sentinel_vs_polyT_collision():
+    """A valid key whose masked bits are all ones (poly-T k-mer) must not
+    interleave with the full-word sentinel padding."""
+    total_bits = 16
+    polyt = np.uint32((1 << total_bits) - 1)  # low 16 bits all ones
+    keys = np.full(64, SENT32, np.uint32)
+    keys[:10] = polyt
+    keys[10:20] = 7
+    rng = np.random.default_rng(3)
+    rng.shuffle(keys)
+    out = np.asarray(radix_sort(jnp.asarray(keys), total_bits,
+                                sentinel_val=SENT32))
+    assert out[:10].tolist() == [7] * 10
+    assert out[10:20].tolist() == [int(polyt)] * 10
+    assert (out[20:] == SENT32).all()
+
+
+def test_radix_sort_with_weights_matches_argsort():
+    rng = np.random.default_rng(4)
+    n = 2048
+    keys = rng.integers(0, 1 << 20, n, dtype=np.uint32)
+    keys[rng.random(n) < 0.2] = SENT32          # sentinel padding sprinkled in
+    w = rng.integers(1, 100, n, dtype=np.int32)
+    kj, wj = jnp.asarray(keys), jnp.asarray(w)
+    rk, rw = radix_sort_with_weights(kj, wj, 20, sentinel_val=SENT32)
+    order = np.argsort(keys, kind="stable")
+    assert (np.asarray(rk) == keys[order]).all()
+    assert (np.asarray(rw) == w[order]).all()   # stability: weights follow
+
+
+def test_sort_with_weights_radix_dispatch():
+    keys = jnp.asarray([5, 1, SENT32, 1, 9], jnp.uint32)
+    w = jnp.asarray([1, 2, 99, 3, 4], jnp.int32)
+    ak, aw = sort_with_weights(keys, w)                       # argsort oracle
+    rk, rw = sort_with_weights(keys, w, impl="radix", total_bits=8,
+                               sentinel_val=SENT32)
+    assert (ak == rk).all() and (aw == rw).all()
+
+
 def test_accumulate_counts():
     keys = jnp.asarray([1, 1, 2, 5, 5, 5, SENT32, SENT32], jnp.uint32)
     res = accumulate(keys, sentinel_val=SENT32)
@@ -40,6 +87,20 @@ def test_accumulate_weighted():
     assert int(res.num_unique) == 2
     assert res.unique[:2].tolist() == [3, 7]
     assert res.counts[:2].tolist() == [5, 10]
+
+
+def test_accumulate_pallas_boundaries_parity():
+    rng = np.random.default_rng(5)
+    for n in (64, 1000, 2048):
+        keys = np.sort(rng.integers(0, 97, n).astype(np.uint32))
+        keys[-n // 5:] = SENT32
+        w = rng.integers(1, 9, n, dtype=np.int32)
+        a = accumulate(jnp.asarray(keys), jnp.asarray(w), sentinel_val=SENT32)
+        b = accumulate(jnp.asarray(keys), jnp.asarray(w), sentinel_val=SENT32,
+                       boundaries_impl="pallas")
+        assert (a.unique == b.unique).all()
+        assert (a.counts == b.counts).all()
+        assert int(a.num_unique) == int(b.num_unique)
 
 
 def test_merge_accum():
