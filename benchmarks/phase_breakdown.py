@@ -1,16 +1,30 @@
 """Per-phase timing of the DAKC pipeline: the perf trajectory record.
 
-Times each stage of the hot path in isolation -- k-mer extract, L3
-compression, L2 owner partition, the all_to_all exchange, and Phase 2
-(sort + accumulate) -- for both `partition_impl` / `phase2_impl` settings
-('radix' = the sort-free partition engine, 'argsort' = the comparison-sort
-oracle), plus the end-to-end counter. Emits the usual CSV rows and writes
-`BENCH_phase_breakdown.json` so future PRs can diff stage-level timings
-instead of re-deriving them from end-to-end numbers.
+Times each stage of the hot path in isolation -- k-mer extract (plain and
+canonical, fused vs sweep), the chunk-local L3 compressors, the L2 owner
+partition, Phase-2 sort + accumulate (fused Pallas sweep vs segment_sum
+oracle) -- for both `partition_impl` / `phase2_impl` settings ('radix' =
+the sort-free partition engine, 'argsort' = the comparison-sort oracle),
+plus the end-to-end counter. Emits the usual CSV rows and writes
+`BENCH_phase_breakdown.json` (schema 2) so future PRs can diff stage-level
+timings instead of re-deriving them from end-to-end numbers.
 
-On CPU the Pallas kernels run in interpret mode, so absolute numbers are not
-TPU-representative; the *structure* (which stages dominate, how the two
-impls compare at equal semantics) is what the record tracks.
+Protocol fixes over schema 1 (the `l3_compress` 1.19 s anomaly): every
+stage now reports compile time and steady-state time SEPARATELY
+(common.timed), and the L3 stage is measured the way the pipeline runs it
+-- a lax.scan over chunk-local compressors inside one jitted executable, so
+one compiled radix plan is reused across every chunk instead of paying
+per-call dispatch. Diagnosis of the remaining radix-vs-argsort gap on CPU:
+interpret-mode Pallas executes each grid step sequentially and
+materializes the O(tile x radix) one-hot rank tensor as real scalar work
+(~256 lanes per element for 8-bit digits), which a TPU VPU evaluates in
+parallel -- the CPU number measures emulation overhead, not the
+algorithm; structure (which stages dominate) is the signal, absolute radix
+numbers are not. See ROADMAP (on-TPU validation item).
+
+On CPU the Pallas kernels run in interpret mode, so absolute numbers are
+not TPU-representative; the *structure* (which stages dominate, how the
+two impls compare at equal semantics) is what the record tracks.
 """
 
 from __future__ import annotations
@@ -22,15 +36,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from benchmarks.common import SCALE, best_of, report
+from benchmarks.common import SCALE, SMOKE, best_of, report, timed
 from repro.core import encoding, fabsp
 from repro.core.aggregation import bucket_by_owner, l3_compress, plan_capacity
 from repro.core.owner import owner_pe
-from repro.core.sort import accumulate, radix_sort, sort_with_weights
+from repro.core.sort import accumulate, sort_with_weights
 from repro.data import genome
 
 K = 13
 SIM_PES = 8            # owner-space fan-out for the local partition stages
+N_CHUNKS = 8           # chunk-local compressors per L3 measurement
 
 
 def _chunk_words(n_reads: int, read_len: int, heavy: float, seed: int):
@@ -41,19 +56,14 @@ def _chunk_words(n_reads: int, read_len: int, heavy: float, seed: int):
     return reads, encoding.extract_kmers(reads, K)
 
 
-def _time(fn, *args):
-    jitted = jax.jit(fn)
-    out = jitted(*args)          # compile outside the timed region
-    jax.tree.map(lambda x: x.block_until_ready(), out)
-
-    def go():
-        r = jitted(*args)
-        jax.tree.map(lambda x: x.block_until_ready(), r)
-    return best_of(go)
+def _stage(record, name, compile_s, steady_s, derived=""):
+    record["stages"][name] = {"seconds": steady_s,
+                              "compile_seconds": compile_s}
+    report(f"phase_breakdown.{name}", steady_s, derived)
 
 
 def run() -> None:
-    n_reads = int(1024 * SCALE)
+    n_reads = max(8, int(1024 * SCALE))
     read_len = 100
     reads, words = _chunk_words(n_reads, read_len, heavy=0.3, seed=2)
     n = int(words.shape[0])
@@ -62,25 +72,61 @@ def run() -> None:
     cap = plan_capacity(n, SIM_PES, 1.5)
     sent = int(jnp.iinfo(words.dtype).max)
     total_bits = encoding.kmer_bits(K)
-    record: dict = {"workload": {"k": K, "n_reads": n_reads,
+    record: dict = {"schema": 2,
+                    "workload": {"k": K, "n_reads": n_reads,
                                  "read_len": read_len, "kmers": n,
-                                 "sim_pes": SIM_PES,
+                                 "sim_pes": SIM_PES, "n_chunks": N_CHUNKS,
                                  "backend": jax.default_backend()},
+                    "diagnosis": {
+                        "schema1_l3_anomaly":
+                            "schema-1 l3_compress timed ONE whole-stream "
+                            "4-pass 257-bucket engine run; interpret-mode "
+                            "Pallas executes grid steps sequentially and "
+                            "materializes the O(tile*radix) one-hot rank "
+                            "per pass as scalar CPU work -- emulation "
+                            "overhead, not algorithm cost. Schema 2 "
+                            "measures the pipeline shape (scan over "
+                            "chunk-local compressors, one compiled plan "
+                            "reused) and splits compile from steady state."},
                     "stages": {}}
 
-    # Stage: extract (impl-independent)
-    t_extract = _time(lambda r: encoding.extract_kmers(r, K), reads)
-    record["stages"]["extract"] = {"seconds": t_extract}
-    report("phase_breakdown.extract", t_extract, f"kmers={n}")
+    # Stage: extract (impl-independent), plus canonical fused vs sweep.
+    c, t = timed(lambda r: encoding.extract_kmers(r, K), reads)
+    _stage(record, "extract", c, t, f"kmers={n}")
+    for cimpl in ("fused", "sweep"):
+        c, t = timed(lambda r, ci=cimpl: encoding.extract_kmers(
+            r, K, canonical=True, canonical_impl=ci), reads)
+        _stage(record, f"extract_canonical_{cimpl}", c, t)
 
-    # Stage: L3 compress + L2 partition + phase 2, per impl
+    # Stage: fused accumulate sweep vs segment_sum oracle (sorted stream).
+    skeys = jnp.sort(words)
+    for aimpl in ("fused", "segment_sum"):
+        c, t = timed(lambda s, ai=aimpl: accumulate(
+            s, sentinel_val=sent, impl=ai), skeys)
+        _stage(record, f"accumulate_{aimpl}", c, t)
+
     mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+    chunks = words.reshape(N_CHUNKS, -1)
     for impl in ("radix", "argsort"):
-        t_l3 = _time(lambda w: l3_compress(w, K, impl=impl), words)
+        # L3: the chunk-local compressors as the pipeline runs them -- a
+        # scan inside ONE jitted executable; the compiled radix plan is
+        # built once and reused across all N_CHUNKS chunks.
+        def l3_chunks(ws, im=impl):
+            def step(carry, w):
+                packed, v = l3_compress(w, K, impl=im)
+                return carry, v.sum()
+            return jax.lax.scan(step, 0, ws)[1]
+        c, t = timed(l3_chunks, chunks)
+        _stage(record, f"{impl}.l3_compress", c, t,
+               f"chunks={N_CHUNKS};per_chunk={t / N_CHUNKS:.6f}")
+        record["stages"][f"{impl}.l3_compress"]["per_chunk_seconds"] = \
+            t / N_CHUNKS
 
-        t_part = _time(
-            lambda w, o, v: bucket_by_owner(w, o, v, SIM_PES, cap, impl=impl),
+        c, t = timed(
+            lambda w, o, v, im=impl: bucket_by_owner(w, o, v, SIM_PES, cap,
+                                                     impl=im),
             words, owners, valid)
+        _stage(record, f"{impl}.partition", c, t, f"pes={SIM_PES};cap={cap}")
 
         # Phase 2 over a multi-chunk-sized stream with a weights lane.
         stream = jnp.concatenate([words] * 4)
@@ -90,47 +136,39 @@ def run() -> None:
                 keys, ww = sort_with_weights(s, w, impl="radix",
                                              total_bits=total_bits,
                                              sentinel_val=sent)
-                return accumulate(keys, ww, sentinel_val=sent,
-                                  boundaries_impl="pallas")
+                return accumulate(keys, ww, sentinel_val=sent, impl="fused")
         else:
             def p2(s, w):
                 keys, ww = sort_with_weights(s, w)
                 return accumulate(keys, ww, sentinel_val=sent)
-        t_p2 = _time(p2, stream, wts)
+        c, t = timed(p2, stream, wts)
+        _stage(record, f"{impl}.phase2", c, t,
+               f"stream={int(stream.shape[0])}")
 
         # End-to-end counter (includes the all_to_all; P=1 here so the
         # exchange is a device-local identity -- the honest number needs a
         # real mesh, which strong_scaling.py covers).
-        cfg = fabsp.DAKCConfig(k=K, chunk_reads=256, partition_impl=impl,
-                               phase2_impl=impl)
+        cfg = fabsp.DAKCConfig(k=K, chunk_reads=min(256, n_reads),
+                               partition_impl=impl, phase2_impl=impl)
         res = None
 
         def e2e():
             nonlocal res
             res, _ = fabsp.count_kmers(reads, mesh, cfg)
             res.unique.block_until_ready()
+        import time as _time
+        t0 = _time.perf_counter()
         e2e()                      # compile via the executable cache
-        t_e2e = best_of(e2e)
-
-        record["stages"][impl] = {
-            "l3_compress": {"seconds": t_l3},
-            "partition": {"seconds": t_part},
-            "phase2": {"seconds": t_p2, "stream": int(stream.shape[0])},
-            "end_to_end": {"seconds": t_e2e},
-        }
-        report(f"phase_breakdown.{impl}.l3_compress", t_l3)
-        report(f"phase_breakdown.{impl}.partition", t_part,
-               f"pes={SIM_PES};cap={cap}")
-        report(f"phase_breakdown.{impl}.phase2", t_p2,
-               f"stream={int(stream.shape[0])}")
-        report(f"phase_breakdown.{impl}.end_to_end", t_e2e)
+        c = _time.perf_counter() - t0
+        _stage(record, f"{impl}.end_to_end", c, best_of(e2e))
 
     r = record["stages"]
-    speedup = (r["argsort"]["partition"]["seconds"]
-               / max(r["radix"]["partition"]["seconds"], 1e-9))
+    speedup = (r["argsort.partition"]["seconds"]
+               / max(r["radix.partition"]["seconds"], 1e-9))
     record["partition_speedup_radix_over_argsort"] = speedup
     # comment line, not a CSV row: the ratio is not a timing
     print(f"# phase_breakdown.partition radix_vs_argsort={speedup:.2f}x",
           flush=True)
-    with open("BENCH_phase_breakdown.json", "w") as f:
-        json.dump(record, f, indent=1)
+    if not SMOKE:
+        with open("BENCH_phase_breakdown.json", "w") as f:
+            json.dump(record, f, indent=1)

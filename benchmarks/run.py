@@ -4,12 +4,20 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
 
   PYTHONPATH=src python -m benchmarks.run            # all benchmarks
   PYTHONPATH=src python -m benchmarks.run fig12 tab3 # substring filter
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: toy size, 1 rep
   BENCH_SCALE=4 ... for bigger datasets
+
+--smoke runs every registered benchmark at toy size (BENCH_SCALE=0.125
+unless already set), with single timing reps and record-file writes
+suppressed (common.SMOKE) -- a fast does-it-still-run gate, not a perf
+measurement. Composes with substring filters.
 """
 
+import os
 import sys
 import time
 import traceback
+from typing import List, Tuple
 
 MODULES = [
     ("fig6+fig9.shared_memory", "benchmarks.shared_memory"),
@@ -25,9 +33,29 @@ MODULES = [
 ]
 
 
+def parse_args(argv: List[str]) -> Tuple[List[str], bool]:
+    """(substring filters, smoke flag); unknown --flags are an error."""
+    filters, smoke = [], False
+    for a in argv:
+        if a == "--smoke":
+            smoke = True
+        elif a.startswith("--"):
+            raise SystemExit(f"unknown flag {a!r} (only --smoke)")
+        else:
+            filters.append(a)
+    return filters, smoke
+
+
 def main() -> None:
     import importlib
-    filters = sys.argv[1:]
+    filters, smoke = parse_args(sys.argv[1:])
+    if smoke:
+        # Before any benchmark module (hence benchmarks.common) imports:
+        # subprocess-based benchmarks inherit these via os.environ.
+        os.environ.setdefault("BENCH_SCALE", "0.125")
+        os.environ["BENCH_SMOKE"] = "1"
+        print("# smoke mode: toy sizes, 1 rep, records suppressed",
+              flush=True)
     print("name,us_per_call,derived")
     failures = []
     for name, modname in MODULES:

@@ -23,12 +23,17 @@ overflow round (`fabsp.count_kmers` does).
 Data path (the L2 hot loop): `bucket_by_owner` is **sort-free** by default.
 The owner key has only P distinct values, so packing the tile via a
 comparison `argsort` (O(n log^2 n) bitonic on TPU) is replaced by one stable
-radix partition -- per-tile Pallas owner histogram, exclusive-prefix offsets,
-one scatter (kernels/radix_partition.py, `impl='radix'`). The partition is
-multi-lane: an optional int32 counts lane (HEAVY {kmer, count} packets)
-rides the same plan, so NORMAL and HEAVY traffic share one bucketing code
-path. `impl='argsort'` keeps the stable-argsort oracle for parity tests; the
-two produce bit-identical tiles.
+radix partition -- ONE `PartitionPlan` (per-tile Pallas owner histogram +
+exclusive-prefix offsets + stable ranks; kernels/radix_partition.py) applied
+by one scatter per lane (`impl='radix'`). The partition is multi-lane: an
+optional int32 counts lane (HEAVY {kmer, count} packets) rides the same
+plan, so NORMAL and HEAVY traffic share one bucketing code path. A caller
+may also pass a precomputed `plan` to route several lane sets off one
+histogram pass. The 2d routing topology exploits the same plan-object: it
+buckets by the two-digit (dest_col, dest_row) key so that BOTH hops of the
+hierarchical all_to_all are served by this single plan (fabsp._route).
+`impl='argsort'` keeps the stable-argsort oracle for parity tests; the two
+produce bit-identical tiles.
 """
 
 from __future__ import annotations
@@ -68,7 +73,8 @@ def plan_capacity(num_items: int, num_pes: int, slack: float = 1.5,
 @functools.partial(jax.jit, static_argnums=(3, 4), static_argnames=("impl",))
 def bucket_by_owner(words: jax.Array, owners: jax.Array, valid: jax.Array,
                     num_pes: int, capacity: int,
-                    counts: Optional[jax.Array] = None, *,
+                    counts: Optional[jax.Array] = None,
+                    plan: Optional[ops.PartitionPlan] = None, *,
                     impl: str = "radix") -> BucketResult:
     """Pack words into a destination-major (P, capacity) tile (the L2 layer).
 
@@ -78,6 +84,10 @@ def bucket_by_owner(words: jax.Array, owners: jax.Array, valid: jax.Array,
     counts: optional (n,) int32 second lane (HEAVY {kmer, count} packets);
             partitioned with the same plan, returned as `BucketResult.counts`
             (zero-padded where the words tile holds the sentinel)
+    plan:   optional precomputed PartitionPlan over the (num_pes + 1)-bucket
+            key `where(valid, owners, num_pes)` -- an exposed hook for
+            callers that route several lane sets off one histogram pass
+            ('radix' impl only; rejected under 'argsort')
     impl:   'radix' (sort-free partition, default) | 'argsort' (jnp oracle)
 
     On overflow (a destination receiving more than `capacity` entries) the
@@ -85,15 +95,15 @@ def bucket_by_owner(words: jax.Array, owners: jax.Array, valid: jax.Array,
     implementations.
     """
     n = words.shape[0]
+    if plan is not None and impl != "radix":
+        raise ValueError(f"plan= requires impl='radix', got {impl!r}")
     sent = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
     key = jnp.where(valid, owners.astype(jnp.int32), num_pes)  # invalid last
     if impl == "radix":
-        pos, totals = ops.radix_partition_plan(key, num_pes + 1)
-        hist = totals[:num_pes]
-        starts = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32),
-             jnp.cumsum(totals)[:-1].astype(jnp.int32)])
-        within = pos - starts[key]                 # stable rank within owner
+        if plan is None:
+            plan = ops.make_partition_plan(key, num_pes + 1)
+        hist = plan.totals[:num_pes]
+        within = plan.positions - plan.starts[key]  # stable rank within owner
         ok = valid & (within < capacity)
         dst = jnp.where(ok, key * capacity + within, num_pes * capacity)
         flat = jnp.full((num_pes * capacity,), sent, words.dtype)
@@ -141,13 +151,14 @@ def l3_compress(words: jax.Array, k: int, bits_per_symbol: int = 2, *,
     their validity mask. len(valid.sum()) == number of *distinct* k-mers in
     the block -- the compression the paper's Fig. 12 measures.
     impl: 'radix' sorts the block with the sort-free partition engine and
-    sweeps boundaries with the Pallas kernel; 'argsort' is the jnp oracle.
+    accumulates with the fused Pallas boundary+segment-sum sweep; 'argsort'
+    is the jnp oracle.
     """
     sent = int(jnp.iinfo(words.dtype).max)
     if impl == "radix":
         swords = radix_sort(words, encoding.kmer_bits(k, bits_per_symbol),
                             sentinel_val=sent)
-        acc = accumulate(swords, sentinel_val=sent, boundaries_impl="pallas")
+        acc = accumulate(swords, sentinel_val=sent, impl="fused")
     else:
         acc = accumulate(jnp.sort(words), sentinel_val=sent)
     valid = jnp.arange(words.shape[0]) < acc.num_unique

@@ -98,8 +98,12 @@ def decode_codes_np(codes: np.ndarray) -> str:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def pack_kmers(codes: jax.Array, k: int, bits_per_symbol: int = 2) -> jax.Array:
+@functools.partial(jax.jit, static_argnums=(1, 2),
+                   static_argnames=("k", "bits_per_symbol", "canonical",
+                                    "canonical_impl"))
+def pack_kmers(codes: jax.Array, k: int, bits_per_symbol: int = 2, *,
+               canonical: bool = False,
+               canonical_impl: str = "fused") -> jax.Array:
     """Pack every length-k window of `codes` into one word per position.
 
     codes: (..., m) integer symbol codes in [0, 2**bits_per_symbol).
@@ -107,24 +111,56 @@ def pack_kmers(codes: jax.Array, k: int, bits_per_symbol: int = 2) -> jax.Array:
 
     Vectorized shift-or over the k window offsets (k static -> unrolled), the
     data-parallel equivalent of the paper's rolling `kmer = (kmer << 2) | c`.
+
+    canonical: emit min(word, revcomp(word)) instead of the forward word
+    (2-bit DNA codes only). With `canonical_impl='fused'` the reverse
+    complement is maintained incrementally inside the same shift-or loop --
+    base j complements to `c ^ 3` and lands at bit offset 2j of the RC word,
+    so each unrolled step costs O(1) extra VPU ops and no second O(k) sweep
+    over the packed words ever runs. `'sweep'` is the oracle: pack, then the
+    separate `canonical()` pass (bit-identical results).
     """
     dt = kmer_dtype(k, bits_per_symbol)
     m = codes.shape[-1]
     n_pos = m - k + 1
     if n_pos <= 0:
         raise ValueError(f"reads of length {m} are shorter than k={k}")
+    if canonical and bits_per_symbol != 2:
+        raise ValueError("canonical k-mers are defined for 2-bit DNA codes")
+    if canonical and canonical_impl not in ("fused", "sweep"):
+        raise ValueError(f"unknown canonical_impl {canonical_impl!r}")
     acc = jnp.zeros(codes.shape[:-1] + (n_pos,), dt)
     shift = dt(bits_per_symbol)
+    if canonical and canonical_impl == "fused":
+        rc = jnp.zeros_like(acc)
+        three = dt(3)
+        for j in range(k):
+            window = jax.lax.slice_in_dim(codes, j, j + n_pos,
+                                          axis=-1).astype(dt)
+            acc = (acc << shift) | window
+            rc = rc | ((window ^ three) << dt(2 * j))
+        return jnp.minimum(acc, rc)
     for j in range(k):
         window = jax.lax.slice_in_dim(codes, j, j + n_pos, axis=-1)
         acc = (acc << shift) | window.astype(dt)
+    if canonical:  # 'sweep' oracle: separate O(k) revcomp pass
+        return jnp.minimum(acc, revcomp(acc, k))
     return acc
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def extract_kmers(reads: jax.Array, k: int, bits_per_symbol: int = 2) -> jax.Array:
-    """(n_reads, m) codes -> flat (n_reads * (m - k + 1),) k-mer words."""
-    return pack_kmers(reads, k, bits_per_symbol).reshape(-1)
+@functools.partial(jax.jit, static_argnums=(1, 2),
+                   static_argnames=("k", "bits_per_symbol", "canonical",
+                                    "canonical_impl"))
+def extract_kmers(reads: jax.Array, k: int, bits_per_symbol: int = 2, *,
+                  canonical: bool = False,
+                  canonical_impl: str = "fused") -> jax.Array:
+    """(n_reads, m) codes -> flat (n_reads * (m - k + 1),) k-mer words.
+
+    `canonical`/`canonical_impl` as in `pack_kmers`: canonicalization happens
+    inside the extraction loop, not as a separate pass over the output.
+    """
+    return pack_kmers(reads, k, bits_per_symbol, canonical=canonical,
+                      canonical_impl=canonical_impl).reshape(-1)
 
 
 def unpack_kmer_np(word: int, k: int, bits_per_symbol: int = 2) -> str:

@@ -38,6 +38,23 @@ compressors run the LSD radix sort built on the same partition engine
 (core/sort.py, kernels/radix_partition.py). Setting both knobs to 'argsort'
 restores the comparison-sort oracle; results are bit-identical.
 
+Fused hot path (this PR's three passes removed, per Eqs. 10-13):
+- Canonicalization happens INSIDE extraction (`canonical_impl='fused'`):
+  the reverse-complement word is maintained incrementally in the shift-or
+  parse loop, so `canonical=True` no longer pays a separate O(k) revcomp
+  sweep per word. `'sweep'` keeps the two-pass oracle.
+- The '2d' topology routes both hops off ONE partition plan
+  (`route2d_impl='oneplan'`): the owner id is decomposed as (dest_col,
+  dest_row) digits -- literally a 2-digit radix key -- and bucketed
+  col-major in a single histogram/rank pass, so hop 1's all_to_all chunks
+  arrive pre-partitioned by destination row and hop 2 is a plain transpose
+  + all_to_all (no re-hash, no second plan). `'perhop'` keeps the
+  plan-per-hop oracle.
+- Phase 2 accumulates with the fused Pallas boundary+segment-sum sweep
+  (core/sort.accumulate impl='fused'): the received stream is read once,
+  with no trailing XLA `segment_sum` re-read.
+All three fusions are bit-identical to their oracles.
+
 Executable cache: `count_kmers` memoizes the jitted shard_map executable on
 (cfg, mesh, axis names, reads shape/dtype, slack), so repeated same-shape
 calls -- including the overflow-retry round, benchmarks' best-of-3 loops and
@@ -78,13 +95,22 @@ class DAKCConfig:
     # 'argsort' = jnp comparison-sort oracle; bit-identical results).
     partition_impl: str = "radix"  # L2 bucketing (bucket_by_owner)
     phase2_impl: str = "radix"     # Phase-2 sort + L3 chunk-local compressors
+    # 'fused' folds min(word, revcomp) into the extraction loop (O(1)/base);
+    # 'sweep' is the separate-pass oracle. Only read when canonical=True.
+    canonical_impl: str = "fused"
+    # 'oneplan' routes both 2d hops off one (col, row)-digit partition plan;
+    # 'perhop' is the plan-per-hop oracle. Only read when topology='2d'.
+    route2d_impl: str = "oneplan"
 
     def __post_init__(self):
-        for knob in ("partition_impl", "phase2_impl"):
+        for knob, allowed in (
+                ("partition_impl", ("radix", "argsort")),
+                ("phase2_impl", ("radix", "argsort")),
+                ("canonical_impl", ("fused", "sweep")),
+                ("route2d_impl", ("oneplan", "perhop"))):
             v = getattr(self, knob)
-            if v not in ("radix", "argsort"):
-                raise ValueError(
-                    f"{knob} must be 'radix' or 'argsort', got {v!r}")
+            if v not in allowed:
+                raise ValueError(f"{knob} must be one of {allowed}, got {v!r}")
 
 
 class DAKCStats(NamedTuple):
@@ -118,7 +144,7 @@ def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int,
         acc = accumulate(
             radix_sort(masked, encoding.kmer_bits(k, bps),
                        sentinel_val=sent_i),
-            sentinel_val=sent_i, boundaries_impl="pallas")
+            sentinel_val=sent_i, impl="fused")
     else:
         acc = accumulate(jnp.sort(masked), sentinel_val=sent_i)
     n = words.shape[0]
@@ -137,13 +163,26 @@ def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int,
 
 
 def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
-           grid, k, bps, impl="radix"):
+           grid, k, bps, impl="radix", route2d="oneplan"):
     """Bucket + (possibly hierarchical) all_to_all for one lane set.
 
     Returns (recv_words, recv_counts_or_none, sent_valid, wire_words, overflow).
     `grid` is None for 1d or (rows, cols) for the 2d topology.
     counts lane, when present, follows the words through every stage
     (one multi-lane partition per hop; see aggregation.bucket_by_owner).
+
+    2d topologies ('route2d'):
+    - 'oneplan' (default): the owner id is decomposed into its two digits
+      (dest_col, dest_row) and the stream is bucketed ONCE, col-major, by
+      the single-plan radix partition. Hop 1's all_to_all chunks are then
+      contiguous per destination column AND pre-partitioned by destination
+      row, so hop 2 is a plain (src_col, dest_row) -> (dest_row, src_col)
+      transpose + all_to_all: no re-hash of the received words, no second
+      histogram/rank plan. One partition plan per route.
+    - 'perhop': the oracle -- each hop re-derives owners from the received
+      words and builds its own plan (two plans per route). Final counts are
+      bit-identical; only the overflow granularity differs (per-(col,row)
+      bucket vs per-column share), which the overflow round absorbs.
     """
     mask = encoding.kmer_mask(k, bps)
 
@@ -166,8 +205,32 @@ def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
             sent_valid, wire, ovf
 
     rows, cols = grid
-    # Stage 1: route along the column axis to the destination column.
     owners = owner_pe(words & mask, num_pes)
+    if route2d == "oneplan":
+        # ONE two-digit radix plan: bucket = dest_col * rows + dest_row.
+        bucket = (owners % cols) * rows + owners // cols
+        br = bucket_by_owner(words, bucket, valid, num_pes, capacity,
+                             counts=counts_or_none, impl=impl)
+        r1w = jax.lax.all_to_all(br.tile, axis_names[1], 0, 0, tiled=True)
+        r1c = None if br.counts is None else jax.lax.all_to_all(
+            br.counts, axis_names[1], 0, 0, tiled=True)
+        sentv = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
+
+        def swap(t):  # (src_col, dest_row, cap) -> (dest_row, src_col, cap)
+            return t.reshape(cols, rows, capacity).transpose(1, 0, 2) \
+                .reshape(rows * cols, capacity)
+
+        r2w = jax.lax.all_to_all(swap(r1w), axis_names[0], 0, 0, tiled=True)
+        r2c = None if r1c is None else jax.lax.all_to_all(
+            swap(r1c), axis_names[0], 0, 0, tiled=True)
+        hop2_sent = jnp.sum(r1w != sentv).astype(jnp.int32)
+        sent_valid = br.fill.sum().astype(jnp.int32) + hop2_sent
+        wire = jnp.int32(2 * num_pes * capacity)
+        return r2w.reshape(-1), (None if r2c is None else r2c.reshape(-1)), \
+            sent_valid, wire, br.overflow
+
+    # 'perhop' oracle: stage 1 routes along the column axis to the
+    # destination column, stage 2 re-plans from the received words.
     dest_col = owners % cols
     cap1 = capacity * rows  # per-column capacity: rows destinations share it
     r1w, r1c, fill1, ovf1 = exchange(words, counts_or_none, valid, dest_col,
@@ -176,7 +239,6 @@ def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
     flat1c = None if r1c is None else r1c.reshape(-1)
     sentv = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
     valid1 = flat1 != sentv
-    # Stage 2: route along the row axis to the destination row.
     owners1 = owner_pe(flat1 & mask, num_pes)
     dest_row = owners1 // cols
     cap2 = capacity * cols  # stage-2 input is cols * cap1 entries
@@ -190,47 +252,41 @@ def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
 
 def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
                  cap_h: int, mode: str, axis_names, grid):
-    """One scan step: parse -> L3 -> L2 tiles -> all_to_all."""
+    """One scan step: parse -> L3 -> L2 tiles -> all_to_all.
+
+    Canonicalization (cfg.canonical) happens inside the extraction loop
+    (encoding.extract_kmers canonical=/canonical_impl=): no separate
+    revcomp sweep over the packed words.
+    """
     k, bps = cfg.k, cfg.bits_per_symbol
-    words = encoding.extract_kmers(chunk, k, bps)
-    if cfg.canonical:
-        words = encoding.canonical(words, k)
+    words = encoding.extract_kmers(chunk, k, bps, canonical=cfg.canonical,
+                                   canonical_impl=cfg.canonical_impl)
     raw = jnp.int32(words.shape[0])
     valid = jnp.ones(words.shape, bool)
+    route = functools.partial(_route, num_pes=num_pes, axis_names=axis_names,
+                              grid=grid, k=k, bps=bps,
+                              impl=cfg.partition_impl,
+                              route2d=cfg.route2d_impl)
 
     if mode == "packed":
         from repro.core.aggregation import l3_compress
         payload, pvalid = l3_compress(words, k, bps, impl=cfg.phase2_impl)
-        rw, _, sentn, wire, ovf = _route(payload, None, pvalid,
-                                         num_pes=num_pes, capacity=cap_n,
-                                         axis_names=axis_names, grid=grid,
-                                         k=k, bps=bps,
-                                         impl=cfg.partition_impl)
+        rw, _, sentn, wire, ovf = route(payload, None, pvalid,
+                                        capacity=cap_n)
         return (rw, None, None), (raw, sentn, wire, ovf)
 
     if mode == "dual":
         nw, nv, hw, hc, hv = _l3_split_dual(words, valid, k, bps,
                                             impl=cfg.phase2_impl)
-        rnw, _, sentn, wire_n, ovf_n = _route(nw, None, nv, num_pes=num_pes,
-                                              capacity=cap_n,
-                                              axis_names=axis_names, grid=grid,
-                                              k=k, bps=bps,
-                                              impl=cfg.partition_impl)
-        rhw, rhc, senth, wire_h, ovf_h = _route(hw, hc, hv, num_pes=num_pes,
-                                                capacity=cap_h,
-                                                axis_names=axis_names,
-                                                grid=grid, k=k, bps=bps,
-                                                impl=cfg.partition_impl)
+        rnw, _, sentn, wire_n, ovf_n = route(nw, None, nv, capacity=cap_n)
+        rhw, rhc, senth, wire_h, ovf_h = route(hw, hc, hv, capacity=cap_h)
         # HEAVY wire carries a word + an int32 count per slot.
         word_b = jnp.iinfo(nw.dtype).bits // 8
         wire = wire_n + (wire_h * (word_b + 4)) // word_b
         return (rnw, rhw, rhc), (raw, sentn + senth, wire, ovf_n + ovf_h)
 
     # mode == 'none': BSP-style raw words, single lane, no compression.
-    rw, _, sentn, wire, ovf = _route(words, None, valid, num_pes=num_pes,
-                                     capacity=cap_n, axis_names=axis_names,
-                                     grid=grid, k=k, bps=bps,
-                                     impl=cfg.partition_impl)
+    rw, _, sentn, wire, ovf = route(words, None, valid, capacity=cap_n)
     return (rw, None, None), (raw, sentn, wire, ovf)
 
 
@@ -240,13 +296,15 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
 
     phase2_impl='radix': ONE stable LSD radix sort of the full stream
     (ceil(2k / 8) counting-partition passes over the Pallas engine, weights
-    riding the same scatters) followed by the Pallas boundary sweep -- no
-    comparison sort, no per-lane re-sorts. 'argsort' keeps the jnp oracle.
+    riding the same scatters) followed by the FUSED Pallas boundary +
+    segment-sum sweep (accumulate impl='fused': the received stream is read
+    once, no XLA segment_sum re-read). 'argsort' keeps the jnp oracle
+    (comparison sort + boundary flags + segment_sum).
     """
     k, bps = cfg.k, cfg.bits_per_symbol
     impl = cfg.phase2_impl
     total_bits = encoding.kmer_bits(k, bps)
-    bimpl = "pallas" if impl == "radix" else "jnp"
+    accum_impl = "fused" if impl == "radix" else "segment_sum"
     sent = int(jnp.iinfo(recv_normal.dtype).max)
     flat = recv_normal.reshape(-1)
     if mode == "packed":
@@ -254,7 +312,7 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
         kmers, weights = l3_decompress(flat, k, bps)
         keys, w = sort_with_weights(kmers, weights, impl=impl,
                                     total_bits=total_bits, sentinel_val=sent)
-        return accumulate(keys, w, sentinel_val=sent, boundaries_impl=bimpl)
+        return accumulate(keys, w, sentinel_val=sent, impl=accum_impl)
     if mode == "dual":
         hflat = recv_heavy.reshape(-1)
         hcnt = recv_heavy_counts.reshape(-1)
@@ -264,12 +322,12 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
              jnp.where(hflat != hflat.dtype.type(sent), hcnt, 0)])
         keys, w = sort_with_weights(keys, weights, impl=impl,
                                     total_bits=total_bits, sentinel_val=sent)
-        return accumulate(keys, w, sentinel_val=sent, boundaries_impl=bimpl)
+        return accumulate(keys, w, sentinel_val=sent, impl=accum_impl)
     if impl == "radix":
         skeys = radix_sort(flat, total_bits, sentinel_val=sent)
     else:
         skeys = jnp.sort(flat)
-    return accumulate(skeys, sentinel_val=sent, boundaries_impl=bimpl)
+    return accumulate(skeys, sentinel_val=sent, impl=accum_impl)
 
 
 def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,

@@ -17,10 +17,15 @@ ceil(total_bits / 8) at the default 8-bit digit (Eq. 13).
 - `sort_with_weights(impl=)`: 'argsort' is the jnp oracle (stable XLA sort,
   kept for parity tests and `merge_accum`); 'radix' routes through the
   engine.
-- `accumulate`: the sorted-run sweep; `boundaries_impl='pallas'` computes the
-  run-start flags with the `segment_boundaries_pallas` kernel (the
-  memory-bound compare pass of Eq. 13), `'jnp'` stays the oracle. All shapes
-  are static: outputs are input-length arrays plus a `num_unique` scalar.
+- `accumulate`: the sorted-run sweep. `impl='fused'` (the hot path) runs ONE
+  Pallas boundary+segment-sum sweep (`segment_accumulate_pallas`): the
+  received stream is read once and per-run totals come back from the kernel,
+  closing Eq. 13's last gap -- no XLA `jax.ops.segment_sum` re-read. The
+  retained oracle `impl='segment_sum'` keeps the two-pass layout
+  (`boundaries_impl='pallas'` computes run-start flags with the
+  `segment_boundaries_pallas` kernel, `'jnp'` inline); all impls are
+  bit-identical. All shapes are static: outputs are input-length arrays plus
+  a `num_unique` scalar.
 """
 
 from __future__ import annotations
@@ -67,7 +72,8 @@ def _radix_sort_lanes(keys: jax.Array, lanes: Sequence[jax.Array],
         digit = ((keys >> dt(shift)) & dt(radix - 1)).astype(jnp.int32)
         if sentinel_val is not None:
             digit = jnp.where(keys == dt(sentinel_val), radix, digit)
-        pos, _ = ops.radix_partition_plan(digit, num_buckets)
+        plan = ops.make_partition_plan(digit, num_buckets)
+        pos = plan.positions
         keys = jnp.zeros_like(keys).at[pos].set(keys)
         lanes = tuple(jnp.zeros_like(l).at[pos].set(l) for l in lanes)
     return keys, lanes
@@ -139,19 +145,26 @@ def sort_with_weights(keys: jax.Array, weights: jax.Array, *,
 
 
 @functools.partial(jax.jit, static_argnames=("sentinel_val",
-                                             "boundaries_impl"))
+                                             "boundaries_impl", "impl"))
 def accumulate(sorted_keys: jax.Array,
                weights: Optional[jax.Array] = None,
                *,
                sentinel_val,
-               boundaries_impl: str = "jnp") -> AccumResult:
+               boundaries_impl: str = "jnp",
+               impl: str = "segment_sum") -> AccumResult:
     """Sweep a sorted array into (unique keys, counts) -- paper's `Accumulate`.
 
     sorted_keys: ascending, padding == sentinel_val (sorts last).
     weights: optional int32 per-entry multiplicity (L3 HEAVY packets carry
              count > 1); defaults to 1 per entry.
-    boundaries_impl: 'jnp' computes run-start flags inline; 'pallas' uses the
-             segment_boundaries kernel (the streaming compare pass).
+    impl: 'fused' runs the single Pallas boundary+segment-sum sweep
+          (`segment_accumulate_pallas`: the stream is read once, per-run
+          totals come back from the kernel, one compaction scatter finishes);
+          'segment_sum' is the retained oracle -- boundary flags then an XLA
+          `jax.ops.segment_sum` over the weights. Bit-identical results.
+    boundaries_impl ('segment_sum' impl only): 'jnp' computes run-start flags
+          inline; 'pallas' uses the segment_boundaries kernel (the streaming
+          compare pass).
     """
     n = sorted_keys.shape[0]
     sent = sorted_keys.dtype.type(sentinel_val)
@@ -160,6 +173,29 @@ def accumulate(sorted_keys: jax.Array,
         w = valid.astype(jnp.int32)
     else:
         w = jnp.where(valid, weights.astype(jnp.int32), 0)
+    if impl == "fused":
+        tile = _partition_tile(n)
+        pad = (-n) % tile
+        if pad:
+            keys_p = jnp.concatenate(
+                [sorted_keys, jnp.full((pad,), sent, sorted_keys.dtype)])
+            w_p = jnp.concatenate([w, jnp.zeros((pad,), jnp.int32)])
+        else:
+            keys_p, w_p = sorted_keys, w
+        is_new, is_end, run_tot = ops.segment_accumulate(
+            keys_p, w_p, sentinel_val=int(sentinel_val), tile=tile)
+        is_new, is_end, run_tot = is_new[:n], is_end[:n], run_tot[:n]
+        seg_safe = jnp.maximum(jnp.cumsum(is_new.astype(jnp.int32)) - 1, 0)
+        unique = jnp.full((n,), sent, sorted_keys.dtype)
+        unique = unique.at[jnp.where(is_new, seg_safe, n)].set(
+            sorted_keys, mode="drop")
+        counts = jnp.zeros((n,), jnp.int32).at[
+            jnp.where(is_end, seg_safe, n)].set(run_tot, mode="drop")
+        num_unique = jnp.sum(is_new.astype(jnp.int32))
+        return AccumResult(unique=unique, counts=counts,
+                           num_unique=num_unique)
+    if impl != "segment_sum":
+        raise ValueError(f"unknown accumulate impl {impl!r}")
     if boundaries_impl == "pallas":
         tile = _partition_tile(n)
         pad = (-n) % tile

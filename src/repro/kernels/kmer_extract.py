@@ -6,6 +6,15 @@ of reads sits in VMEM, the shift-or runs over vector registers, and the
 output tile streams back to HBM -- one pass, matching the analytical model's
 Eq. 10 traffic (read bytes in, word bytes out).
 
+Canonical k-mers are folded into the same pass: while the forward word is
+built by the rolling `kmer = (kmer << 2) | c`, the reverse-complement word is
+maintained incrementally in parallel -- base j complements to `c ^ 3` and
+lands at bit offset 2j of the RC word -- so emitting `min(fwd, rc)` costs
+O(1) extra VPU ops per unrolled step instead of the separate O(k)
+`encoding.revcomp` sweep over the packed output that Eq. 10 never budgeted
+for. This is the Gerbil/KMC-3 single-pass-canonicalization insight moved
+into the extraction kernel (see PAPERS.md).
+
 Tiling: grid over read-row blocks; each kernel instance owns a
 (block_reads, m) tile of codes and produces the (block_reads, m-k+1) word
 tile. m (= read length, 100-151nt) is padded to the 128-lane boundary by the
@@ -24,30 +33,43 @@ from repro.core import encoding
 
 
 def _kmer_extract_kernel(codes_ref, out_ref, *, k: int, bits_per_symbol: int,
-                         n_pos: int):
+                         n_pos: int, canonical: bool):
     codes = codes_ref[...]
     dt = out_ref.dtype
     acc = jnp.zeros(codes.shape[:-1] + (n_pos,), dt)
     shift = dt.type(bits_per_symbol)
+    rc = jnp.zeros_like(acc) if canonical else None
     for j in range(k):  # k static: unrolled shift-or, pure VPU ops
-        window = jax.lax.slice_in_dim(codes, j, j + n_pos, axis=-1)
-        acc = (acc << shift) | window.astype(dt)
-    out_ref[...] = acc
+        window = jax.lax.slice_in_dim(codes, j, j + n_pos,
+                                      axis=-1).astype(dt)
+        acc = (acc << shift) | window
+        if canonical:
+            # incremental reverse complement: complement (c ^ 3) of base j
+            # occupies bit offset 2j of the RC word -- no post-hoc sweep.
+            rc = rc | ((window ^ dt.type(3)) << dt.type(2 * j))
+    out_ref[...] = jnp.minimum(acc, rc) if canonical else acc
 
 
 def kmer_extract_pallas(reads: jax.Array, k: int, bits_per_symbol: int = 2,
-                        block_reads: int = 8, interpret: bool = False
-                        ) -> jax.Array:
-    """(n_reads, m) codes -> (n_reads, m-k+1) packed words via pallas_call."""
+                        block_reads: int = 8, canonical: bool = False,
+                        interpret: bool = False) -> jax.Array:
+    """(n_reads, m) codes -> (n_reads, m-k+1) packed words via pallas_call.
+
+    canonical=True emits min(word, revcomp(word)) per position (2-bit DNA
+    only), computed inside the extraction loop -- one pass over the codes.
+    """
     n_reads, m = reads.shape
     n_pos = m - k + 1
     dt = encoding.kmer_dtype(k, bits_per_symbol)
+    if canonical and bits_per_symbol != 2:
+        raise ValueError("canonical k-mers are defined for 2-bit DNA codes")
     if n_reads % block_reads != 0:
         raise ValueError(f"n_reads {n_reads} % block_reads {block_reads} != 0")
     grid = (n_reads // block_reads,)
     return pl.pallas_call(
         functools.partial(_kmer_extract_kernel, k=k,
-                          bits_per_symbol=bits_per_symbol, n_pos=n_pos),
+                          bits_per_symbol=bits_per_symbol, n_pos=n_pos,
+                          canonical=canonical),
         grid=grid,
         in_specs=[pl.BlockSpec((block_reads, m), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_reads, n_pos), lambda i: (i, 0)),

@@ -20,21 +20,27 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.kmer_extract import kmer_extract_pallas
 from repro.kernels.radix_hist import radix_hist_pallas
-from repro.kernels.radix_partition import (bucket_hist_pallas,
+from repro.kernels.radix_partition import (PartitionPlan, bucket_hist_pallas,
                                            bucket_positions_pallas,
+                                           make_partition_plan as
+                                           _make_partition_plan,
                                            partition_plan)
-from repro.kernels.segment_count import segment_boundaries_pallas
+from repro.kernels.segment_count import (segment_accumulate_pallas,
+                                         segment_boundaries_pallas)
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3),
+                   static_argnames=("k", "bits_per_symbol", "block_reads",
+                                    "canonical"))
 def kmer_extract(reads: jax.Array, k: int, bits_per_symbol: int = 2,
-                 block_reads: int = 8) -> jax.Array:
+                 block_reads: int = 8, *,
+                 canonical: bool = False) -> jax.Array:
     return kmer_extract_pallas(reads, k, bits_per_symbol,
-                               block_reads=block_reads,
+                               block_reads=block_reads, canonical=canonical,
                                interpret=_interpret())
 
 
@@ -50,6 +56,14 @@ def segment_boundaries(sorted_keys: jax.Array, *, sentinel_val: int,
                        tile: int = 1024) -> jax.Array:
     return segment_boundaries_pallas(sorted_keys, sentinel_val, tile=tile,
                                      interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("sentinel_val", "tile"))
+def segment_accumulate(sorted_keys: jax.Array, weights: jax.Array, *,
+                       sentinel_val: int, tile: int = 1024):
+    """Fused boundary + segmented-sum sweep: (is_new, is_end, run_totals)."""
+    return segment_accumulate_pallas(sorted_keys, weights, sentinel_val,
+                                     tile=tile, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2))
@@ -71,6 +85,15 @@ def radix_partition_plan(buckets: jax.Array, num_buckets: int,
                          tile: int = 1024):
     """(positions, per-bucket totals) of the stable sort-free partition."""
     return partition_plan(buckets, num_buckets, tile, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def make_partition_plan(buckets: jax.Array, num_buckets: int,
+                        tile: int = 1024) -> PartitionPlan:
+    """Reusable PartitionPlan (positions, totals, starts); ONE histogram
+    launch, applied to any number of payload lanes by the caller."""
+    return _make_partition_plan(buckets, num_buckets, tile,
+                                interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=(

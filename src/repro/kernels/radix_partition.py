@@ -5,9 +5,19 @@ R = 2**digit_bits) distinct values, so a comparison sort of the stream is pure
 waste: a counting/radix partition moves every element exactly once. This is
 the KMC/Gerbil bucket-partition insight, and it is what the paper's Phase-2
 analytical model (Eq. 13) charges for -- streaming sweeps, not O(n log^2 n)
-bitonic networks.
+bitonic networks. On the routing side (Eqs. 11-12 traffic), the one-plan 2d
+decomposition below also removes the per-hop re-planning pass the model
+never budgeted: hierarchical routing costs one extra all_to_all, not an
+extra histogram of the stream.
 
-Two kernels, composed by `partition_plan`:
+Two kernels, composed by `make_partition_plan` into a reusable
+`PartitionPlan` object (positions + per-bucket totals + exclusive-prefix
+starts). A plan is built from ONE histogram pass and then applied to any
+number of payload lanes by pure scatters -- `aggregation.bucket_by_owner`
+routes its words and counts lanes off one plan, and the `'2d'` routing
+topology decomposes the owner id into (col, row) digits so both hops of the
+hierarchical all_to_all run off a single plan (the second hop is a plain
+transpose of the already-partitioned tile; see `fabsp._route`).
 
 1. `bucket_hist_pallas`: per-tile bucket histogram. Each grid instance
    histograms a VMEM-resident tile of int32 bucket ids via a broadcast
@@ -29,7 +39,7 @@ stable-argsort oracle (kernels/ref.py) and safe for LSD radix passes.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -105,20 +115,28 @@ def bucket_positions_pallas(buckets: jax.Array, base: jax.Array,
     )(buckets, base)
 
 
-def partition_plan(buckets: jax.Array, num_buckets: int, tile: int = 1024,
-                   interpret: bool = False
-                   ) -> Tuple[jax.Array, jax.Array]:
+class PartitionPlan(NamedTuple):
+    """One reusable histogram/rank plan of a stable bucket partition.
+
+    Built from a single histogram pass; applying it to a payload lane is one
+    scatter (`positions`), so any number of lanes -- and, for multi-digit
+    bucket keys, any number of routing hops whose digit order matches the
+    bucket-major layout -- share the same plan.
+    """
+    positions: jax.Array  # (n,) int32 destination slot of every element
+    totals: jax.Array     # (num_buckets,) int32 per-bucket counts (no pads)
+    starts: jax.Array     # (num_buckets,) int32 exclusive prefix of totals
+
+
+def make_partition_plan(buckets: jax.Array, num_buckets: int,
+                        tile: int = 1024,
+                        interpret: bool = False) -> PartitionPlan:
     """Full sort-free partition plan for (n,) int32 bucket ids.
 
     Pads to a tile multiple internally (pad elements land in the LAST bucket,
     stably after every real element, so real positions never see them --
     callers reserve bucket `num_buckets - 1` as the trash/tail bucket or
-    accept a pure tail region).
-
-    returns (positions, totals):
-      positions: (n,) int32 -- element i's slot in the bucket-major layout;
-                 real elements always land in [0, n).
-      totals:    (num_buckets,) int32 per-bucket counts (pads excluded).
+    accept a pure tail region). Real elements always land in [0, n).
     """
     n = buckets.shape[0]
     tile = min(tile, max(8, n))
@@ -144,4 +162,13 @@ def partition_plan(buckets: jax.Array, num_buckets: int, tile: int = 1024,
         pos = pos[:n]
         totals = totals - jnp.asarray(
             [0] * (num_buckets - 1) + [pad], jnp.int32)
-    return pos, totals
+    return PartitionPlan(positions=pos, totals=totals, starts=bucket_start)
+
+
+def partition_plan(buckets: jax.Array, num_buckets: int, tile: int = 1024,
+                   interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Back-compat wrapper: (positions, totals) of `make_partition_plan`."""
+    plan = make_partition_plan(buckets, num_buckets, tile,
+                               interpret=interpret)
+    return plan.positions, plan.totals

@@ -17,10 +17,18 @@ from repro.core import encoding
 
 # --- kmer_extract ----------------------------------------------------------
 
-def kmer_extract_ref(reads: jax.Array, k: int, bits_per_symbol: int = 2
-                     ) -> jax.Array:
-    """(n_reads, m) codes -> (n_reads, m-k+1) packed words."""
-    return encoding.pack_kmers(reads, k, bits_per_symbol)
+def kmer_extract_ref(reads: jax.Array, k: int, bits_per_symbol: int = 2,
+                     canonical: bool = False) -> jax.Array:
+    """(n_reads, m) codes -> (n_reads, m-k+1) packed words.
+
+    canonical=True is the SWEEP oracle: pack forward words, then the
+    separate O(k) revcomp pass -- the semantic ground truth the fused
+    in-loop canonicalization must match bit-for-bit.
+    """
+    words = encoding.pack_kmers(reads, k, bits_per_symbol)
+    if canonical:
+        words = encoding.canonical(words, k)
+    return words
 
 
 # --- radix_hist -------------------------------------------------------------
@@ -84,6 +92,30 @@ def segment_boundaries_ref(sorted_keys: jax.Array, sentinel_val: int
     prev = jnp.concatenate([jnp.full((1,), sent, sorted_keys.dtype),
                             sorted_keys[:-1]])
     return (sorted_keys != sent) & (sorted_keys != prev)
+
+
+def segment_accumulate_ref(sorted_keys: jax.Array, weights: jax.Array,
+                           sentinel_val: int):
+    """Fused-sweep oracle: (is_new, is_end, run_totals) of a sorted stream.
+
+    is_new / is_end flag the first / last element of each valid run;
+    run_totals holds the run's summed weight at its last element (0
+    elsewhere). Semantic ground truth for `segment_accumulate_pallas`.
+    """
+    n = sorted_keys.shape[0]
+    sent = sorted_keys.dtype.type(sentinel_val)
+    valid = sorted_keys != sent
+    w = jnp.where(valid, weights.astype(jnp.int32), 0)
+    prev = jnp.concatenate([jnp.full((1,), sent, sorted_keys.dtype),
+                            sorted_keys[:-1]])
+    nxt = jnp.concatenate([sorted_keys[1:],
+                           jnp.full((1,), sent, sorted_keys.dtype)])
+    is_new = valid & (sorted_keys != prev)
+    is_end = valid & (sorted_keys != nxt)
+    seg = jnp.maximum(jnp.cumsum(is_new.astype(jnp.int32)) - 1, 0)
+    sums = jax.ops.segment_sum(w, seg, num_segments=n)
+    run_tot = jnp.where(is_end, sums[seg], 0)
+    return is_new, is_end, run_tot
 
 
 # --- flash_attention --------------------------------------------------------

@@ -1,10 +1,25 @@
-"""Pallas TPU kernel: sorted-run boundary detection (the Accumulate sweep).
+"""Pallas TPU kernels: sorted-run sweeps (the Accumulate phase).
 
 Paper Alg. 1 `Accumulate`: one comparison pass over the sorted k-mer stream.
-Cross-tile dependence (the first element of a tile compares against the last
-element of the previous tile) is resolved by passing a second input block
-offset by one tile -- each instance reads its own tile plus the single
-preceding word, so tiles stay independent and the grid is fully parallel.
+Two kernels, both tiled over the stream:
+
+1. `segment_boundaries_pallas`: run-start flags only (the compare pass).
+   Cross-tile dependence (first element of a tile compares against the last
+   element of the previous tile) is resolved by passing a second input block
+   offset by one tile -- each instance reads its own tile plus the single
+   preceding word, so tiles stay independent and the grid is fully parallel.
+2. `segment_accumulate_pallas`: the FUSED boundary + segment-sum sweep.
+   The old data path paid two extra passes after the boundary kernel -- an
+   XLA `jax.ops.segment_sum` over the weights plus a gather for the run
+   keys -- re-reading the received stream that Eq. 13 charges for exactly
+   one streaming read. The fused kernel reads (keys, weights) once and
+   emits, per element: the run-start flag, the run-end flag, and (at run
+   ends only) the completed run's total weight. Per-run totals are an
+   inclusive *segmented* cumsum computed tile-locally (plain cumsum minus a
+   cummax-selected base at the latest run start); runs that span tiles are
+   carried through a single SMEM scratch cell -- TPU grids execute
+   sequentially per core, so the carry is exact. The caller finishes with
+   one O(n) compaction scatter (core/sort.accumulate, impl='fused').
 """
 
 from __future__ import annotations
@@ -14,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _segment_kernel(keys_ref, prev_ref, out_ref, *, sentinel_val: int):
@@ -48,3 +64,75 @@ def segment_boundaries_pallas(sorted_keys: jax.Array, sentinel_val: int,
         out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
         interpret=interpret,
     )(padded, padded)
+
+
+def _segment_accum_kernel(cur_ref, prev_ref, next_ref, w_ref,
+                          isnew_ref, isend_ref, tot_ref, carry_ref, *,
+                          sentinel_val: int):
+    keys = cur_ref[...]
+    dt = keys.dtype.type
+    sent = dt(sentinel_val)
+    prev = jnp.concatenate([prev_ref[...][-1:], keys[:-1]])
+    nxt = jnp.concatenate([keys[1:], next_ref[...][:1]])
+    valid = keys != sent
+    w = jnp.where(valid, w_ref[...], 0).astype(jnp.int32)
+    is_new = valid & (keys != prev)
+    is_end = valid & (keys != nxt)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        carry_ref[0] = jnp.int32(0)  # explicit: x64 mode defaults ints to i64
+
+    carry = carry_ref[0]
+    # Inclusive segmented cumsum of w via plain cumsum minus the run base:
+    # the base of element i is T - w at the latest run start <= i (cummax
+    # works because T is non-decreasing), or -carry when the open head run
+    # began in an earlier tile. 2-D shapes keep the scans TPU-legal.
+    total = jnp.cumsum(w.reshape(1, -1), axis=1,
+                       dtype=jnp.int32).reshape(-1)
+    cand = jnp.where(is_new, total - w, -carry)
+    base = jax.lax.cummax(cand.reshape(1, -1), axis=1).reshape(-1)
+    seg_sum = total - base
+    isnew_ref[...] = is_new
+    isend_ref[...] = is_end
+    tot_ref[...] = jnp.where(is_end, seg_sum, 0)
+    # Carry the still-open tail run into the next grid step (sorted streams
+    # put sentinels last, so an invalid tail element means no open run).
+    carry_ref[0] = jnp.where(is_end[-1] | ~valid[-1], 0,
+                             seg_sum[-1]).astype(jnp.int32)
+
+
+def segment_accumulate_pallas(sorted_keys: jax.Array, weights: jax.Array,
+                              sentinel_val: int, tile: int = 1024,
+                              interpret: bool = False):
+    """One fused sweep: (n,) sorted keys + int32 weights -> per-element
+    (run-start flag, run-end flag, completed-run total at run ends).
+
+    The stream is read exactly once; cross-tile runs are summed exactly via
+    the sequential-grid SMEM carry. Padding must be `sentinel_val` (weights
+    at padded slots are ignored).
+    """
+    n = sorted_keys.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n {n} % tile {tile} != 0")
+    sent = jnp.full((tile,), sentinel_val, sorted_keys.dtype)
+    # one leading + one trailing sentinel tile: the offset-by-one lookback
+    # (prev key) and lookahead (next key) blocks stay tile-aligned.
+    padded = jnp.concatenate([sent, sorted_keys, sent])
+    grid = (n // tile,)
+    return pl.pallas_call(
+        functools.partial(_segment_accum_kernel, sentinel_val=sentinel_val),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i + 1,)),   # my tile
+                  pl.BlockSpec((tile,), lambda i: (i,)),       # previous tile
+                  pl.BlockSpec((tile,), lambda i: (i + 2,)),   # next tile
+                  pl.BlockSpec((tile,), lambda i: (i,))],      # weights
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((tile,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(padded, padded, padded, weights.astype(jnp.int32))

@@ -60,6 +60,29 @@ def check_kc_all_paths():
     assert merge(res2) == oracle
     print("OK fabsp-2d")
 
+    # one-plan 2d routing == per-hop-planning oracle on a real (2, 4) grid
+    cfg2o = dataclasses.replace(cfg2, route2d_impl="perhop")
+    res2o, s2o = fabsp.count_kmers(reads, mesh2, cfg2o, ("row", "col"))
+    assert merge(res2o) == oracle
+    assert int(s2.sent_words) == int(s2o.sent_words)
+    assert float(s2.wire_bytes) == float(s2o.wire_bytes)
+    print("OK fabsp-2d-oneplan-parity")
+
+    # canonical counting (fused in-extract RC) across both topologies
+    canon = {}
+    raw9 = serial.count_kmers_python(np.asarray(reads), 9)
+    from repro.core import encoding
+    for km, c in raw9.items():
+        can = int(encoding.canonical(jnp.asarray([km], jnp.uint32), 9)[0])
+        canon[can] = canon.get(can, 0) + c
+    for name, m, axes in (("1d", mesh, ("pe",)),
+                          ("2d", mesh2, ("row", "col"))):
+        cfgc = fabsp.DAKCConfig(k=9, chunk_reads=32, canonical=True,
+                                topology=name)
+        resc, _ = fabsp.count_kmers(reads, m, cfgc, axes)
+        assert merge(resc) == canon, name
+    print("OK fabsp-canonical-multidev")
+
     resb, sb = bsp.count_kmers(reads, mesh, bsp.BSPConfig(k=k,
                                                           batch_reads=32))
     assert merge(resb) == oracle

@@ -58,6 +58,28 @@ def test_revcomp_known():
     assert out.tolist() == [0b011011]
 
 
+@given(st.integers(2, 13), st.integers(0, 4))
+@settings(max_examples=25, deadline=None)
+def test_pack_kmers_canonical_fused_matches_sweep(k, seed):
+    """Incremental in-loop RC == pack-then-revcomp sweep, bit for bit."""
+    rng = np.random.default_rng(seed)
+    m = k + int(rng.integers(0, 20))
+    codes = jnp.asarray(rng.integers(0, 4, (3, m), dtype=np.uint8))
+    fused = encoding.pack_kmers(codes, k, canonical=True,
+                                canonical_impl="fused")
+    sweep = encoding.pack_kmers(codes, k, canonical=True,
+                                canonical_impl="sweep")
+    plain = encoding.pack_kmers(codes, k)
+    assert (fused == sweep).all()
+    assert (fused == encoding.canonical(plain, k)).all()
+
+
+def test_pack_kmers_canonical_rejects_non_dna():
+    with pytest.raises(ValueError):
+        encoding.pack_kmers(jnp.zeros((2, 8), jnp.uint8), 3,
+                            bits_per_symbol=3, canonical=True)
+
+
 @given(st.integers(1, 12), st.integers(1, 1000))
 @settings(max_examples=25, deadline=None)
 def test_count_pack_roundtrip(k, count):

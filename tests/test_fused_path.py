@@ -1,0 +1,157 @@
+"""The fused Phase-1 -> Phase-2 hot path (ISSUE 2 acceptance).
+
+- Canonical counting end-to-end: count_kmers(canonical=True) ==
+  serial.count_kmers_serial across topology '1d'/'2d', both l3 wire
+  formats, and both canonical_impl settings.
+- One-plan 2D routing: bit-identical to the per-hop-planning oracle, and
+  the default path builds exactly ONE partition plan (one histogram kernel
+  launch) per 2d route.
+- The default count path still lowers with zero HLO sort ops, 2d included.
+- benchmarks/run.py --smoke flag parsing.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import fabsp, serial
+from repro.data import genome
+
+
+@pytest.fixture(scope="module")
+def reads():
+    spec = genome.ReadSetSpec(genome_bases=4096, n_reads=256, read_len=80,
+                              seed=11)
+    return jnp.asarray(genome.sample_reads(spec))
+
+
+@pytest.fixture(scope="module")
+def mesh1d():
+    return Mesh(np.array(jax.devices()[:1]), ("pe",))
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    # P=1 degenerate (row, col) grid: both hierarchical hops still run.
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("row", "col"))
+
+
+def _merge(res):
+    out = {}
+    nsh = res.num_unique.shape[0]
+    L = res.unique.shape[0] // nsh
+    u = np.asarray(res.unique).reshape(nsh, L)
+    c = np.asarray(res.counts).reshape(nsh, L)
+    nu = np.asarray(res.num_unique)
+    for s in range(nsh):
+        for i in range(nu[s]):
+            out[int(u[s, i])] = int(c[s, i])
+    return out
+
+
+def _serial_dict(reads, k):
+    ser = serial.count_kmers_serial(reads, k, canonical=True)
+    n = int(ser.num_unique)
+    return {int(u): int(c)
+            for u, c in zip(ser.unique[:n], ser.counts[:n])}
+
+
+# --- canonical counting end-to-end -------------------------------------------
+
+
+@pytest.mark.parametrize("canonical_impl", ["fused", "sweep"])
+@pytest.mark.parametrize("l3_mode", ["packed", "dual"])
+@pytest.mark.parametrize("topology", ["1d", "2d"])
+def test_canonical_matches_serial(reads, mesh1d, mesh2d, topology, l3_mode,
+                                  canonical_impl):
+    k = 9 if l3_mode == "packed" else 13
+    mesh = mesh1d if topology == "1d" else mesh2d
+    axes = ("pe",) if topology == "1d" else ("row", "col")
+    cfg = fabsp.DAKCConfig(k=k, chunk_reads=64, l3_mode=l3_mode,
+                           topology=topology, canonical=True,
+                           canonical_impl=canonical_impl)
+    res, stats = fabsp.count_kmers(reads, mesh, cfg, axes)
+    assert int(stats.overflow) == 0
+    assert _merge(res) == _serial_dict(reads, k)
+
+
+# --- one-plan 2D routing ------------------------------------------------------
+
+
+def test_2d_oneplan_bit_identical_to_perhop(reads, mesh2d):
+    results, stats = {}, {}
+    for r2d in ("oneplan", "perhop"):
+        cfg = fabsp.DAKCConfig(k=13, chunk_reads=64, topology="2d",
+                               route2d_impl=r2d)
+        res, st = fabsp.count_kmers(reads, mesh2d, cfg, ("row", "col"))
+        assert int(st.overflow) == 0
+        results[r2d], stats[r2d] = res, st
+    a, b = results["oneplan"], results["perhop"]
+    assert (a.unique == b.unique).all()
+    assert (a.counts == b.counts).all()
+    assert (a.num_unique == b.num_unique).all()
+    assert int(stats["oneplan"].sent_words) == int(stats["perhop"].sent_words)
+    assert float(stats["oneplan"].wire_bytes) \
+        == float(stats["perhop"].wire_bytes)
+
+
+def test_2d_route_builds_exactly_one_partition_plan(mesh2d, monkeypatch):
+    """No per-hop re-plan: tracing the default 2d path invokes the L2
+    bucketing (one partition plan = one histogram kernel launch) exactly
+    once per route; the per-hop oracle pays two."""
+    calls = {"n": 0}
+    orig = fabsp.bucket_by_owner
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(fabsp, "bucket_by_owner", counting)
+    try:
+        for r2d, expected in (("oneplan", 1), ("perhop", 2)):
+            fabsp.clear_executable_cache()
+            calls["n"] = 0
+            cfg = fabsp.DAKCConfig(k=13, chunk_reads=32, use_l3=False,
+                                   topology="2d", route2d_impl=r2d)
+            fn = fabsp._counting_executable(cfg, mesh2d, ("row", "col"),
+                                            (64, 60), "uint8", cfg.slack)
+            fn.lower(jax.ShapeDtypeStruct((64, 60), jnp.uint8))
+            assert calls["n"] == expected, r2d
+    finally:
+        fabsp.clear_executable_cache()
+
+
+# --- zero HLO sort ops, 2d + canonical + fused accumulate included -----------
+
+
+def _count_sort_ops(hlo_text: str) -> int:
+    return len(re.findall(r"stablehlo\.sort|\bsort\(|sort\.[0-9]", hlo_text))
+
+
+@pytest.mark.parametrize("topology", ["1d", "2d"])
+def test_default_fused_path_has_no_hlo_sort(mesh1d, mesh2d, topology):
+    mesh = mesh1d if topology == "1d" else mesh2d
+    axes = ("pe",) if topology == "1d" else ("row", "col")
+    cfg = fabsp.DAKCConfig(k=9, chunk_reads=32, canonical=True,
+                           topology=topology)
+    fabsp.clear_executable_cache()
+    fn = fabsp._counting_executable(cfg, mesh, axes, (64, 60), "uint8",
+                                    cfg.slack)
+    txt = fn.lower(jax.ShapeDtypeStruct((64, 60), jnp.uint8)).as_text()
+    fabsp.clear_executable_cache()
+    assert _count_sort_ops(txt) == 0, f"sort op leaked into {topology} path"
+
+
+# --- benchmarks/run.py --smoke ------------------------------------------------
+
+
+def test_run_smoke_flag_parsing():
+    from benchmarks import run as bench_run
+    filters, smoke = bench_run.parse_args(["--smoke", "fig12"])
+    assert smoke and filters == ["fig12"]
+    filters, smoke = bench_run.parse_args(["fig12", "tab3"])
+    assert not smoke and filters == ["fig12", "tab3"]

@@ -19,6 +19,36 @@ def test_kmer_extract_sweep(k, n_reads, m):
     assert (out == exp).all()
 
 
+@pytest.mark.parametrize("k", [3, 9, 15])
+@pytest.mark.parametrize("n_reads,m", [(8, 64), (16, 151)])
+def test_kmer_extract_canonical_sweep(k, n_reads, m):
+    """Fused in-loop canonicalization == pack-then-revcomp-sweep oracle."""
+    reads = jnp.asarray(RNG.integers(0, 4, (n_reads, m), dtype=np.uint8))
+    out = ops.kmer_extract(reads, k, canonical=True)
+    exp = ref.kmer_extract_ref(reads, k, canonical=True)
+    assert out.dtype == exp.dtype
+    assert (out == exp).all()
+
+
+@pytest.mark.parametrize("tile", [128, 512, 1024])
+@pytest.mark.parametrize("frac_pad", [0.0, 0.3])
+def test_segment_accumulate_sweep(tile, frac_pad):
+    """Fused boundary+segment-sum kernel == ref, incl. runs spanning tiles
+    (few distinct keys -> long runs) and sentinel-padded tails."""
+    sent = int(np.iinfo(np.uint32).max)
+    n = 2048
+    keys = np.sort(RNG.integers(0, 37, n).astype(np.uint32))
+    pad = int(n * frac_pad)
+    if pad:
+        keys[-pad:] = sent
+    w = RNG.integers(1, 9, n, dtype=np.int32)
+    keys, w = jnp.asarray(keys), jnp.asarray(w)
+    got = ops.segment_accumulate(keys, w, sentinel_val=sent, tile=tile)
+    exp = ref.segment_accumulate_ref(keys, w, sent)
+    for g, e in zip(got, exp):
+        assert (g == e).all()
+
+
 @pytest.mark.parametrize("digit_bits", [2, 4, 8])
 @pytest.mark.parametrize("shift", [0, 8, 24])
 def test_radix_hist_sweep(digit_bits, shift):

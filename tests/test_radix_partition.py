@@ -104,6 +104,25 @@ print("OK")
     assert "OK" in proc.stdout
 
 
+def test_bucket_by_owner_precomputed_plan():
+    """Passing a precomputed PartitionPlan reproduces the internal-plan
+    result exactly (the one-histogram-for-many-lane-sets hook)."""
+    rng = np.random.default_rng(3)
+    n, pes, cap = 512, 8, 96
+    words = jnp.asarray(rng.integers(0, 1 << 20, n, dtype=np.uint32))
+    owners = jnp.asarray(rng.integers(0, pes, n, dtype=np.int32))
+    valid = jnp.asarray(rng.random(n) < 0.9)
+    key = jnp.where(valid, owners, pes)
+    plan = ops.make_partition_plan(key, pes + 1)
+    a = bucket_by_owner(words, owners, valid, pes, cap)
+    b = bucket_by_owner(words, owners, valid, pes, cap, plan=plan)
+    assert (a.tile == b.tile).all() and (a.fill == b.fill).all()
+    assert int(a.overflow) == int(b.overflow)
+    with pytest.raises(ValueError):
+        bucket_by_owner(words, owners, valid, pes, cap, plan=plan,
+                        impl="argsort")
+
+
 def test_bucket_by_owner_sentinel_payload_padding():
     """Invalid lanes and sentinel payloads never leak into routed slots."""
     words = jnp.asarray([7, SENT32, 9, 11], jnp.uint32)

@@ -103,6 +103,36 @@ def test_accumulate_pallas_boundaries_parity():
         assert int(a.num_unique) == int(b.num_unique)
 
 
+def test_accumulate_fused_parity():
+    """The single Pallas boundary+segment-sum sweep is bit-identical to the
+    segment_sum oracle, weighted and unweighted, padded and not."""
+    rng = np.random.default_rng(6)
+    for n in (64, 1000, 2048, 4096):
+        keys = np.sort(rng.integers(0, 53, n).astype(np.uint32))
+        keys[-n // 5:] = SENT32
+        w = rng.integers(1, 9, n, dtype=np.int32)
+        for weights in (None, jnp.asarray(w)):
+            a = accumulate(jnp.asarray(keys), weights, sentinel_val=SENT32)
+            b = accumulate(jnp.asarray(keys), weights, sentinel_val=SENT32,
+                           impl="fused")
+            assert (a.unique == b.unique).all()
+            assert (a.counts == b.counts).all()
+            assert int(a.num_unique) == int(b.num_unique)
+
+
+def test_accumulate_fused_all_sentinel_and_single_run():
+    """Degenerate streams: empty (all padding) and one giant run."""
+    empty = jnp.full((256,), SENT32, jnp.uint32)
+    r = accumulate(empty, sentinel_val=SENT32, impl="fused")
+    assert int(r.num_unique) == 0
+    assert (r.counts == 0).all()
+    # one giant run spanning 4 kernel tiles: the SMEM carry must sum exactly
+    one = jnp.full((4096,), 7, jnp.uint32)
+    r = accumulate(one, sentinel_val=SENT32, impl="fused")
+    assert int(r.num_unique) == 1
+    assert int(r.unique[0]) == 7 and int(r.counts[0]) == 4096
+
+
 def test_merge_accum():
     a = accumulate(jnp.asarray([1, 1, 4, SENT32], jnp.uint32),
                    sentinel_val=SENT32)
