@@ -26,6 +26,7 @@ MODULES = [
     ("fig11.topology", "benchmarks.topology"),
     ("fig12.aggregation_ablation", "benchmarks.aggregation_ablation"),
     ("perf.phase_breakdown", "benchmarks.phase_breakdown"),
+    ("perf.stream_receiver", "benchmarks.stream_receiver"),
     ("fig13.tuning", "benchmarks.tuning"),
     ("tab3+fig2.memory_overhead", "benchmarks.memory_overhead"),
     ("fig3+fig4+fig5.model_validation", "benchmarks.model_validation"),

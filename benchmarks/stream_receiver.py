@@ -1,0 +1,140 @@
+"""Streaming vs stacked receiver: steady-state time and live receive memory.
+
+The stacked oracle keeps every chunk's received (P, capacity) tile alive
+until the deferred Phase-2 sort, so its receive footprint grows linearly
+with the chunk count; the streaming receiver folds each tile into the
+fixed-capacity count store inside the scan and retires it. This benchmark
+measures both on the same workload:
+
+- `{stream,stacked}.end_to_end`: compile + best-of steady-state wall time
+  of `count_kmers` (the executable cache makes repeats steady-state).
+- `{stream,stacked}.recv_bytes`: ANALYTIC live receive bytes -- stacked =
+  n_chunks * tile bytes (+ heavy lanes), stream = store bytes + ONE
+  in-flight tile -- plus the XLA-measured temp allocation of the compiled
+  executable (the whole pipeline, receiver included).
+- `incremental.update`: steady-state time of one `KmerCounter.update`
+  batch against the persistent store (the serving-ingest scenario).
+
+CPU caveat as everywhere in this suite: absolute times are not
+TPU-representative (the radix kernels run in interpret mode; the
+hash-table insert dispatches to its jnp oracle off-TPU -- see
+ops.hash_insert); the record tracks structure -- the memory gap, and how
+the two receivers' steady states compare at equal semantics.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import SCALE, SMOKE, best_of, report
+from repro.core import encoding, fabsp
+from repro.data import genome
+
+K = 13
+CHUNK_READS = 32       # small chunks -> many chunks -> visible stacking
+
+
+def _reads(n_reads: int, read_len: int, seed: int = 4):
+    spec = genome.ReadSetSpec(genome_bases=4 * n_reads, n_reads=n_reads,
+                              read_len=read_len, heavy_hitter_frac=0.3,
+                              seed=seed)
+    return jnp.asarray(genome.sample_reads(spec))
+
+
+def _recv_bytes_analytic(cfg: fabsp.DAKCConfig, shape, num_pes: int) -> dict:
+    """Live receive-side bytes from the capacity plan (word lanes only for
+    'packed'/'none'; the dual HEAVY lane adds word+int32 pairs)."""
+    mode, cap_n, cap_h = fabsp._plan_caps(cfg, num_pes, shape, cfg.slack)
+    n_reads, m = shape
+    n_chunks = n_reads // cfg.chunk_reads
+    word_b = jnp.iinfo(
+        encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)).bits // 8
+    tile = num_pes * cap_n * word_b
+    if mode == "dual":
+        tile += num_pes * cap_h * (word_b + 4)
+    if cfg.receiver_impl == "stacked":
+        return {"mode": mode, "tile_bytes": tile,
+                "live_recv_bytes": n_chunks * tile}
+    store_cap = fabsp._default_store_capacity(cfg, shape, num_pes)
+    return {"mode": mode, "tile_bytes": tile,
+            "store_bytes": store_cap * (word_b + 4),
+            "live_recv_bytes": store_cap * (word_b + 4) + tile}
+
+
+def run() -> None:
+    n_reads = max(CHUNK_READS * 8, int(512 * SCALE) // CHUNK_READS
+                  * CHUNK_READS)
+    read_len = 100
+    reads = _reads(n_reads, read_len)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+    record: dict = {"schema": 1,
+                    "workload": {"k": K, "n_reads": n_reads,
+                                 "read_len": read_len,
+                                 "chunk_reads": CHUNK_READS,
+                                 "n_chunks": n_reads // CHUNK_READS,
+                                 "backend": jax.default_backend()},
+                    "receivers": {}}
+
+    for recv in ("stream", "stacked"):
+        cfg = fabsp.DAKCConfig(k=K, chunk_reads=CHUNK_READS,
+                               receiver_impl=recv)
+        res = None
+
+        def e2e():
+            nonlocal res
+            res, _ = fabsp.count_kmers(reads, mesh, cfg)
+            res.unique.block_until_ready()
+
+        t0 = time.perf_counter()
+        e2e()                          # compile via the executable cache
+        compile_s = time.perf_counter() - t0
+        steady = best_of(e2e)
+        entry = {"compile_seconds": compile_s, "seconds": steady}
+        entry.update(_recv_bytes_analytic(cfg, tuple(reads.shape), 1))
+        fn = fabsp._counting_executable(cfg, mesh, ("pe",),
+                                        tuple(reads.shape),
+                                        str(reads.dtype), cfg.slack)
+        mem = fn.lower(jax.ShapeDtypeStruct(reads.shape, reads.dtype)) \
+            .compile().memory_analysis()
+        entry["xla_temp_bytes"] = int(mem.temp_size_in_bytes)
+        record["receivers"][recv] = entry
+        report(f"stream_receiver.{recv}.end_to_end", steady,
+               f"recv_bytes={entry['live_recv_bytes']};"
+               f"xla_temp={entry['xla_temp_bytes']}")
+
+    s, st = record["receivers"]["stream"], record["receivers"]["stacked"]
+    record["recv_bytes_ratio_stacked_over_stream"] = (
+        st["live_recv_bytes"] / max(s["live_recv_bytes"], 1))
+    print(f"# stream_receiver.recv_bytes stacked_vs_stream="
+          f"{record['recv_bytes_ratio_stacked_over_stream']:.2f}x",
+          flush=True)
+
+    # Incremental ingest: steady-state update() against a persistent store
+    # sized for 4 such batches (no rehash rounds in steady state).
+    cfg_inc = fabsp.DAKCConfig(
+        k=K, chunk_reads=CHUNK_READS,
+        store_capacity=fabsp._default_store_capacity(
+            fabsp.DAKCConfig(k=K, chunk_reads=CHUNK_READS),
+            (n_reads * 4, read_len), 1))
+    counter = fabsp.KmerCounter(mesh, cfg_inc)
+    counter.update(reads)              # alloc + compile
+
+    def upd():
+        counter.update(reads)
+        counter._skeys.block_until_ready()
+
+    t_upd = best_of(upd)
+    record["incremental"] = {"seconds": t_upd,
+                             "store_capacity": counter.store_capacity}
+    report("stream_receiver.incremental.update", t_upd,
+           f"store_cap={counter.store_capacity}")
+
+    if not SMOKE:
+        with open("BENCH_stream_receiver.json", "w") as f:
+            json.dump(record, f, indent=1)

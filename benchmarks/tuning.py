@@ -19,7 +19,9 @@ from repro.data import genome
 
 
 def run() -> None:
-    n_reads = int(2048 * SCALE)
+    # multiple of the C2 sweep's fixed chunk (256) so every go() call meets
+    # the chunk_reads divisibility precondition at any BENCH_SCALE
+    n_reads = max(256, int(2048 * SCALE) // 256 * 256)
     spec = genome.ReadSetSpec(genome_bases=8 * n_reads, n_reads=n_reads,
                               read_len=100, heavy_hitter_frac=0.3, seed=2)
     reads = jnp.asarray(genome.sample_reads(spec))
@@ -33,6 +35,13 @@ def run() -> None:
 
     base = None
     for chunk in (32, 128, 512, 2048):          # C3 sweep
+        if n_reads % chunk:
+            # smoke/low-BENCH_SCALE datasets are smaller than the large C3
+            # cells; skip (and say so) rather than fail the divisibility
+            # precondition.
+            print(f"# fig13b.c3_chunk_{chunk} skipped: n_reads {n_reads} "
+                  f"not divisible", flush=True)
+            continue
         stats = None
 
         def run_once(c=chunk):

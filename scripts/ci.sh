@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Full CI gate for this repo, in three tiers:
+#   1. tier-1 tests  -- the fast correctness gate (ROADMAP.md's verify
+#      command; pytest.ini excludes @pytest.mark.slow here)
+#   2. slow tier     -- benchmark-shaped / interpret-mode-heavy tests
+#   3. benchmark smoke -- every registered benchmark at toy size, 1 rep,
+#      record writes suppressed (does-it-still-run, not a measurement)
+#
+#   scripts/ci.sh            # everything
+#   scripts/ci.sh --fast     # tier-1 only (what the external driver runs)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--fast" ]]; then
+    echo "CI OK (fast)"
+    exit 0
+fi
+
+echo "== slow tier =="
+python -m pytest -q -m slow
+
+echo "== benchmark smoke =="
+python -m benchmarks.run --smoke
+
+echo "CI OK"

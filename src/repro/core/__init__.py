@@ -1,7 +1,10 @@
 """DAKC core: the paper's contribution as composable JAX modules."""
 
-from repro.core import aggregation, analytical_model, encoding, owner, sort  # noqa: F401
+from repro.core import (aggregation, analytical_model, countstore, encoding,  # noqa: F401
+                        owner, sort)
 from repro.core.bsp import BSPConfig, count_kmers as count_kmers_bsp  # noqa: F401
-from repro.core.fabsp import DAKCConfig, DAKCStats, count_kmers  # noqa: F401
+from repro.core.countstore import CountStore  # noqa: F401
+from repro.core.fabsp import (DAKCConfig, DAKCStats, KmerCounter,  # noqa: F401
+                              count_kmers)
 from repro.core.serial import count_kmers_serial  # noqa: F401
 from repro.core.sort import AccumResult, accumulate  # noqa: F401

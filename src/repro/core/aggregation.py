@@ -14,6 +14,14 @@ TPU adaptation (DESIGN.md Sec. 2):
   10^5 copies of (AATGG)n collapse to one {kmer,count} word instead of
   overflowing one destination's tile.
 
+Receiver side: with the default streaming receiver
+(fabsp.DAKCConfig.receiver_impl='stream') each tile built here lives for
+exactly one scan step -- `l3_decompress` splits it back into (kmer, count)
+lanes and the pair is folded straight into the carry-resident count store
+(core/countstore.py, the paper's Alg. 3 hash-table insert). The 'stacked'
+oracle instead stacks every chunk's tile for one deferred sort -- receive
+memory O(n_chunks * P * capacity) vs the store's fixed footprint.
+
 Static-shape discipline: tiles are fixed `(P, capacity)`; entries beyond a
 destination's fill are the sort-to-the-end sentinel; overflow (entries dropped
 because a destination exceeded capacity) is *counted and returned* -- callers

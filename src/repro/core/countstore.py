@@ -1,0 +1,108 @@
+"""Carry-resident count store: the streaming receiver's state (paper Alg. 3).
+
+The paper's receiving PEs never materialize the incoming stream: each
+aggregated message is folded into a local hash table on arrival, so per-PE
+receive memory is bounded by the table capacity -- independent of how many
+chunks the senders emit. `CountStore` is that table for the TPU pipeline: a
+fixed-capacity open-addressing (linear-probing) array pair carried through
+`fabsp`'s Phase-1 scan. `store_insert` folds one decompressed receive tile
+per scan step (the Pallas insert-or-add kernel, kernels/hash_table.py);
+`store_histogram` is all that remains of Phase 2 -- one sort/compaction of
+the table into the usual `AccumResult`.
+
+Sizing: slots are consumed by DISTINCT k-mers only, so the right capacity
+tracks the workload's distinct-count, not its instance-count. Callers that
+know neither start from a bound (`fabsp` defaults to
+min(total instances, 4**k) / P * store_slack) and rely on the overflow
+round: a full table drops-and-counts, and the caller rehashes into doubled
+capacity (`store_grow`) -- the same slack-doubling discipline as the
+routing tiles. Empty slots are keyed by the all-ones sentinel, the same
+value that pads every routed tile, so receive padding is skipped for free.
+
+Slot hashing uses `owner.slot_hash`, a second avalanche family independent
+of `owner_pe`: every k-mer reaching PE p already satisfies
+hash(x) == p (mod P), and reusing that hash for slots would populate only
+1/P of the table.
+
+Backend note: `impl='auto'` runs the Pallas kernel on TPU and the
+bit-identical jnp oracle elsewhere (ops.hash_insert -- interpret-mode
+emulation of the scalar probe loop costs O(capacity) per store, so it is
+reserved for the kernel parity tests).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import owner
+from repro.core.sort import AccumResult, accumulate, sort_with_weights
+from repro.kernels import ops
+
+
+class CountStore(NamedTuple):
+    keys: jax.Array     # (capacity,) k-mer words; sentinel == empty slot
+    counts: jax.Array   # (capacity,) int32 accumulated counts
+    dropped: jax.Array  # () int32 live entries dropped (table full)
+
+
+def empty_store(capacity: int, dtype) -> CountStore:
+    """All-empty store: sentinel keys, zero counts."""
+    sent = jnp.iinfo(dtype).max
+    return CountStore(keys=jnp.full((capacity,), sent, dtype),
+                      counts=jnp.zeros((capacity,), jnp.int32),
+                      dropped=jnp.int32(0))
+
+
+def store_slots(words: jax.Array, capacity: int) -> jax.Array:
+    """Home slot of each word: owner-independent hash modulo capacity."""
+    h = owner.slot_hash(words)
+    return (h % h.dtype.type(capacity)).astype(jnp.int32)
+
+
+def store_insert(store: CountStore, words: jax.Array,
+                 counts: Optional[jax.Array] = None, *,
+                 impl: str = "auto") -> CountStore:
+    """Fold (words, counts) into the store; sentinel / zero-count entries
+    are skipped. Returns the updated store with `dropped` accumulated."""
+    sent = jnp.iinfo(words.dtype).max
+    if counts is None:
+        counts = (words != words.dtype.type(sent)).astype(jnp.int32)
+    capacity = store.keys.shape[0]
+    keys, cnts, dropped = ops.hash_insert(
+        store.keys, store.counts, words, counts,
+        store_slots(words, capacity), sentinel_val=int(sent), impl=impl)
+    return CountStore(keys=keys, counts=cnts,
+                      dropped=store.dropped + dropped)
+
+
+def store_grow(store: CountStore, new_capacity: int, *,
+               impl: str = "auto") -> CountStore:
+    """Rehash every live entry into a fresh table of `new_capacity` slots
+    (the store's overflow round). Resets `dropped` (a grown table, sized
+    strictly above the live-entry count, drops nothing)."""
+    if new_capacity < store.keys.shape[0]:
+        raise ValueError("store_grow cannot shrink the table")
+    return store_insert(empty_store(new_capacity, store.keys.dtype),
+                        store.keys, store.counts, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("total_bits", "impl"))
+def store_histogram(store: CountStore, *, total_bits: int,
+                    impl: str = "radix") -> AccumResult:
+    """The residual Phase 2: one sort/compaction of the table.
+
+    Table keys are already distinct, so this is a pure layout change --
+    occupied slots sort to an ascending prefix with their counts riding the
+    weights lane, exactly the `AccumResult` contract every consumer of the
+    stacked path expects. impl follows `phase2_impl`: 'radix' is the
+    sort-free engine + fused Pallas sweep, 'argsort' the jnp oracle.
+    """
+    sent = int(jnp.iinfo(store.keys.dtype).max)
+    keys, w = sort_with_weights(store.keys, store.counts, impl=impl,
+                                total_bits=total_bits, sentinel_val=sent)
+    accum_impl = "fused" if impl == "radix" else "segment_sum"
+    return accumulate(keys, w, sentinel_val=sent, impl=accum_impl)

@@ -8,10 +8,20 @@ Execution structure (TPU adaptation, DESIGN.md Sec. 2):
   scan: the collective for chunk i overlaps k-mer generation for chunk i+1,
   recovering the paper's compute/communication overlap without one-sided
   messages.
-- The single data dependence between the stacked receive tiles and the local
-  sort is the paper's GLOBAL BARRIER between phases.
-- Phase 2 sorts the received stream and accumulates (owner-local counts are
-  final counts -- owner-PE convention).
+- The receiver is STREAMING (`receiver_impl='stream'`, the default): each
+  scan step decompresses its received tiles and folds them straight into a
+  carry-resident count store (core/countstore.py -- a fixed-capacity
+  open-addressing table backed by the Pallas insert-or-add kernel,
+  kernels/hash_table.py). This is the paper's asynchronous receiver-side
+  hash-table insert: per-PE receive memory is the store plus ONE in-flight
+  tile, independent of the number of chunks, and what used to be Phase 2
+  shrinks to a single sort/compaction of the store after the scan.
+- `receiver_impl='stacked'` keeps the old stack-then-sort oracle: every
+  chunk's received tile is stacked in the scan output and one giant sort +
+  accumulate runs after the phase barrier. Live receive memory grows as
+  O(n_chunks * P * capacity); retained because it is the bit-exact
+  reference semantics (final histograms match the stream path exactly as
+  sorted (kmer, count) sets) and the honest BSP-style memory baseline.
 
 Global synchronization count: 3 (program start, phase barrier, completion),
 versus ceil(mn/bP) + 1 host-synchronous rounds for the BSP baseline
@@ -28,37 +38,39 @@ Heavy-hitter handling (L3): two wire formats, selected by `l3_mode`:
 
 Topologies (paper Table II): '1d' = direct all_to_all over the full axis;
 '2d' = two-stage all_to_all over a factorized (row, col) device grid -- the
-2D-HyperX analogue, trading an extra hop for O(sqrt(P)) tile memory.
+2D-HyperX analogue, trading an extra hop for O(sqrt(P)) tile memory. The
+'2d' default routes both hops off ONE partition plan (`route2d_impl=
+'oneplan'`; owner decomposed as (dest_col, dest_row) digits, hop 2 a plain
+transpose + all_to_all) and accounts hop-2 occupancy straight from the
+hop-1 fill histogram instead of re-scanning the received tile.
 
 Sort-free hot path: with the default `partition_impl='radix'` /
 `phase2_impl='radix'` knobs the whole counting pipeline lowers without a
 single HLO `sort` -- L2 bucketing is a stable radix partition
-(aggregation.bucket_by_owner), and Phase 2 plus the L3 chunk-local
-compressors run the LSD radix sort built on the same partition engine
-(core/sort.py, kernels/radix_partition.py). Setting both knobs to 'argsort'
-restores the comparison-sort oracle; results are bit-identical.
+(aggregation.bucket_by_owner), chunk-local L3 compressors and the final
+store compaction run the LSD radix engine (core/sort.py,
+kernels/radix_partition.py), and canonicalization happens inside extraction
+(`canonical_impl='fused'`). Every knob's 'argsort'/'sweep'/'perhop'/
+'stacked' setting restores a bit-identical (or, for the receiver,
+set-identical) oracle.
 
-Fused hot path (this PR's three passes removed, per Eqs. 10-13):
-- Canonicalization happens INSIDE extraction (`canonical_impl='fused'`):
-  the reverse-complement word is maintained incrementally in the shift-or
-  parse loop, so `canonical=True` no longer pays a separate O(k) revcomp
-  sweep per word. `'sweep'` keeps the two-pass oracle.
-- The '2d' topology routes both hops off ONE partition plan
-  (`route2d_impl='oneplan'`): the owner id is decomposed as (dest_col,
-  dest_row) digits -- literally a 2-digit radix key -- and bucketed
-  col-major in a single histogram/rank pass, so hop 1's all_to_all chunks
-  arrive pre-partitioned by destination row and hop 2 is a plain transpose
-  + all_to_all (no re-hash, no second plan). `'perhop'` keeps the
-  plan-per-hop oracle.
-- Phase 2 accumulates with the fused Pallas boundary+segment-sum sweep
-  (core/sort.accumulate impl='fused'): the received stream is read once,
-  with no trailing XLA `segment_sum` re-read.
-All three fusions are bit-identical to their oracles.
+Overflow discipline: static capacities everywhere, drops counted and
+returned, `count_kmers` retries -- doubled routing slack when a routing
+tile overflowed, doubled store capacity (a rehash round) when the count
+store filled. Both retry shapes land in the executable cache.
+
+Incremental API: `KmerCounter` holds the sharded count store across calls
+-- `update(reads)` folds one batch per call (same executables, same
+overflow rounds), `finalize()` compacts the store into the usual
+`AccumResult`. Two updates equal one concatenated `count_kmers` call;
+unbounded workloads pay receive memory proportional to the DISTINCT k-mer
+count, never the instance count.
 
 Executable cache: `count_kmers` memoizes the jitted shard_map executable on
-(cfg, mesh, axis names, reads shape/dtype, slack), so repeated same-shape
-calls -- including the overflow-retry round, benchmarks' best-of-3 loops and
-serving traffic -- pay tracing + compilation exactly once per shape.
+(cfg, mesh, axis names, reads shape/dtype, slack, store capacity), so
+repeated same-shape calls -- including both overflow-retry rounds,
+benchmarks' best-of-3 loops and serving traffic -- pay tracing +
+compilation exactly once per shape.
 """
 
 from __future__ import annotations
@@ -70,9 +82,10 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import compat, encoding
+from repro.core import compat, countstore, encoding
 from repro.core.aggregation import bucket_by_owner, plan_capacity
 from repro.core.owner import owner_pe
 from repro.core.sort import (AccumResult, accumulate, radix_sort,
@@ -94,31 +107,71 @@ class DAKCConfig:
     # Implementation selectors ('radix' = sort-free partition engine,
     # 'argsort' = jnp comparison-sort oracle; bit-identical results).
     partition_impl: str = "radix"  # L2 bucketing (bucket_by_owner)
-    phase2_impl: str = "radix"     # Phase-2 sort + L3 chunk-local compressors
+    phase2_impl: str = "radix"     # store/stream compaction + L3 compressors
     # 'fused' folds min(word, revcomp) into the extraction loop (O(1)/base);
     # 'sweep' is the separate-pass oracle. Only read when canonical=True.
     canonical_impl: str = "fused"
     # 'oneplan' routes both 2d hops off one (col, row)-digit partition plan;
     # 'perhop' is the plan-per-hop oracle. Only read when topology='2d'.
     route2d_impl: str = "oneplan"
+    # 'stream' folds received tiles into the carry-resident count store
+    # inside the Phase-1 scan (receive memory independent of n_chunks);
+    # 'stacked' is the stack-then-sort oracle. Histograms are identical as
+    # sorted (kmer, count) sets.
+    receiver_impl: str = "stream"
+    # Count-store sizing ('stream' only): capacity = store_capacity slots
+    # per PE when set, else a distinct-count bound * store_slack. A full
+    # store triggers the rehash round (capacity doubling).
+    store_slack: float = 1.5
+    store_capacity: Optional[int] = None
 
     def __post_init__(self):
         for knob, allowed in (
                 ("partition_impl", ("radix", "argsort")),
                 ("phase2_impl", ("radix", "argsort")),
                 ("canonical_impl", ("fused", "sweep")),
-                ("route2d_impl", ("oneplan", "perhop"))):
+                ("route2d_impl", ("oneplan", "perhop")),
+                ("receiver_impl", ("stream", "stacked"))):
             v = getattr(self, knob)
             if v not in allowed:
                 raise ValueError(f"{knob} must be one of {allowed}, got {v!r}")
+        # a 0-slot store would turn the capacity-doubling rehash round into
+        # a no-op loop (0 * 2 == 0)
+        if self.store_capacity is not None and self.store_capacity < 1:
+            raise ValueError(
+                f"store_capacity must be >= 1, got {self.store_capacity}")
+        if self.store_slack <= 0:
+            raise ValueError(
+                f"store_slack must be positive, got {self.store_slack}")
 
 
 class DAKCStats(NamedTuple):
-    overflow: jax.Array            # () int32: entries dropped by capacity (all stages)
+    overflow: jax.Array            # () int32: entries dropped by ROUTING capacity
     sent_words: jax.Array          # () int32: valid payload words on the wire
-    wire_bytes: jax.Array          # () int64-ish f32: padded bytes actually moved
+    wire_bytes: np.int64           # exact padded bytes actually moved (int64-safe:
+                                   # carried through the scan as a base-2**20
+                                   # int32 pair, combined host-side)
     raw_kmers: jax.Array           # () int32: k-mer instances before compression
     num_global_syncs: int          # static: 3 for DAKC (paper Sec. I)
+    store_overflow: jax.Array      # () int32: inserts dropped by a full count
+                                   # store (stream receiver; 0 for 'stacked')
+
+
+# Flat per-call stats tuple threaded out of the shard_map body, in order:
+# (route_overflow, store_overflow, sent_words, wire_hi, wire_lo, raw_kmers).
+STATS_FIELDS = 6
+
+# Wire volume is carried as an int32 (hi, lo) pair in base 2**20: lo stays
+# exact per PE, psum(hi)/psum(lo) stay inside int32 for any realistic mesh,
+# and the host recombines exactly (the old float32 accumulator silently lost
+# words past ~2**24 bytes of traffic).
+_WIRE_SHIFT = 20
+_WIRE_BASE = 1 << _WIRE_SHIFT
+
+
+def _wire_add(whi: jax.Array, wlo: jax.Array, wire_words: jax.Array):
+    lo = wlo + wire_words.astype(jnp.int32)
+    return whi + (lo >> _WIRE_SHIFT), lo & jnp.int32(_WIRE_BASE - 1)
 
 
 def _resolve_l3_mode(cfg: DAKCConfig, chunk_kmers: int) -> str:
@@ -178,7 +231,11 @@ def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
       contiguous per destination column AND pre-partitioned by destination
       row, so hop 2 is a plain (src_col, dest_row) -> (dest_row, src_col)
       transpose + all_to_all: no re-hash of the received words, no second
-      histogram/rank plan. One partition plan per route.
+      histogram/rank plan. One partition plan per route. Hop-2 occupancy
+      accounting is FILL-AWARE: because the exchange preserves the global
+      fill total, each PE charges its own (P,) fill histogram for both
+      hops -- the old O(P * capacity) sentinel re-scan of the received
+      tile is gone, and the psum'd stat is exactly equal.
     - 'perhop': the oracle -- each hop re-derives owners from the received
       words and builds its own plan (two plans per route). Final counts are
       bit-identical; only the overflow granularity differs (per-(col,row)
@@ -214,7 +271,6 @@ def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
         r1w = jax.lax.all_to_all(br.tile, axis_names[1], 0, 0, tiled=True)
         r1c = None if br.counts is None else jax.lax.all_to_all(
             br.counts, axis_names[1], 0, 0, tiled=True)
-        sentv = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
 
         def swap(t):  # (src_col, dest_row, cap) -> (dest_row, src_col, cap)
             return t.reshape(cols, rows, capacity).transpose(1, 0, 2) \
@@ -223,8 +279,13 @@ def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
         r2w = jax.lax.all_to_all(swap(r1w), axis_names[0], 0, 0, tiled=True)
         r2c = None if r1c is None else jax.lax.all_to_all(
             swap(r1c), axis_names[0], 0, 0, tiled=True)
-        hop2_sent = jnp.sum(r1w != sentv).astype(jnp.int32)
-        sent_valid = br.fill.sum().astype(jnp.int32) + hop2_sent
+        # Fill-aware hop-2 accounting: hop 2 forwards exactly the words hop 1
+        # delivered and the exchange preserves the GLOBAL fill total, so
+        # after the stats psum each PE may charge its own fill for both hops
+        # -- no O(P * capacity) sentinel re-scan of the received tile, no
+        # metadata exchange. (Per-PE the convention differs from 'what I
+        # received'; the psum'd stat is exactly equal.)
+        sent_valid = (jnp.int32(2) * br.fill.sum().astype(jnp.int32))
         wire = jnp.int32(2 * num_pes * capacity)
         return r2w.reshape(-1), (None if r2c is None else r2c.reshape(-1)), \
             sent_valid, wire, br.overflow
@@ -290,9 +351,29 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
     return (rw, None, None), (raw, sentn, wire, ovf)
 
 
+def _recv_pairs(recv, *, mode: str, k: int, bps: int):
+    """Decompress one step's received tiles into (kmer, count) lanes.
+
+    Sentinel entries come out with count 0 (skipped by the store insert and
+    by accumulate alike); HEAVY packets keep their pre-aggregated counts.
+    """
+    rn, rh, rhc = recv
+    sent = jnp.array(jnp.iinfo(rn.dtype).max, rn.dtype)
+    if mode == "packed":
+        from repro.core.aggregation import l3_decompress
+        return l3_decompress(rn, k, bps)
+    if mode == "dual":
+        kmers = jnp.concatenate([rn, rh])
+        counts = jnp.concatenate(
+            [(rn != sent).astype(jnp.int32),
+             jnp.where(rh != sent, rhc.astype(jnp.int32), 0)])
+        return kmers, counts
+    return rn, (rn != sent).astype(jnp.int32)
+
+
 def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
             mode: str) -> AccumResult:
-    """Sort + accumulate the received stream (paper Phase 2).
+    """Sort + accumulate the stacked received stream ('stacked' oracle).
 
     phase2_impl='radix': ONE stable LSD radix sort of the full stream
     (ceil(2k / 8) counting-partition passes over the Pallas engine, weights
@@ -307,72 +388,112 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
     accum_impl = "fused" if impl == "radix" else "segment_sum"
     sent = int(jnp.iinfo(recv_normal.dtype).max)
     flat = recv_normal.reshape(-1)
-    if mode == "packed":
-        from repro.core.aggregation import l3_decompress
-        kmers, weights = l3_decompress(flat, k, bps)
-        keys, w = sort_with_weights(kmers, weights, impl=impl,
-                                    total_bits=total_bits, sentinel_val=sent)
-        return accumulate(keys, w, sentinel_val=sent, impl=accum_impl)
-    if mode == "dual":
-        hflat = recv_heavy.reshape(-1)
-        hcnt = recv_heavy_counts.reshape(-1)
-        keys = jnp.concatenate([flat, hflat])
-        weights = jnp.concatenate(
-            [(flat != flat.dtype.type(sent)).astype(jnp.int32),
-             jnp.where(hflat != hflat.dtype.type(sent), hcnt, 0)])
-        keys, w = sort_with_weights(keys, weights, impl=impl,
-                                    total_bits=total_bits, sentinel_val=sent)
-        return accumulate(keys, w, sentinel_val=sent, impl=accum_impl)
-    if impl == "radix":
-        skeys = radix_sort(flat, total_bits, sentinel_val=sent)
-    else:
-        skeys = jnp.sort(flat)
-    return accumulate(skeys, sentinel_val=sent, impl=accum_impl)
+    if mode == "none":
+        # single raw-word lane: skip the weights lane entirely
+        if impl == "radix":
+            skeys = radix_sort(flat, total_bits, sentinel_val=sent)
+        else:
+            skeys = jnp.sort(flat)
+        return accumulate(skeys, sentinel_val=sent, impl=accum_impl)
+    # 'packed' / 'dual': decode the wire format with the same _recv_pairs
+    # the streaming receiver folds from -- one decoder for both receivers.
+    recv = (flat,
+            None if recv_heavy is None else recv_heavy.reshape(-1),
+            None if recv_heavy_counts is None
+            else recv_heavy_counts.reshape(-1))
+    kmers, weights = _recv_pairs(recv, mode=mode, k=k, bps=bps)
+    keys, w = sort_with_weights(kmers, weights, impl=impl,
+                                total_bits=total_bits, sentinel_val=sent)
+    return accumulate(keys, w, sentinel_val=sent, impl=accum_impl)
 
 
-def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
-                 cap_n: int, cap_h: int, mode: str, axis_names, grid
-                 ) -> Tuple[AccumResult, DAKCStats]:
-    n_local, m = reads_local.shape
-    if n_local % cfg.chunk_reads != 0:
-        raise ValueError(
-            f"local reads {n_local} not divisible by chunk_reads "
-            f"{cfg.chunk_reads}; pad via data.genome.shard_reads")
-    n_chunks = n_local // cfg.chunk_reads
-    chunks = reads_local.reshape(n_chunks, cfg.chunk_reads, m)
+def _stream_fold(chunks, store: countstore.CountStore, *, cfg: DAKCConfig,
+                 num_pes: int, cap_n: int, cap_h: int, mode: str, axis_names,
+                 grid):
+    """Phase-1 scan with the streaming receiver: route each chunk, then fold
+    its decompressed receive tiles into the carry-resident count store.
+
+    Returns (store, (raw, sent_words, wire_hi, wire_lo, route_overflow)).
+    The scan emits NO per-chunk outputs -- receive memory is the store plus
+    one in-flight tile, independent of the chunk count.
+    """
+    k, bps = cfg.k, cfg.bits_per_symbol
 
     def step(carry, chunk):
+        raw_t, sent_t, whi, wlo, ovf_t, st = carry
         recv, (raw, sent_w, wire, ovf) = _phase1_step(
             chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
             mode=mode, axis_names=axis_names, grid=grid)
-        raw_t, sent_t, wire_t, ovf_t = carry
+        kmers, cnts = _recv_pairs(recv, mode=mode, k=k, bps=bps)
+        st = countstore.store_insert(st, kmers, cnts)
+        whi, wlo = _wire_add(whi, wlo, wire)
         # explicit int32: x64 mode (k=31 words) promotes reductions to int64
         return (raw_t + raw.astype(jnp.int32),
-                sent_t + sent_w.astype(jnp.int32),
-                wire_t + wire.astype(jnp.float32),
-                ovf_t + ovf.astype(jnp.int32)), recv
+                sent_t + sent_w.astype(jnp.int32), whi, wlo,
+                ovf_t + ovf.astype(jnp.int32), st), None
 
     zero = jnp.int32(0)
-    (raw, sent_w, wire, ovf), recvs = jax.lax.scan(
-        step, (zero, zero, jnp.float32(0), zero), chunks)
-    recv_n, recv_h, recv_hc = recvs
-    result = _phase2(recv_n, recv_h, recv_hc, cfg=cfg, mode=mode)
+    (raw, sent_w, whi, wlo, ovf, store), _ = jax.lax.scan(
+        step, (zero, zero, zero, zero, zero, store), chunks)
+    return store, (raw, sent_w, whi, wlo, ovf)
 
-    word_bytes = jnp.iinfo(recv_n.dtype).bits // 8
+
+def _chunked(reads_local: jax.Array, chunk_reads: int) -> jax.Array:
+    n_local, m = reads_local.shape
+    if n_local % chunk_reads != 0:
+        raise ValueError(
+            f"local reads {n_local} not divisible by chunk_reads "
+            f"{chunk_reads}; pad via data.genome.shard_reads")
+    return reads_local.reshape(n_local // chunk_reads, chunk_reads, m)
+
+
+def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
+                 cap_n: int, cap_h: int, store_cap: int, mode: str,
+                 axis_names, grid) -> Tuple[AccumResult, tuple]:
+    chunks = _chunked(reads_local, cfg.chunk_reads)
+    if cfg.receiver_impl == "stream":
+        dt = encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)
+        store = countstore.empty_store(store_cap, dt)
+        store, (raw, sent_w, whi, wlo, ovf) = _stream_fold(
+            chunks, store, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
+            cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid)
+        result = countstore.store_histogram(
+            store, total_bits=encoding.kmer_bits(cfg.k, cfg.bits_per_symbol),
+            impl=cfg.phase2_impl)
+        store_ovf = store.dropped
+    else:
+        def step(carry, chunk):
+            recv, (raw, sent_w, wire, ovf) = _phase1_step(
+                chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
+                mode=mode, axis_names=axis_names, grid=grid)
+            raw_t, sent_t, whi, wlo, ovf_t = carry
+            whi, wlo = _wire_add(whi, wlo, wire)
+            return (raw_t + raw.astype(jnp.int32),
+                    sent_t + sent_w.astype(jnp.int32), whi, wlo,
+                    ovf_t + ovf.astype(jnp.int32)), recv
+
+        zero = jnp.int32(0)
+        (raw, sent_w, whi, wlo, ovf), recvs = jax.lax.scan(
+            step, (zero, zero, zero, zero, zero), chunks)
+        recv_n, recv_h, recv_hc = recvs
+        result = _phase2(recv_n, recv_h, recv_hc, cfg=cfg, mode=mode)
+        store_ovf = jnp.int32(0)
+
     ax = tuple(axis_names)
-    stats = (jax.lax.psum(ovf, ax), jax.lax.psum(sent_w, ax),
-             jax.lax.psum(wire * word_bytes, ax), jax.lax.psum(raw, ax))
+    stats = tuple(jax.lax.psum(x, ax)
+                  for x in (ovf, store_ovf, sent_w, whi, wlo, raw))
     return AccumResult(unique=result.unique, counts=result.counts,
                        num_unique=result.num_unique.reshape(1)), stats
 
 
 # Jitted shard_map executables, keyed on everything that shapes the trace:
-# (cfg, mesh, axis names, reads shape/dtype, resolved slack). A jax.jit
+# (cfg, mesh, axis names, reads shape/dtype, resolved slack, resolved store
+# capacity) plus a role tag for the incremental-API executables. A jax.jit
 # callable built fresh on every count_kmers call re-traces every time; the
 # memo makes repeated same-shape calls (benchmark loops, serving traffic,
-# the overflow-retry round at its doubled slack) reuse the compiled
-# executable. Bounded in practice by the handful of distinct workload shapes
-# a process sees; `clear_executable_cache` resets it (tests).
+# both overflow-retry rounds at their doubled slack/capacity) reuse the
+# compiled executable. Bounded in practice by the handful of distinct
+# workload shapes a process sees; `clear_executable_cache` resets it (tests).
 _EXEC_CACHE: dict = {}
 
 
@@ -380,20 +501,42 @@ def clear_executable_cache() -> None:
     _EXEC_CACHE.clear()
 
 
-def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
-                         dtype_name: str, slack: float):
-    key = (cfg, mesh, axis_names, shape, dtype_name, slack)
-    fn = _EXEC_CACHE.get(key)
-    if fn is not None:
-        return fn
+def _mesh_pes(mesh: Mesh, axis_names) -> int:
+    return math.prod(mesh.shape[a] for a in axis_names)
+
+
+def _default_store_capacity(cfg: DAKCConfig, shape, num_pes: int) -> int:
+    """Per-PE count-store slots when the config does not pin them.
+
+    Slots are consumed by distinct k-mers only; absent workload knowledge
+    the safe bound is min(total instances, |alphabet|**k) spread over PEs
+    with `store_slack` headroom (hash-uniform spread; the rehash round
+    absorbs the tail). Callers with distinct-count knowledge set
+    `store_capacity` and get input-size-independent receive memory.
+    """
+    if cfg.receiver_impl != "stream":
+        return 0
+    if cfg.store_capacity is not None:
+        return cfg.store_capacity
+    n_reads, m = shape
+    total = n_reads * (m - cfg.k + 1)
+    distinct_bound = min(total,
+                         1 << encoding.kmer_bits(cfg.k, cfg.bits_per_symbol))
+    return plan_capacity(distinct_bound, num_pes, cfg.store_slack)
+
+
+def _topology_grid(cfg: DAKCConfig, mesh: Mesh, axis_names):
     sizes = [mesh.shape[a] for a in axis_names]
-    num_pes = math.prod(sizes)
     if cfg.topology == "2d":
         if len(axis_names) != 2:
             raise ValueError("2d topology needs two axis names (row, col)")
-        grid = (sizes[0], sizes[1])
-    else:
-        grid = None
+        return (sizes[0], sizes[1])
+    return None
+
+
+def _plan_caps(cfg: DAKCConfig, num_pes: int, shape, slack: float):
+    """(mode, cap_n, cap_h) for one reads shape -- shared by count_kmers,
+    the incremental-update executable and launch/kc_dryrun."""
     n_reads, m = shape
     chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
     mode = _resolve_l3_mode(cfg, chunk_kmers)
@@ -401,22 +544,53 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
     n_items = chunk_kmers * (2 if mode == "dual" else 1)
     cap_n = plan_capacity(n_items, num_pes, slack)
     cap_h = max(8, int(cap_n * cfg.heavy_frac))
+    return mode, cap_n, cap_h
 
-    spec = P(axis_names if len(axis_names) > 1 else axis_names[0])
+
+def _data_spec(axis_names):
+    return P(axis_names if len(axis_names) > 1 else axis_names[0])
+
+
+def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
+                         dtype_name: str, slack: float,
+                         store_cap: Optional[int] = None):
+    num_pes = _mesh_pes(mesh, axis_names)
+    if store_cap is None:
+        store_cap = _default_store_capacity(cfg, shape, num_pes)
+    key = (cfg, mesh, axis_names, shape, dtype_name, slack, store_cap)
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    grid = _topology_grid(cfg, mesh, axis_names)
+    mode, cap_n, cap_h = _plan_caps(cfg, num_pes, shape, slack)
+
+    spec = _data_spec(axis_names)
     fn = jax.jit(compat.shard_map(
         functools.partial(_local_count, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
-                          cap_h=cap_h, mode=mode, axis_names=axis_names,
-                          grid=grid),
+                          cap_h=cap_h, store_cap=store_cap, mode=mode,
+                          axis_names=axis_names, grid=grid),
         mesh=mesh, in_specs=(spec,),
         out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
-                   (P(), P(), P(), P()))))
+                   (P(),) * STATS_FIELDS)))
     _EXEC_CACHE[key] = fn
     return fn
 
 
+def _host_stats(cfg: DAKCConfig, raw_stats) -> DAKCStats:
+    route_ovf, store_ovf, sent_w, whi, wlo, raw = raw_stats
+    wire_words = (int(whi) << _WIRE_SHIFT) + int(wlo)
+    word_bytes = jnp.iinfo(
+        encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)).bits // 8
+    return DAKCStats(overflow=route_ovf, sent_words=sent_w,
+                     wire_bytes=np.int64(wire_words * word_bytes),
+                     raw_kmers=raw, num_global_syncs=3,
+                     store_overflow=store_ovf)
+
+
 def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
                 axis_names: Sequence[str] = ("pe",),
-                _slack_override: Optional[float] = None
+                _slack_override: Optional[float] = None,
+                _store_cap_override: Optional[int] = None
                 ) -> Tuple[AccumResult, DAKCStats]:
     """Distributed asynchronous k-mer counting (DAKC).
 
@@ -425,24 +599,233 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
     Returns the per-shard AccumResult (each shard owns a disjoint k-mer set;
     the global histogram is the concatenation) and wire statistics.
 
-    Capacity overflow (possible only under adversarial skew with L3 off) is
-    detected post-hoc and retried with doubled slack -- the 'overflow round'.
-    The jitted executable is memoized per (cfg, mesh, shape, slack); see
-    `_counting_executable`.
+    Overflow rounds: routing-capacity overflow (possible only under
+    adversarial skew with L3 off) retries with doubled slack; a full count
+    store (stream receiver sized below the distinct-count) retries with
+    doubled store capacity -- a rehash round. Both retry shapes land in the
+    executable cache (`_counting_executable`).
     """
     axis_names = tuple(axis_names)
     slack = _slack_override if _slack_override is not None else cfg.slack
+    num_pes = _mesh_pes(mesh, axis_names)
+    store_cap = (_store_cap_override if _store_cap_override is not None
+                 else _default_store_capacity(cfg, tuple(reads.shape),
+                                              num_pes))
     fn = _counting_executable(cfg, mesh, axis_names, tuple(reads.shape),
-                              str(reads.dtype), slack)
+                              str(reads.dtype), slack, store_cap=store_cap)
 
-    result, (overflow, sent_w, wire_b, raw) = fn(reads)
-    stats = DAKCStats(overflow=overflow, sent_words=sent_w, wire_bytes=wire_b,
-                      raw_kmers=raw, num_global_syncs=3)
-    if int(stats.overflow) > 0:
-        if slack > 8:
+    result, raw_stats = fn(reads)
+    stats = _host_stats(cfg, raw_stats)
+    route_over = int(stats.overflow) > 0
+    store_over = int(stats.store_overflow) > 0
+    if route_over or store_over:
+        if route_over and slack > 8:
             raise RuntimeError(
                 f"capacity overflow persists at slack {slack}: "
                 f"{int(stats.overflow)} entries dropped")
-        return count_kmers(reads, mesh, cfg, axis_names,
-                           _slack_override=slack * 2)
+        if store_over and store_cap > (1 << 28):
+            raise RuntimeError(
+                f"count store still overflows at {store_cap} slots: "
+                f"{int(stats.store_overflow)} inserts dropped")
+        return count_kmers(
+            reads, mesh, cfg, axis_names,
+            _slack_override=slack * 2 if route_over else slack,
+            _store_cap_override=store_cap * 2 if store_over else store_cap)
     return result, stats
+
+
+# ---------------------------------------------------------------------------
+# Incremental API: repeated batches accumulate into one persistent store.
+# ---------------------------------------------------------------------------
+
+
+def _update_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
+                       dtype_name: str, slack: float, store_cap: int):
+    key = ("update", cfg, mesh, axis_names, shape, dtype_name, slack,
+           store_cap)
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    num_pes = _mesh_pes(mesh, axis_names)
+    grid = _topology_grid(cfg, mesh, axis_names)
+    mode, cap_n, cap_h = _plan_caps(cfg, num_pes, shape, slack)
+    spec = _data_spec(axis_names)
+
+    def local_update(reads_local, skeys, scounts):
+        chunks = _chunked(reads_local, cfg.chunk_reads)
+        store = countstore.CountStore(keys=skeys, counts=scounts,
+                                      dropped=jnp.int32(0))
+        store, (raw, sent_w, whi, wlo, ovf) = _stream_fold(
+            chunks, store, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
+            cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid)
+        ax = tuple(axis_names)
+        stats = tuple(jax.lax.psum(x, ax)
+                      for x in (ovf, store.dropped, sent_w, whi, wlo, raw))
+        return store.keys, store.counts, stats
+
+    fn = jax.jit(compat.shard_map(
+        local_update, mesh=mesh, in_specs=(spec, spec, spec),
+        out_specs=(spec, spec, (P(),) * STATS_FIELDS)))
+    _EXEC_CACHE[key] = fn
+    return fn
+
+
+def _finalize_executable(cfg: DAKCConfig, mesh: Mesh, axis_names,
+                         store_cap: int):
+    key = ("finalize", cfg, mesh, axis_names, store_cap)
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    spec = _data_spec(axis_names)
+    total_bits = encoding.kmer_bits(cfg.k, cfg.bits_per_symbol)
+
+    def local_finalize(skeys, scounts):
+        res = countstore.store_histogram(
+            countstore.CountStore(keys=skeys, counts=scounts,
+                                  dropped=jnp.int32(0)),
+            total_bits=total_bits, impl=cfg.phase2_impl)
+        return AccumResult(unique=res.unique, counts=res.counts,
+                           num_unique=res.num_unique.reshape(1))
+
+    fn = jax.jit(compat.shard_map(
+        local_finalize, mesh=mesh, in_specs=(spec, spec),
+        out_specs=AccumResult(unique=spec, counts=spec, num_unique=spec)))
+    _EXEC_CACHE[key] = fn
+    return fn
+
+
+def _grow_executable(cfg: DAKCConfig, mesh: Mesh, axis_names,
+                     new_cap: int, old_cap: int):
+    key = ("grow", cfg, mesh, axis_names, new_cap, old_cap)
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    spec = _data_spec(axis_names)
+
+    def local_grow(skeys, scounts):
+        st = countstore.store_grow(
+            countstore.CountStore(keys=skeys, counts=scounts,
+                                  dropped=jnp.int32(0)), new_cap)
+        return st.keys, st.counts, jax.lax.psum(st.dropped,
+                                                tuple(axis_names))
+
+    fn = jax.jit(compat.shard_map(
+        local_grow, mesh=mesh, in_specs=(spec, spec),
+        out_specs=(spec, spec, P())))
+    _EXEC_CACHE[key] = fn
+    return fn
+
+
+class KmerCounter:
+    """Incremental DAKC: fold arbitrary batches into one persistent store.
+
+    The streaming receiver's count store outlives a single `count_kmers`
+    call: `update(reads)` runs the full Phase-1 pipeline (extract -> L3 ->
+    route -> fold) for one batch, accumulating into the sharded store;
+    `finalize()` compacts the store into the usual per-shard `AccumResult`.
+    Two updates produce exactly the histogram of one concatenated
+    `count_kmers` call. Receive memory is the store -- proportional to the
+    DISTINCT k-mer count, never to how many batches streamed through.
+
+    Overflow rounds per update: a full store rehashes into doubled capacity
+    (`store_grow`) and replays the batch (updates are functional -- the
+    committed store is untouched until a batch folds cleanly); routing
+    overflow doubles the slack for this and future batches. Store capacity
+    starts from `cfg.store_capacity`, else from the first batch's
+    distinct-count bound.
+    """
+
+    def __init__(self, mesh: Mesh, cfg: DAKCConfig,
+                 axis_names: Sequence[str] = ("pe",)):
+        if cfg.receiver_impl != "stream":
+            raise ValueError("KmerCounter requires receiver_impl='stream'")
+        self._mesh = mesh
+        self._cfg = cfg
+        self._axes = tuple(axis_names)
+        self._num_pes = _mesh_pes(mesh, self._axes)
+        self._dtype = encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)
+        self._slack = cfg.slack
+        self._store_cap: Optional[int] = cfg.store_capacity
+        self._skeys = None
+        self._scounts = None
+        # host-side running totals across updates (Python ints: an
+        # unbounded stream overruns int32 long before the store fills)
+        self._raw = 0
+        self._sent = 0
+        self._wire_bytes = 0
+
+    @property
+    def store_capacity(self) -> Optional[int]:
+        return self._store_cap
+
+    def _sharding(self) -> NamedSharding:
+        return NamedSharding(self._mesh, _data_spec(self._axes))
+
+    def _alloc(self, shape) -> None:
+        if self._store_cap is None:
+            self._store_cap = _default_store_capacity(self._cfg, shape,
+                                                      self._num_pes)
+        sent = jnp.iinfo(self._dtype).max
+        n = self._num_pes * self._store_cap
+        self._skeys = jax.device_put(jnp.full((n,), sent, self._dtype),
+                                     self._sharding())
+        self._scounts = jax.device_put(jnp.zeros((n,), jnp.int32),
+                                       self._sharding())
+
+    def _grow(self) -> None:
+        if self._store_cap > (1 << 28):
+            raise RuntimeError(
+                f"count store still overflows at {self._store_cap} slots")
+        new_cap = self._store_cap * 2
+        fn = _grow_executable(self._cfg, self._mesh, self._axes, new_cap,
+                              self._store_cap)
+        nk, nc, dropped = fn(self._skeys, self._scounts)
+        if int(dropped) != 0:
+            raise RuntimeError("rehash dropped live entries")  # unreachable
+        self._skeys, self._scounts = nk, nc
+        self._store_cap = new_cap
+
+    def update(self, reads: jax.Array) -> DAKCStats:
+        """Fold one (n_reads, m) batch into the store; returns this batch's
+        wire statistics (post-retry: overflow fields are the final round's,
+        zero unless a round gave up)."""
+        if self._skeys is None:
+            self._alloc(tuple(reads.shape))
+        while True:
+            fn = _update_executable(self._cfg, self._mesh, self._axes,
+                                    tuple(reads.shape), str(reads.dtype),
+                                    self._slack, self._store_cap)
+            nk, nc, raw_stats = fn(reads, self._skeys, self._scounts)
+            stats = _host_stats(self._cfg, raw_stats)
+            if int(stats.store_overflow) > 0:
+                self._grow()           # rehash round; replay this batch
+                continue
+            if int(stats.overflow) > 0:
+                if self._slack > 8:
+                    raise RuntimeError(
+                        f"capacity overflow persists at slack {self._slack}")
+                self._slack *= 2       # doubled routing slack; replay
+                continue
+            break
+        self._skeys, self._scounts = nk, nc
+        self._raw += int(stats.raw_kmers)
+        self._sent += int(stats.sent_words)
+        self._wire_bytes += int(stats.wire_bytes)
+        return stats
+
+    def finalize(self) -> Tuple[AccumResult, DAKCStats]:
+        """Compact the store into the per-shard histogram (callable more
+        than once; the store keeps accepting updates in between)."""
+        if self._skeys is None:
+            raise RuntimeError("KmerCounter.finalize before any update")
+        fn = _finalize_executable(self._cfg, self._mesh, self._axes,
+                                  self._store_cap)
+        result = fn(self._skeys, self._scounts)
+        # int64 throughout: an unbounded stream's cumulative totals outgrow
+        # int32 long before anything else breaks.
+        stats = DAKCStats(
+            overflow=np.int64(0), sent_words=np.int64(self._sent),
+            wire_bytes=np.int64(self._wire_bytes),
+            raw_kmers=np.int64(self._raw), num_global_syncs=3,
+            store_overflow=np.int64(0))
+        return result, stats

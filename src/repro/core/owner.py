@@ -46,6 +46,25 @@ def hash_kmers(kmers: jax.Array) -> jax.Array:
     return _mix32(kmers)
 
 
+# Salts for the second, owner-independent hash family (count-store slots).
+_SLOT_SALT32 = 0x9E3779B9           # 2**32 / golden ratio
+_SLOT_SALT64 = 0x9E3779B97F4A7C15   # 2**64 / golden ratio
+
+
+def slot_hash(kmers: jax.Array) -> jax.Array:
+    """Second avalanche hash, independent of `hash_kmers`/`owner_pe`.
+
+    The count store on PE p only ever sees k-mers with hash_kmers(x) == p
+    (mod P); deriving table slots from the SAME hash would use 1/P of the
+    slots. Salting and re-mixing the first hash decorrelates the families
+    (the constrained low bits become just another input to a full-avalanche
+    mixer).
+    """
+    if kmers.dtype == jnp.uint64:
+        return _mix64(_mix64(kmers) ^ jnp.uint64(_SLOT_SALT64))
+    return _mix32(_mix32(kmers) ^ jnp.uint32(_SLOT_SALT32))
+
+
 @functools.partial(jax.jit, static_argnums=(1,))
 def owner_pe(kmers: jax.Array, num_pes: int) -> jax.Array:
     """OwnerPE(kmer, P) -> int32 destination in [0, P)."""

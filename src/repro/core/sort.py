@@ -15,8 +15,9 @@ ceil(total_bits / 8) at the default 8-bit digit (Eq. 13).
   without spending key bits on the sentinel (a poly-T k-mer whose masked bits
   equal the sentinel's low bits is still ordered correctly).
 - `sort_with_weights(impl=)`: 'argsort' is the jnp oracle (stable XLA sort,
-  kept for parity tests and `merge_accum`); 'radix' routes through the
-  engine.
+  kept for parity tests); 'radix' routes through the engine. `merge_accum`
+  -- the serving-path merge of per-shard results -- defaults to 'radix' too,
+  so no consumer of the hot path pays an HLO sort.
 - `accumulate`: the sorted-run sweep. `impl='fused'` (the hot path) runs ONE
   Pallas boundary+segment-sum sweep (`segment_accumulate_pallas`): the
   received stream is read once and per-run totals come back from the kernel,
@@ -222,9 +223,26 @@ def accumulate(sorted_keys: jax.Array,
     return AccumResult(unique=unique, counts=counts, num_unique=num_unique)
 
 
-def merge_accum(a: AccumResult, b: AccumResult, *, sentinel_val) -> AccumResult:
-    """Merge two accumulated results (used when combining per-shard outputs)."""
+def merge_accum(a: AccumResult, b: AccumResult, *, sentinel_val,
+                impl: str = "radix",
+                total_bits: Optional[int] = None) -> AccumResult:
+    """Merge two accumulated results (used when combining per-shard outputs).
+
+    impl='radix' (default) rides the sort-free partition engine -- the
+    serving-path merge lowers without an HLO sort, like the rest of the hot
+    path. `total_bits` defaults to the full key width (sentinel padding is
+    routed to the tail bucket, not sorted by its bits); callers that know
+    the true key width (kmer_bits) can pass it to shave passes.
+    impl='argsort' keeps the jnp oracle; results are bit-identical.
+    """
     keys = jnp.concatenate([a.unique, b.unique])
     w = jnp.concatenate([a.counts, b.counts])
+    if impl == "radix":
+        if total_bits is None:
+            total_bits = jnp.iinfo(keys.dtype).bits
+        keys, w = sort_with_weights(keys, w, impl="radix",
+                                    total_bits=total_bits,
+                                    sentinel_val=int(sentinel_val))
+        return accumulate(keys, w, sentinel_val=sentinel_val, impl="fused")
     keys, w = sort_with_weights(keys, w)
     return accumulate(keys, w, sentinel_val=sentinel_val)

@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: open-addressing insert-or-add (the streaming receiver).
+
+The paper's receiving PEs count asynchronously: every aggregated message is
+folded into a local hash table as it arrives (Alg. 3's `LocalHashTable`
+insert), so receive memory is bounded by the table -- not by the number of
+chunks in flight. This kernel is that insert, adapted to the TPU's
+static-shape world:
+
+- The table is a fixed-capacity open-addressing array pair (`keys`,
+  `counts`), empty slots keyed by the all-ones sentinel. It lives in one
+  VMEM-resident block with a CONSTANT index map, so the sequential TPU grid
+  revisits (and therefore keeps resident) the same block across every input
+  tile -- the standard accumulator pattern, here carrying a mutable table
+  instead of a partial sum.
+- The grid walks the batch in `tile`-sized chunks; within a tile, items are
+  folded in stream order by a `fori_loop` whose body linear-probes from the
+  caller-supplied home slot (`slots`, hashed OUTSIDE the kernel so the
+  kernel stays dtype-thin) with a bounded `while_loop`: stop at the first
+  empty slot (insert) or matching key (add), wrapping modulo capacity. A
+  probe sweep that visits every slot without landing means the table is
+  full: the item is dropped and counted, and the caller's overflow round
+  doubles the capacity (the same slack-doubling discipline the routing
+  tiles use).
+- Dropped-item counts accumulate in an SMEM carry across grid steps
+  (sequential grid => exact, as in segment_count.py) and are mirrored into
+  a (1,) output each step.
+
+Determinism: tiles execute in order and items within a tile fold in input
+order, so the final table state is bit-identical to the sequential pure-jnp
+oracle (`ref.hash_insert_ref`) -- slot layout included, not just the
+key->count multiset.
+
+Scalar probing is VPU-hostile (one dynamic load per probe); the design bets
+on the paper's own observation that receiver-side work is a small slice of
+the budget once messages are aggregated. On-TPU tuning (vectorized cuckoo
+rounds, wider probe loads) is future work; in this container the kernel
+runs in interpret mode, where correctness of the tiled algorithm is what
+tests validate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Probe outcomes (int32 codes threaded through the while_loop state).
+_PENDING = 0   # still probing (terminal only when the sweep exhausts the table)
+_INSERT = 1    # landed on an empty slot
+_ADD = 2       # landed on a matching key
+
+
+def _get(ref, i):
+    return pl.load(ref, (pl.ds(i, 1),))[0]
+
+
+def _put(ref, i, v):
+    pl.store(ref, (pl.ds(i, 1),), v[None])
+
+
+def _hash_insert_kernel(tkeys_ref, tcounts_ref, keys_ref, w_ref, slots_ref,
+                        okeys_ref, ocounts_ref, ovf_ref, carry_ref, *,
+                        sentinel_val: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        okeys_ref[...] = tkeys_ref[...]
+        ocounts_ref[...] = tcounts_ref[...]
+        carry_ref[0] = jnp.int32(0)
+
+    cap = okeys_ref.shape[0]
+    tile = keys_ref.shape[0]
+    dt = keys_ref.dtype.type
+    sent = dt(sentinel_val)
+
+    def fold_one(i, dropped):
+        key = _get(keys_ref, i)
+        w = _get(w_ref, i)
+        slot0 = _get(slots_ref, i)
+        valid = (key != sent) & (w > 0)
+
+        def probing(state):
+            j, _, st = state
+            return valid & (st == _PENDING) & (j < cap)
+
+        def probe(state):
+            j, slot, _ = state
+            cur = _get(okeys_ref, slot)
+            st = jnp.where(cur == sent, _INSERT,
+                           jnp.where(cur == key, _ADD, _PENDING))
+            nxt = jnp.where(slot + 1 == cap, 0, slot + 1)
+            return (j + jnp.int32(1),
+                    jnp.where(st == _PENDING, nxt, slot),
+                    st.astype(jnp.int32))
+
+        _, slot, st = jax.lax.while_loop(
+            probing, probe, (jnp.int32(0), slot0, jnp.int32(_PENDING)))
+        hit = (st == _INSERT) | (st == _ADD)
+        # Branch-free read-modify-write: misses rewrite the slot unchanged.
+        _put(okeys_ref, slot, jnp.where(st == _INSERT, key,
+                                        _get(okeys_ref, slot)))
+        _put(ocounts_ref, slot,
+             _get(ocounts_ref, slot) + jnp.where(hit, w, jnp.int32(0)))
+        return dropped + jnp.where(valid & (st == _PENDING),
+                                   jnp.int32(1), jnp.int32(0))
+
+    carry_ref[0] = carry_ref[0] + jax.lax.fori_loop(
+        0, tile, fold_one, jnp.int32(0))
+    ovf_ref[...] = carry_ref[0][None]
+
+
+def hash_insert_pallas(table_keys: jax.Array, table_counts: jax.Array,
+                       keys: jax.Array, weights: jax.Array,
+                       slots: jax.Array, sentinel_val: int,
+                       tile: int = 1024, interpret: bool = False):
+    """Fold a batch of (key, weight) pairs into the open-addressing table.
+
+    table_keys:   (cap,) word table, empty slots == sentinel_val
+    table_counts: (cap,) int32
+    keys:    (n,) batch words; sentinel (or weight 0) entries are skipped
+    weights: (n,) int32 multiplicities (>= 1 for live entries)
+    slots:   (n,) int32 home slots in [0, cap) -- hash(key) % cap, computed
+             by the caller (core/countstore.py)
+
+    Returns (new_keys, new_counts, dropped): the updated table plus the
+    number of live entries dropped because a full probe sweep found neither
+    an empty nor a matching slot (table full => caller rehashes at doubled
+    capacity). n must divide by `tile`.
+    """
+    n = keys.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n {n} % tile {tile} != 0")
+    cap = table_keys.shape[0]
+    grid = (n // tile,)
+    out = pl.pallas_call(
+        functools.partial(_hash_insert_kernel, sentinel_val=sentinel_val),
+        grid=grid,
+        in_specs=[pl.BlockSpec((cap,), lambda i: (0,)),
+                  pl.BlockSpec((cap,), lambda i: (0,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((cap,), lambda i: (0,)),
+                   pl.BlockSpec((cap,), lambda i: (0,)),
+                   pl.BlockSpec((1,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((cap,), table_keys.dtype),
+                   jax.ShapeDtypeStruct((cap,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(table_keys, table_counts, keys, weights.astype(jnp.int32),
+      slots.astype(jnp.int32))
+    new_keys, new_counts, ovf = out
+    return new_keys, new_counts, ovf[0]

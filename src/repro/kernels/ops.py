@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.hash_table import hash_insert_pallas
 from repro.kernels.kmer_extract import kmer_extract_pallas
 from repro.kernels.radix_hist import radix_hist_pallas
 from repro.kernels.radix_partition import (PartitionPlan, bucket_hist_pallas,
@@ -64,6 +65,43 @@ def segment_accumulate(sorted_keys: jax.Array, weights: jax.Array, *,
     """Fused boundary + segmented-sum sweep: (is_new, is_end, run_totals)."""
     return segment_accumulate_pallas(sorted_keys, weights, sentinel_val,
                                      tile=tile, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("sentinel_val", "tile", "impl"))
+def hash_insert(table_keys: jax.Array, table_counts: jax.Array,
+                keys: jax.Array, weights: jax.Array, slots: jax.Array, *,
+                sentinel_val: int, tile: int = 1024, impl: str = "auto"):
+    """Insert-or-add a (keys, weights, slots) batch into the open-addressing
+    count table; returns (new_keys, new_counts, dropped). Pads the batch to
+    a tile multiple with skipped (sentinel, weight-0) entries.
+
+    impl: 'auto' = the Pallas kernel on TPU, the bit-identical jnp oracle
+    elsewhere. Unlike the other kernels, off-TPU 'auto' does NOT interpret:
+    interpret-mode state discharge turns each scalar probe store into an
+    O(capacity) buffer update (~40x slower than the oracle's in-place
+    scan), so emulation is opt-in ('pallas', what the parity tests run)
+    rather than the CPU default.
+    """
+    n = keys.shape[0]
+    tile = min(tile, max(8, n))
+    pad = (-n) % tile
+    if pad:
+        sent = jnp.full((pad,), sentinel_val, keys.dtype)
+        keys = jnp.concatenate([keys, sent])
+        weights = jnp.concatenate([weights.astype(jnp.int32),
+                                   jnp.zeros((pad,), jnp.int32)])
+        slots = jnp.concatenate([slots.astype(jnp.int32),
+                                 jnp.zeros((pad,), jnp.int32)])
+    if impl == "auto":
+        impl = "ref" if _interpret() else "pallas"
+    if impl == "ref":
+        return ref.hash_insert_ref(table_keys, table_counts, keys, weights,
+                                   slots, sentinel_val)
+    if impl != "pallas":
+        raise ValueError(f"unknown hash_insert impl {impl!r}")
+    return hash_insert_pallas(table_keys, table_counts, keys, weights, slots,
+                              sentinel_val, tile=tile,
+                              interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2))

@@ -118,6 +118,55 @@ def segment_accumulate_ref(sorted_keys: jax.Array, weights: jax.Array,
     return is_new, is_end, run_tot
 
 
+# --- hash_table -------------------------------------------------------------
+
+def hash_insert_ref(table_keys: jax.Array, table_counts: jax.Array,
+                    keys: jax.Array, weights: jax.Array, slots: jax.Array,
+                    sentinel_val: int):
+    """Sequential insert-or-add oracle: fold the batch in stream order.
+
+    Linear probing from `slots[i]` wrapping modulo capacity: first empty
+    slot inserts, first matching key adds; a probe sweep that visits every
+    slot drops the item and counts it. Semantic ground truth for
+    `hash_insert_pallas` -- the final table state must match bit-for-bit
+    (slot layout included, since both fold in stream order).
+    Returns (new_keys, new_counts, dropped).
+    """
+    cap = table_keys.shape[0]
+    sent = table_keys.dtype.type(sentinel_val)
+
+    def fold_one(carry, x):
+        tk, tc, dropped = carry
+        key, w, slot0 = x
+        valid = (key != sent) & (w > 0)
+
+        def probing(state):
+            j, _, st = state
+            return valid & (st == 0) & (j < cap)
+
+        def probe(state):
+            j, slot, _ = state
+            cur = tk[slot]
+            st = jnp.where(cur == sent, 1, jnp.where(cur == key, 2, 0))
+            nxt = jnp.where(slot + 1 == cap, 0, slot + 1)
+            return (j + jnp.int32(1), jnp.where(st == 0, nxt, slot),
+                    st.astype(jnp.int32))
+
+        _, slot, st = jax.lax.while_loop(
+            probing, probe, (jnp.int32(0), slot0, jnp.int32(0)))
+        hit = (st == 1) | (st == 2)
+        tk = tk.at[slot].set(jnp.where(st == 1, key, tk[slot]))
+        tc = tc.at[slot].add(jnp.where(hit, w, jnp.int32(0)))
+        dropped = dropped + jnp.where(valid & (st == 0),
+                                      jnp.int32(1), jnp.int32(0))
+        return (tk, tc, dropped), None
+
+    (tk, tc, dropped), _ = jax.lax.scan(
+        fold_one, (table_keys, table_counts.astype(jnp.int32), jnp.int32(0)),
+        (keys, weights.astype(jnp.int32), slots.astype(jnp.int32)))
+    return tk, tc, dropped
+
+
 # --- flash_attention --------------------------------------------------------
 
 def flash_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

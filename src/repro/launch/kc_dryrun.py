@@ -9,10 +9,20 @@ Synthetic-30 scale on the (16,16) single-pod and (2,16,16) multi-pod
 meshes, and emits the same roofline record as the LM cells -- the paper's
 technique gets the §Roofline treatment too.
 
+Receiver scenarios: the default lowers BOTH receivers and records their
+memory side by side -- 'stream' (carry-resident count store; receive
+memory = store + one in-flight tile) vs the 'stacked' oracle (receive
+memory O(n_chunks * P * capacity)); the temp-memory gap is the
+streaming-receiver story at production scale. `--receiver` restricts to
+one. `--stream-batches N` additionally lowers the incremental
+`KmerCounter.update` executable (the serving-scale scenario: N batches
+folding into one persistent store) and records its footprint.
+
   PYTHONPATH=src python -m repro.launch.kc_dryrun [--reads N] [--multi-pod]
 """
 
 import argparse
+import dataclasses
 import functools
 import json
 import time
@@ -21,38 +31,41 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import compat, fabsp
-from repro.core.aggregation import plan_capacity
-from repro.core.fabsp import DAKCConfig, _local_count, _resolve_l3_mode
+from repro.core import compat, encoding, fabsp
+from repro.core.fabsp import DAKCConfig, _local_count, _plan_caps
 from repro.core.sort import AccumResult
 from repro.launch.dryrun import collective_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
 
 
+def _flat_mesh(mesh, axis_names):
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(mesh.devices).reshape(-1), axis_names)
+
+
 def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
-             chunk_reads: int, slack: float = 1.5) -> dict:
+             chunk_reads: int, slack: float = 1.5,
+             receiver: str = "stream") -> dict:
     axis_names = ("pe",)
     num_pes = mesh.size
     # flatten the mesh to one PE axis (owner space = all chips)
-    import numpy as np
-    flat_mesh = jax.sharding.Mesh(
-        np.asarray(mesh.devices).reshape(-1), axis_names)
-    cfg = DAKCConfig(k=k, chunk_reads=chunk_reads, slack=slack)
-    chunk_kmers = chunk_reads * (read_len - k + 1)
-    mode = _resolve_l3_mode(cfg, chunk_kmers)
-    n_items = chunk_kmers * (2 if mode == "dual" else 1)
-    cap_n = plan_capacity(n_items, num_pes, slack)
-    cap_h = max(8, int(cap_n * cfg.heavy_frac))
+    flat_mesh = _flat_mesh(mesh, axis_names)
+    cfg = DAKCConfig(k=k, chunk_reads=chunk_reads, slack=slack,
+                     receiver_impl=receiver)
+    mode, cap_n, cap_h = _plan_caps(cfg, num_pes, (n_reads, read_len), slack)
+    store_cap = fabsp._default_store_capacity(cfg, (n_reads, read_len),
+                                              num_pes)
 
     spec = P(axis_names[0])
     fn = jax.jit(compat.shard_map(
         functools.partial(_local_count, cfg=cfg, num_pes=num_pes,
-                          cap_n=cap_n, cap_h=cap_h, mode=mode,
-                          axis_names=axis_names, grid=None),
+                          cap_n=cap_n, cap_h=cap_h, store_cap=store_cap,
+                          mode=mode, axis_names=axis_names, grid=None),
         mesh=flat_mesh, in_specs=(spec,),
         out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
-                   (P(), P(), P(), P()))))
+                   (P(),) * fabsp.STATS_FIELDS)))
 
     reads = jax.ShapeDtypeStruct(
         (n_reads, read_len), jnp.uint8,
@@ -63,7 +76,9 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
     rec = {
         "workload": "dakc-kc", "k": k, "n_reads": n_reads,
         "read_len": read_len, "chunk_reads": chunk_reads,
-        "l3_mode": mode, "mesh": dict(mesh.shape),
+        "l3_mode": mode, "receiver_impl": receiver,
+        "store_capacity_per_pe": store_cap if receiver == "stream" else 0,
+        "mesh": dict(mesh.shape),
         "compile_seconds": round(time.time() - t0, 2),
     }
     mem = compiled.memory_analysis()
@@ -94,6 +109,44 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
     return rec
 
 
+def lower_kc_incremental(batch_reads: int, read_len: int, k: int, mesh, *,
+                         chunk_reads: int, n_batches: int) -> dict:
+    """Lower the KmerCounter.update executable: one batch folding into the
+    persistent sharded store (the streaming-ingest scenario)."""
+    axis_names = ("pe",)
+    flat_mesh = _flat_mesh(mesh, axis_names)
+    num_pes = mesh.size
+    cfg = DAKCConfig(k=k, chunk_reads=chunk_reads)
+    # store sized for the FULL stream (n_batches of this batch size)
+    total_shape = (batch_reads * n_batches, read_len)
+    store_cap = fabsp._default_store_capacity(cfg, total_shape, num_pes)
+    cfg = dataclasses.replace(cfg, store_capacity=store_cap)
+    fn = fabsp._update_executable(cfg, flat_mesh, axis_names,
+                                  (batch_reads, read_len), "uint8",
+                                  cfg.slack, store_cap)
+    spec = P(axis_names[0])
+    dt = encoding.kmer_dtype(k, cfg.bits_per_symbol)
+    args = (
+        jax.ShapeDtypeStruct((batch_reads, read_len), jnp.uint8,
+                             sharding=NamedSharding(flat_mesh, spec)),
+        jax.ShapeDtypeStruct((num_pes * store_cap,), dt,
+                             sharding=NamedSharding(flat_mesh, spec)),
+        jax.ShapeDtypeStruct((num_pes * store_cap,), jnp.int32,
+                             sharding=NamedSharding(flat_mesh, spec)))
+    t0 = time.time()
+    compiled = fn.lower(*args).compile()
+    mem = compiled.memory_analysis()
+    return {
+        "workload": "dakc-kc-incremental", "k": k,
+        "batch_reads": batch_reads, "n_batches": n_batches,
+        "store_capacity_per_pe": store_cap,
+        "compile_seconds": round(time.time() - t0, 2),
+        "memory": {"temp_gb": mem.temp_size_in_bytes / 1e9,
+                   "args_gb": mem.argument_size_in_bytes / 1e9},
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     # Synthetic 30 (paper Table V): 357,913,900 reads x 150nt. Default here
@@ -105,6 +158,11 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=31)
     ap.add_argument("--chunk-reads", type=int, default=2048)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--receiver", choices=["stream", "stacked", "both"],
+                    default="both")
+    ap.add_argument("--stream-batches", type=int, default=0,
+                    help="also lower the incremental update executable "
+                         "for N batches of --reads reads each")
     ap.add_argument("--out", default="experiments/dryrun_kc.json")
     args = ap.parse_args()
     n_reads = 357_913_900 if args.full else args.reads
@@ -112,12 +170,28 @@ def main() -> None:
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     quantum = mesh.size * args.chunk_reads
     n_reads = (n_reads // quantum) * quantum
-    rec = lower_kc(n_reads, args.read_len, args.k, mesh,
-                   chunk_reads=args.chunk_reads)
+    receivers = (["stream", "stacked"] if args.receiver == "both"
+                 else [args.receiver])
+    recs = {r: lower_kc(n_reads, args.read_len, args.k, mesh,
+                        chunk_reads=args.chunk_reads, receiver=r)
+            for r in receivers}
+    rec = recs[receivers[0]]
+    if len(recs) > 1:
+        rec["stacked_receiver"] = recs["stacked"]
+        rec["receive_memory_ratio_stacked_over_stream"] = (
+            recs["stacked"]["memory"]["temp_gb"]
+            / max(recs["stream"]["memory"]["temp_gb"], 1e-9))
+    if args.stream_batches > 0:
+        rec["incremental"] = lower_kc_incremental(
+            n_reads, args.read_len, args.k, mesh,
+            chunk_reads=args.chunk_reads, n_batches=args.stream_batches)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
     r = rec["roofline"]
     print(json.dumps(rec, indent=1)[:1200])
+    if "receive_memory_ratio_stacked_over_stream" in rec:
+        print(f"\nstacked/stream temp memory: "
+              f"{rec['receive_memory_ratio_stacked_over_stream']:.2f}x")
     print(f"\ndominant: {r['dominant']}; bound throughput "
           f"{r['kmers_per_sec_per_chip_bound']:.3e} kmers/s/chip "
           f"({r['kmers_per_sec_per_chip_bound'] * mesh.size:.3e} global)")

@@ -49,6 +49,65 @@ def test_segment_accumulate_sweep(tile, frac_pad):
         assert (g == e).all()
 
 
+@pytest.mark.parametrize("capacity", [17, 64, 256])
+@pytest.mark.parametrize("tile", [32, 128])
+def test_hash_insert_sweep(capacity, tile):
+    """Insert-or-add kernel == sequential ref, bit-for-bit (slot layout
+    included), across collision-heavy keys, sentinel padding, and non-tile
+    batch lengths; the surviving table is the exact weighted histogram."""
+    from repro.core import countstore
+    sent = int(np.iinfo(np.uint32).max)
+    n = 500                                        # not a tile multiple
+    keys = RNG.integers(0, 3 * capacity, n).astype(np.uint32)
+    keys[RNG.random(n) < 0.25] = sent
+    w = RNG.integers(1, 6, n, dtype=np.int32)
+    slots = countstore.store_slots(jnp.asarray(keys), capacity)
+    tk = jnp.full((capacity,), sent, jnp.uint32)
+    tc = jnp.zeros((capacity,), jnp.int32)
+    got = ops.hash_insert(tk, tc, jnp.asarray(keys), jnp.asarray(w), slots,
+                          sentinel_val=sent, tile=tile, impl="pallas")
+    exp = ops.hash_insert(tk, tc, jnp.asarray(keys), jnp.asarray(w), slots,
+                          sentinel_val=sent, tile=tile, impl="ref")
+    for g, e in zip(got, exp):
+        assert (g == e).all()
+    gk, gc, dropped = got
+    want = {}
+    for kk, ww in zip(keys, w):
+        if kk != sent:
+            want[int(kk)] = want.get(int(kk), 0) + int(ww)
+    have = {int(a): int(b)
+            for a, b in zip(np.asarray(gk), np.asarray(gc)) if a != sent}
+    if int(dropped) == 0:
+        assert have == want
+    else:                   # full table: what survived is still consistent
+        assert all(have[kk] == want[kk] for kk in have)
+        assert int((np.asarray(gk) != sent).sum()) == capacity
+
+
+def test_hash_insert_full_table_drops_and_counts():
+    """A table with no free slot drops new keys (counted), while existing
+    keys keep accumulating -- the signal for the rehash round."""
+    sent = int(np.iinfo(np.uint32).max)
+    cap = 8
+    keys = jnp.asarray(np.arange(24, dtype=np.uint32))
+    w = jnp.ones((24,), jnp.int32)
+    from repro.core import countstore
+    slots = countstore.store_slots(keys, cap)
+    tk = jnp.full((cap,), sent, jnp.uint32)
+    tc = jnp.zeros((cap,), jnp.int32)
+    gk, gc, dropped = ops.hash_insert(tk, tc, keys, w, slots,
+                                      sentinel_val=sent, tile=8,
+                                      impl="pallas")
+    assert int(dropped) == 24 - cap
+    assert int((np.asarray(gk) != sent).sum()) == cap
+    # re-inserting the surviving keys adds, drops nothing
+    gk2, gc2, d2 = ops.hash_insert(gk, gc, gk, gc,
+                                   countstore.store_slots(gk, cap),
+                                   sentinel_val=sent, tile=8)
+    assert int(d2) == 0
+    assert (gk2 == gk).all() and (gc2 == 2 * gc).all()
+
+
 @pytest.mark.parametrize("digit_bits", [2, 4, 8])
 @pytest.mark.parametrize("shift", [0, 8, 24])
 def test_radix_hist_sweep(digit_bits, shift):

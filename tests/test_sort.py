@@ -144,6 +144,29 @@ def test_merge_accum():
     assert m.counts[:3].tolist() == [3, 2, 1]
 
 
+def test_merge_accum_radix_matches_argsort_and_is_sort_free():
+    """The serving-path merge rides the radix engine by default: results
+    bit-identical to the argsort oracle, and the lowering contains no HLO
+    sort op."""
+    import re
+    import jax
+    rng = np.random.default_rng(9)
+    a = accumulate(jnp.sort(jnp.asarray(
+        rng.integers(0, 1 << 20, 256, dtype=np.uint32))),
+        sentinel_val=SENT32)
+    b = accumulate(jnp.sort(jnp.asarray(
+        rng.integers(0, 1 << 20, 256, dtype=np.uint32))),
+        sentinel_val=SENT32)
+    got = merge_accum(a, b, sentinel_val=SENT32)
+    exp = merge_accum(a, b, sentinel_val=SENT32, impl="argsort")
+    assert (got.unique == exp.unique).all()
+    assert (got.counts == exp.counts).all()
+    assert int(got.num_unique) == int(exp.num_unique)
+    txt = jax.jit(lambda x, y: merge_accum(x, y, sentinel_val=SENT32)) \
+        .lower(a, b).as_text()
+    assert not re.findall(r"stablehlo\.sort|\bsort\(|sort\.[0-9]", txt)
+
+
 @given(st.lists(st.integers(0, 50), min_size=1, max_size=200),
        st.integers(0, 30))
 @settings(max_examples=30, deadline=None)
