@@ -24,6 +24,7 @@ the two receivers' steady states compare at equal semantics.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 
@@ -84,6 +85,13 @@ def run() -> None:
     for recv in ("stream", "stacked"):
         cfg = fabsp.DAKCConfig(k=K, chunk_reads=CHUNK_READS,
                                receiver_impl=recv)
+        if recv == "stream":
+            # Pin the analytic instance bound: count_kmers and the explicit
+            # lowering below then share ONE executable (the default two-pass
+            # sample sizing would pick a data-dependent capacity).
+            cfg = dataclasses.replace(
+                cfg, store_capacity=fabsp._default_store_capacity(
+                    cfg, tuple(reads.shape), 1))
         res = None
 
         def e2e():

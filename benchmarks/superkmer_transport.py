@@ -1,0 +1,167 @@
+"""Super-k-mer vs k-mer transport: wire bytes and steady-state time.
+
+The minimizer transport (core/minimizer.py, `transport_impl='superkmer'`)
+exists to cut Eq. 11 wire volume: consecutive k-mers overlap in k-1 bases,
+and shipping minimizer-keyed super-k-mer windows instead of individual
+packed words compresses the routed stream by ~(w+1)/2 k-mers per slot.
+This benchmark measures exactly that, via `DAKCStats.wire_bytes` (exact
+padded bytes moved, headers included):
+
+- `uint32` block: k=13, m=7 (w=7) -- the 32-bit word regime, measured
+  in-process. This is also the --smoke gate: scripts/ci.sh asserts the
+  super-k-mer stream is strictly smaller than the k-mer stream here.
+- `k21_w11` block (full runs only): k=21, m=11 (w=11) -- the acceptance
+  point. k=21 words need uint64/x64 mode, so the comparison runs in a
+  fresh subprocess with JAX_ENABLE_X64=1 and reports back as JSON. The
+  recorded `wire_reduction` at this point is the ISSUE 4 >= 2x criterion.
+
+CPU caveat as everywhere in this suite: absolute times are interpret-mode
+emulation, not TPU numbers; wire bytes are exact and
+backend-independent -- the record's point is the transport ratio.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import SCALE, SMOKE, best_of, report
+from repro.core import fabsp, minimizer
+from repro.data import genome
+
+CHUNK_READS = 32
+READ_LEN = 100
+
+_X64_SNIPPET = r"""
+import os, json, time
+os.environ["JAX_ENABLE_X64"] = "1"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import fabsp
+from repro.data import genome
+
+def run(n_reads, read_len, k, m, chunk_reads, repeats):
+    spec = genome.ReadSetSpec(genome_bases=max(4096, n_reads * 4),
+                              n_reads=n_reads, read_len=read_len,
+                              heavy_hitter_frac=0.2, seed=5)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+    out = {}
+    for transport in ("kmer", "superkmer"):
+        cfg = fabsp.DAKCConfig(k=k, chunk_reads=chunk_reads,
+                               minimizer_len=m, transport_impl=transport)
+        stats = [None]
+        def go():
+            res, st = fabsp.count_kmers(reads, mesh, cfg)
+            res.unique.block_until_ready()
+            stats[0] = st
+        t0 = time.perf_counter(); go()
+        compile_s = time.perf_counter() - t0
+        best = None
+        for _ in range(repeats):
+            t0 = time.perf_counter(); go()
+            best = min(best or 1e9, time.perf_counter() - t0)
+        st = stats[0]
+        out[transport] = {"compile_seconds": compile_s, "seconds": best,
+                          "wire_bytes": int(st.wire_bytes),
+                          "sent_words": int(st.sent_words),
+                          "raw_kmers": int(st.raw_kmers)}
+    print("RESULT " + json.dumps(out))
+"""
+
+
+def _compare(reads, mesh, k, m):
+    """Best-of steady time + exact wire bytes for both transports."""
+    out = {}
+    for transport in ("kmer", "superkmer"):
+        cfg = fabsp.DAKCConfig(k=k, chunk_reads=CHUNK_READS,
+                               minimizer_len=m, transport_impl=transport)
+        stats = [None]
+
+        def e2e():
+            res, st = fabsp.count_kmers(reads, mesh, cfg)
+            res.unique.block_until_ready()
+            stats[0] = st
+
+        t0 = time.perf_counter()
+        e2e()                                  # compile via executable cache
+        compile_s = time.perf_counter() - t0
+        steady = best_of(e2e)
+        st = stats[0]
+        out[transport] = {"compile_seconds": compile_s, "seconds": steady,
+                          "wire_bytes": int(st.wire_bytes),
+                          "sent_words": int(st.sent_words),
+                          "raw_kmers": int(st.raw_kmers)}
+    out["wire_reduction"] = (out["kmer"]["wire_bytes"]
+                             / max(out["superkmer"]["wire_bytes"], 1))
+    return out
+
+
+def _run_k21_subprocess(n_reads: int) -> dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = _X64_SNIPPET + f"\nrun({n_reads}, {READ_LEN}, 21, 11, " \
+                          f"{CHUNK_READS}, {1 if SMOKE else 3})"
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"k=21 subprocess failed:\n{proc.stderr[-2000:]}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    out["wire_reduction"] = (out["kmer"]["wire_bytes"]
+                             / max(out["superkmer"]["wire_bytes"], 1))
+    return out
+
+
+def run() -> None:
+    n_reads = max(CHUNK_READS * 8,
+                  int(1024 * SCALE) // CHUNK_READS * CHUNK_READS)
+    spec = genome.ReadSetSpec(genome_bases=max(4096, 4 * n_reads),
+                              n_reads=n_reads, read_len=READ_LEN,
+                              heavy_hitter_frac=0.2, seed=5)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+
+    record: dict = {
+        "schema": 1,
+        "workload": {"n_reads": n_reads, "read_len": READ_LEN,
+                     "chunk_reads": CHUNK_READS,
+                     "backend": jax.default_backend()},
+        "uint32": {"k": 13, "m": 7,
+                   "w": minimizer.window_size(13, 7),
+                   "slot_bytes": minimizer.slot_bytes(13, 7)}}
+    record["uint32"].update(_compare(reads, mesh, 13, 7))
+    u = record["uint32"]
+    for t in ("kmer", "superkmer"):
+        report(f"superkmer_transport.k13.{t}", u[t]["seconds"],
+               f"wire_bytes={u[t]['wire_bytes']}")
+    print(f"# superkmer_transport.k13 wire_reduction="
+          f"{u['wire_reduction']:.2f}x", flush=True)
+    # The CI smoke gate: the whole point of the transport is fewer bytes.
+    assert u["superkmer"]["wire_bytes"] < u["kmer"]["wire_bytes"], (
+        "super-k-mer stream not smaller than the k-mer stream at k=13: "
+        f"{u['superkmer']['wire_bytes']} vs {u['kmer']['wire_bytes']}")
+
+    if not SMOKE:
+        # The acceptance point: k=21, w=11 (uint64 words -> x64 subprocess).
+        record["k21_w11"] = {"k": 21, "m": 11,
+                             "w": minimizer.window_size(21, 11)}
+        record["k21_w11"].update(_run_k21_subprocess(n_reads))
+        k21 = record["k21_w11"]
+        for t in ("kmer", "superkmer"):
+            report(f"superkmer_transport.k21.{t}", k21[t]["seconds"],
+                   f"wire_bytes={k21[t]['wire_bytes']}")
+        print(f"# superkmer_transport.k21 wire_reduction="
+              f"{k21['wire_reduction']:.2f}x", flush=True)
+        with open("BENCH_superkmer_transport.json", "w") as f:
+            json.dump(record, f, indent=1)

@@ -23,7 +23,10 @@ fi
 echo "== slow tier =="
 python -m pytest -q -m slow
 
-echo "== benchmark smoke =="
+echo "== benchmark smoke (includes the superkmer wire gate) =="
+# benchmarks/superkmer_transport.py asserts -- in smoke mode too -- that
+# the smoke-scale super-k-mer stream moves strictly fewer wire bytes than
+# the k-mer stream, so this pass is also the transport's wire gate.
 python -m benchmarks.run --smoke
 
 echo "CI OK"

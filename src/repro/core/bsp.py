@@ -10,6 +10,16 @@ No L2/L3 compression: raw k-mer words on the wire (HySortK/PakMan aggregate
 into MPI buffers -- our packed tile plays that role -- but do not compress
 duplicates). The FA-BSP counter with `use_l3=False` is the single-dispatch
 control for isolating the synchronization cost (benchmarks/aggregation_ablation).
+
+Hot path: the baseline is synchronization-poor by DESIGN, not sort-slow by
+accident -- its per-batch bucketing and final sort ride the same sort-free
+radix-partition engine as DAKC (`partition_impl`/`phase2_impl`, 'radix'
+default: stable counting partition for the L2 tile, LSD radix passes + the
+fused Pallas accumulate sweep for the final round; zero HLO sort ops).
+'argsort' restores the jnp comparison-sort oracle on either knob with
+bit-identical histograms, so the benchmarks compare synchronization
+structure, not sorting technology. Canonicalization happens inside the
+extraction loop (the fused min(word, revcomp) shift-or), as in DAKC.
 """
 
 from __future__ import annotations
@@ -26,7 +36,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import compat, encoding
 from repro.core.aggregation import bucket_by_owner, plan_capacity
 from repro.core.owner import owner_pe
-from repro.core.sort import AccumResult, accumulate
+from repro.core.sort import AccumResult, accumulate, radix_sort
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +46,17 @@ class BSPConfig:
     slack: float = 1.5
     canonical: bool = False
     bits_per_symbol: int = 2
+    # 'radix' = the sort-free partition engine (default); 'argsort' = the
+    # jnp comparison-sort oracle. Bit-identical histograms either way.
+    partition_impl: str = "radix"   # per-batch L2 bucketing
+    phase2_impl: str = "radix"      # final sort + accumulate round
+
+    def __post_init__(self):
+        for knob in ("partition_impl", "phase2_impl"):
+            v = getattr(self, knob)
+            if v not in ("radix", "argsort"):
+                raise ValueError(
+                    f"{knob} must be 'radix' or 'argsort', got {v!r}")
 
 
 class BSPStats(NamedTuple):
@@ -48,21 +69,28 @@ class BSPStats(NamedTuple):
 
 def _batch_round(batch_local, *, cfg: BSPConfig, num_pes: int, cap: int,
                  axis_name: str):
-    words = encoding.extract_kmers(batch_local, cfg.k, cfg.bits_per_symbol)
-    if cfg.canonical:
-        words = encoding.canonical(words, cfg.k)
+    words = encoding.extract_kmers(batch_local, cfg.k, cfg.bits_per_symbol,
+                                   canonical=cfg.canonical)
     owners = owner_pe(words, num_pes)
     tile, fill, ovf, _ = bucket_by_owner(words, owners,
                                          jnp.ones(words.shape, bool),
-                                         num_pes, cap)
+                                         num_pes, cap,
+                                         impl=cfg.partition_impl)
     recv = jax.lax.all_to_all(tile, axis_name, 0, 0, tiled=True)
     return recv, (jax.lax.psum(ovf, axis_name),
                   jax.lax.psum(fill.sum(), axis_name))
 
 
-def _final_round(recv_all, axis_name: str):
+def _final_round(recv_all, *, cfg: BSPConfig, axis_name: str):
     sent = int(jnp.iinfo(recv_all.dtype).max)
-    res = accumulate(jnp.sort(recv_all.reshape(-1)), sentinel_val=sent)
+    flat = recv_all.reshape(-1)
+    if cfg.phase2_impl == "radix":
+        skeys = radix_sort(flat,
+                           encoding.kmer_bits(cfg.k, cfg.bits_per_symbol),
+                           sentinel_val=sent)
+        res = accumulate(skeys, sentinel_val=sent, impl="fused")
+    else:
+        res = accumulate(jnp.sort(flat), sentinel_val=sent)
     return AccumResult(unique=res.unique, counts=res.counts,
                        num_unique=res.num_unique.reshape(1))
 
@@ -93,7 +121,7 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: BSPConfig,
                           axis_name=axis),
         mesh=mesh, in_specs=(spec,), out_specs=(spec, (P(), P()))))
     final_fn = jax.jit(compat.shard_map(
-        functools.partial(_final_round, axis_name=axis),
+        functools.partial(_final_round, cfg=cfg, axis_name=axis),
         mesh=mesh, in_specs=(spec,),
         out_specs=AccumResult(unique=spec, counts=spec, num_unique=spec)))
 

@@ -27,7 +27,24 @@ Global synchronization count: 3 (program start, phase barrier, completion),
 versus ceil(mn/bP) + 1 host-synchronous rounds for the BSP baseline
 (core/bsp.py) -- exactly the paper's Eq. (7) gap.
 
-Heavy-hitter handling (L3): two wire formats, selected by `l3_mode`:
+Transport (`transport_impl`): what a routed tile slot carries.
+- 'kmer' (the oracle): one packed word per k-mer, L3-compressed as below.
+- 'superkmer': minimizer-routed super-k-mer transport (core/minimizer.py,
+  the KMC 2 / MSPKmerCounter aggregation lever). Each chunk's reads are
+  segmented into maximal runs of consecutive k-mers sharing a
+  (w, m)-minimizer; the run's substring ships ONCE as S fixed payload
+  words + an int32 length header, routed to `owner_pe(minimizer)`, and
+  the receiving PE re-extracts the k-mers with the same fused canonical
+  shift-or loop before folding them into the count store -- the k-1-base
+  overlap between consecutive k-mers stops being paid on the wire
+  (Eq. 11 volume drops ~(w+1)/2 / words-per-slot). Histograms are
+  identical to 'kmer' as sorted (kmer, count) sets; only the per-PE
+  partition of k-mer space (minimizer-hash vs kmer-hash) differs.
+  `use_l3`/`l3_mode` are not consulted and the 2d topology always uses
+  the one-plan route.
+
+Heavy-hitter handling (L3, 'kmer' transport): two wire formats, selected
+by `l3_mode`:
 - 'packed': counts ride in the spare high bits of the k-mer word (one word
   per distinct k-mer on the wire). Valid whenever the spare bits can hold a
   chunk-local count; this is the TPU-native strengthening of the paper's
@@ -85,11 +102,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import compat, countstore, encoding
+from repro.core import compat, countstore, encoding, minimizer
 from repro.core.aggregation import bucket_by_owner, plan_capacity
 from repro.core.owner import owner_pe
 from repro.core.sort import (AccumResult, accumulate, radix_sort,
                              sort_with_weights)
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,9 +137,27 @@ class DAKCConfig:
     # 'stacked' is the stack-then-sort oracle. Histograms are identical as
     # sorted (kmer, count) sets.
     receiver_impl: str = "stream"
+    # What travels the wire: 'kmer' (the oracle -- one packed word per
+    # k-mer, L3-compressed) | 'superkmer' (minimizer-keyed super-k-mers,
+    # core/minimizer.py: consecutive k-mers sharing a (w, m)-minimizer ship
+    # as one variable-length substring + length header, routed by
+    # owner_pe(minimizer); the receiver re-extracts k-mers locally).
+    # 'superkmer' ignores use_l3/l3_mode (the overlap compression replaces
+    # duplicate compression on the wire) and, under topology='2d', requires
+    # the 'oneplan' route. Histograms are identical as sorted (kmer, count)
+    # sets; the per-PE partition of k-mer space differs (minimizer-hash
+    # vs kmer-hash ownership).
+    transport_impl: str = "kmer"
+    # Minimizer length m for 'superkmer' transport; the window is
+    # w = k - m + 1 m-mers per k-mer.
+    minimizer_len: int = 7
     # Count-store sizing ('stream' only): capacity = store_capacity slots
-    # per PE when set, else a distinct-count bound * store_slack. A full
-    # store triggers the rehash round (capacity doubling).
+    # per PE when set. Otherwise 'sample' (default) runs the two-pass
+    # estimate -- count distinct on one sample chunk, extrapolate via the
+    # uniform-pool inversion -- so the default store tracks the workload's
+    # DISTINCT count; 'bound' keeps the instance-count bound oracle. Either
+    # way a full store triggers the rehash round (capacity doubling).
+    store_sizing: str = "sample"
     store_slack: float = 1.5
     store_capacity: Optional[int] = None
 
@@ -131,10 +167,22 @@ class DAKCConfig:
                 ("phase2_impl", ("radix", "argsort")),
                 ("canonical_impl", ("fused", "sweep")),
                 ("route2d_impl", ("oneplan", "perhop")),
-                ("receiver_impl", ("stream", "stacked"))):
+                ("receiver_impl", ("stream", "stacked")),
+                ("transport_impl", ("kmer", "superkmer")),
+                ("store_sizing", ("sample", "bound"))):
             v = getattr(self, knob)
             if v not in allowed:
                 raise ValueError(f"{knob} must be one of {allowed}, got {v!r}")
+        if self.transport_impl == "superkmer":
+            if not 1 <= self.minimizer_len <= self.k:
+                raise ValueError(
+                    f"minimizer_len {self.minimizer_len} outside "
+                    f"[1, k={self.k}]")
+            if self.topology == "2d" and self.route2d_impl == "perhop":
+                raise ValueError(
+                    "superkmer transport routes 2d hops off the one-plan "
+                    "decomposition; route2d_impl='perhop' (which re-derives "
+                    "owners from received words) is kmer-transport-only")
         # a 0-slot store would turn the capacity-doubling rehash round into
         # a no-op loop (0 * 2 == 0)
         if self.store_capacity is not None and self.store_capacity < 1:
@@ -147,7 +195,9 @@ class DAKCConfig:
 
 class DAKCStats(NamedTuple):
     overflow: jax.Array            # () int32: entries dropped by ROUTING capacity
-    sent_words: jax.Array          # () int32: valid payload words on the wire
+    sent_words: jax.Array          # () int32: valid payload slots on the wire
+                                   # (packed k-mer words; super-k-mer slots
+                                   # under transport_impl='superkmer')
     wire_bytes: np.int64           # exact padded bytes actually moved (int64-safe:
                                    # carried through the scan as a base-2**20
                                    # int32 pair, combined host-side)
@@ -164,13 +214,17 @@ STATS_FIELDS = 6
 # Wire volume is carried as an int32 (hi, lo) pair in base 2**20: lo stays
 # exact per PE, psum(hi)/psum(lo) stay inside int32 for any realistic mesh,
 # and the host recombines exactly (the old float32 accumulator silently lost
-# words past ~2**24 bytes of traffic).
+# words past ~2**24 bytes of traffic). The pair counts BYTES: each transport
+# converts its slot count to bytes in-trace (word lanes plus any int32
+# header/count lanes), so mixed-width wire formats -- the dual HEAVY pair,
+# the super-k-mer payload + length header -- are accounted exactly rather
+# than rounded through a word-unit convention.
 _WIRE_SHIFT = 20
 _WIRE_BASE = 1 << _WIRE_SHIFT
 
 
-def _wire_add(whi: jax.Array, wlo: jax.Array, wire_words: jax.Array):
-    lo = wlo + wire_words.astype(jnp.int32)
+def _wire_add(whi: jax.Array, wlo: jax.Array, wire_bytes: jax.Array):
+    lo = wlo + wire_bytes.astype(jnp.int32)
     return whi + (lo >> _WIRE_SHIFT), lo & jnp.int32(_WIRE_BASE - 1)
 
 
@@ -215,11 +269,35 @@ def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int,
     return normal_words, normal_valid, heavy_words, heavy_counts, is_heavy
 
 
+def _oneplan_bucket(owners, rows: int, cols: int):
+    """Two-digit bucket key of the one-plan 2d decomposition: col-major
+    (dest_col, dest_row), so hop 1's chunks are contiguous per destination
+    column AND pre-partitioned by destination row."""
+    return (owners % cols) * rows + owners // cols
+
+
+def _oneplan_two_hop(tiles, axis_names, rows: int, cols: int,
+                     capacity: int):
+    """Hop 1 + (src_col, dest_row) -> (dest_row, src_col) transpose + hop 2
+    for tiles bucketed by `_oneplan_bucket` -- the shared 2d exchange of
+    the kmer and super-k-mer transports (their stats/parity depend on this
+    staying one implementation)."""
+    def swap(t):
+        return t.reshape(cols, rows, capacity).transpose(1, 0, 2) \
+            .reshape(rows * cols, capacity)
+
+    return [jax.lax.all_to_all(
+        swap(jax.lax.all_to_all(t, axis_names[1], 0, 0, tiled=True)),
+        axis_names[0], 0, 0, tiled=True) for t in tiles]
+
+
 def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
            grid, k, bps, impl="radix", route2d="oneplan"):
     """Bucket + (possibly hierarchical) all_to_all for one lane set.
 
-    Returns (recv_words, recv_counts_or_none, sent_valid, wire_words, overflow).
+    Returns (recv_words, recv_counts_or_none, sent_valid, wire_slots,
+    overflow); `wire_slots` is the number of padded tile slots moved (the
+    caller converts to bytes per its wire format).
     `grid` is None for 1d or (rows, cols) for the 2d topology.
     counts lane, when present, follows the words through every stage
     (one multi-lane partition per hop; see aggregation.bucket_by_owner).
@@ -265,20 +343,13 @@ def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
     owners = owner_pe(words & mask, num_pes)
     if route2d == "oneplan":
         # ONE two-digit radix plan: bucket = dest_col * rows + dest_row.
-        bucket = (owners % cols) * rows + owners // cols
-        br = bucket_by_owner(words, bucket, valid, num_pes, capacity,
+        br = bucket_by_owner(words, _oneplan_bucket(owners, rows, cols),
+                             valid, num_pes, capacity,
                              counts=counts_or_none, impl=impl)
-        r1w = jax.lax.all_to_all(br.tile, axis_names[1], 0, 0, tiled=True)
-        r1c = None if br.counts is None else jax.lax.all_to_all(
-            br.counts, axis_names[1], 0, 0, tiled=True)
-
-        def swap(t):  # (src_col, dest_row, cap) -> (dest_row, src_col, cap)
-            return t.reshape(cols, rows, capacity).transpose(1, 0, 2) \
-                .reshape(rows * cols, capacity)
-
-        r2w = jax.lax.all_to_all(swap(r1w), axis_names[0], 0, 0, tiled=True)
-        r2c = None if r1c is None else jax.lax.all_to_all(
-            swap(r1c), axis_names[0], 0, 0, tiled=True)
+        tiles = [br.tile] + ([] if br.counts is None else [br.counts])
+        out = _oneplan_two_hop(tiles, axis_names, rows, cols, capacity)
+        r2w = out[0]
+        r2c = None if br.counts is None else out[1]
         # Fill-aware hop-2 accounting: hop 2 forwards exactly the words hop 1
         # delivered and the exchange preserves the GLOBAL fill total, so
         # after the stats psum each PE may charge its own fill for both hops
@@ -311,15 +382,89 @@ def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
         sent_valid, wire, ovf1 + ovf2
 
 
+def _route_sk(skw, lens, valid, owners, *, num_pes, capacity, axis_names,
+              grid, impl):
+    """Bucket + all_to_all for the super-k-mer lane set (S payload word
+    lanes + the int32 length-header lane).
+
+    All lanes ride ONE partition plan ('radix': `ops.make_partition_plan`
+    built once, passed to `bucket_by_owner` per lane -- the multi-lane hook
+    the PartitionPlan API exists for; 'argsort': the stable oracle re-sorts
+    per lane, which yields the identical layout). 2d topologies use the
+    one-plan (dest_col, dest_row)-digit decomposition exclusively -- the
+    per-hop oracle would have to re-derive minimizers from packed payloads
+    and is rejected at config time.
+
+    Returns (recv_words (N, S), recv_lens (N,), sent_valid, wire_slots,
+    overflow).
+    """
+    n_lanes = skw.shape[1]
+
+    def bucket_lanes(bucket_key, pes, cap):
+        plan = None
+        if impl == "radix":
+            key = jnp.where(valid, bucket_key.astype(jnp.int32), pes)
+            plan = ops.make_partition_plan(key, pes + 1)
+        first = bucket_by_owner(skw[:, 0], bucket_key, valid, pes, cap,
+                                counts=lens, plan=plan, impl=impl)
+        tiles = [first.tile]
+        for s in range(1, n_lanes):
+            tiles.append(bucket_by_owner(skw[:, s], bucket_key, valid, pes,
+                                         cap, plan=plan, impl=impl).tile)
+        return tiles, first.counts, first.fill, first.overflow
+
+    def a2a(t, axis):
+        return jax.lax.all_to_all(t, axis, 0, 0, tiled=True)
+
+    if grid is None:
+        tiles, ltile, fill, ovf = bucket_lanes(owners, num_pes, capacity)
+        rw = jnp.stack([a2a(t, axis_names[0]).reshape(-1) for t in tiles],
+                       axis=1)
+        rl = a2a(ltile, axis_names[0]).reshape(-1)
+        return rw, rl, fill.sum(), jnp.int32(num_pes * capacity), ovf
+
+    rows, cols = grid
+    tiles, ltile, fill, ovf = bucket_lanes(
+        _oneplan_bucket(owners, rows, cols), num_pes, capacity)
+    out = _oneplan_two_hop(tiles + [ltile], axis_names, rows, cols,
+                           capacity)
+    rw = jnp.stack([t.reshape(-1) for t in out[:-1]], axis=1)
+    rl = out[-1].reshape(-1)
+    # Fill-aware two-hop accounting, as in _route's oneplan branch.
+    sent_valid = jnp.int32(2) * fill.sum().astype(jnp.int32)
+    return rw, rl, sent_valid, jnp.int32(2 * num_pes * capacity), ovf
+
+
 def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
                  cap_h: int, mode: str, axis_names, grid):
-    """One scan step: parse -> L3 -> L2 tiles -> all_to_all.
+    """One scan step: parse -> L3 / super-k-mer segmentation -> L2 tiles ->
+    all_to_all.
 
     Canonicalization (cfg.canonical) happens inside the extraction loop
     (encoding.extract_kmers canonical=/canonical_impl=): no separate
-    revcomp sweep over the packed words.
+    revcomp sweep over the packed words. The returned wire stat is exact
+    BYTES for this chunk's padded tiles (word lanes + int32 header/count
+    lanes).
     """
     k, bps = cfg.k, cfg.bits_per_symbol
+    word_b = jnp.iinfo(encoding.kmer_dtype(k, bps)).bits // 8
+
+    if mode == "superkmer":
+        # Minimizer transport: route packed super-k-mer windows, not
+        # k-mers. Extraction moves to the receiver (_recv_pairs).
+        sk = minimizer.segment_superkmers(
+            chunk, k, cfg.minimizer_len, bps, canonical=cfg.canonical,
+            canonical_impl=cfg.canonical_impl)
+        raw = jnp.int32(sk.lengths.shape[0])   # one slot per k-mer instance
+        rw, rl, sentn, slots, ovf = _route_sk(
+            sk.words, sk.lengths, sk.lengths > 0,
+            owner_pe(sk.minimizers, num_pes), num_pes=num_pes,
+            capacity=cap_n, axis_names=axis_names, grid=grid,
+            impl=cfg.partition_impl)
+        wire = slots * jnp.int32(
+            minimizer.slot_bytes(k, cfg.minimizer_len, bps))
+        return (rw, rl, None), (raw, sentn, wire, ovf)
+
     words = encoding.extract_kmers(chunk, k, bps, canonical=cfg.canonical,
                                    canonical_impl=cfg.canonical_impl)
     raw = jnp.int32(words.shape[0])
@@ -332,33 +477,42 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
     if mode == "packed":
         from repro.core.aggregation import l3_compress
         payload, pvalid = l3_compress(words, k, bps, impl=cfg.phase2_impl)
-        rw, _, sentn, wire, ovf = route(payload, None, pvalid,
-                                        capacity=cap_n)
-        return (rw, None, None), (raw, sentn, wire, ovf)
+        rw, _, sentn, slots, ovf = route(payload, None, pvalid,
+                                         capacity=cap_n)
+        return (rw, None, None), (raw, sentn, slots * jnp.int32(word_b), ovf)
 
     if mode == "dual":
         nw, nv, hw, hc, hv = _l3_split_dual(words, valid, k, bps,
                                             impl=cfg.phase2_impl)
-        rnw, _, sentn, wire_n, ovf_n = route(nw, None, nv, capacity=cap_n)
-        rhw, rhc, senth, wire_h, ovf_h = route(hw, hc, hv, capacity=cap_h)
+        rnw, _, sentn, slots_n, ovf_n = route(nw, None, nv, capacity=cap_n)
+        rhw, rhc, senth, slots_h, ovf_h = route(hw, hc, hv, capacity=cap_h)
         # HEAVY wire carries a word + an int32 count per slot.
-        word_b = jnp.iinfo(nw.dtype).bits // 8
-        wire = wire_n + (wire_h * (word_b + 4)) // word_b
+        wire = slots_n * jnp.int32(word_b) + slots_h * jnp.int32(word_b + 4)
         return (rnw, rhw, rhc), (raw, sentn + senth, wire, ovf_n + ovf_h)
 
     # mode == 'none': BSP-style raw words, single lane, no compression.
-    rw, _, sentn, wire, ovf = route(words, None, valid, capacity=cap_n)
-    return (rw, None, None), (raw, sentn, wire, ovf)
+    rw, _, sentn, slots, ovf = route(words, None, valid, capacity=cap_n)
+    return (rw, None, None), (raw, sentn, slots * jnp.int32(word_b), ovf)
 
 
-def _recv_pairs(recv, *, mode: str, k: int, bps: int):
+def _recv_pairs(recv, *, cfg: DAKCConfig, mode: str):
     """Decompress one step's received tiles into (kmer, count) lanes.
 
     Sentinel entries come out with count 0 (skipped by the store insert and
     by accumulate alike); HEAVY packets keep their pre-aggregated counts.
+    Super-k-mer tiles are re-extracted locally (minimizer.superkmer_to_kmers
+    -- the same fused canonical shift-or loop the sender runs): `recv` is
+    then (payload (N, S), length headers (N,), None) and each slot expands
+    to up to w unit-count k-mers. ONE decoder for both receivers: the
+    streaming fold and the stacked Phase 2 consume identical pairs.
     """
+    k, bps = cfg.k, cfg.bits_per_symbol
     rn, rh, rhc = recv
     sent = jnp.array(jnp.iinfo(rn.dtype).max, rn.dtype)
+    if mode == "superkmer":
+        return minimizer.superkmer_to_kmers(
+            rn, rh, k, cfg.minimizer_len, bps, canonical=cfg.canonical,
+            canonical_impl=cfg.canonical_impl)
     if mode == "packed":
         from repro.core.aggregation import l3_decompress
         return l3_decompress(rn, k, bps)
@@ -387,6 +541,15 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
     total_bits = encoding.kmer_bits(k, bps)
     accum_impl = "fused" if impl == "radix" else "segment_sum"
     sent = int(jnp.iinfo(recv_normal.dtype).max)
+    if mode == "superkmer":
+        # stacked (n_chunks, N, S) payload + (n_chunks, N) headers: decode
+        # the whole received stream, then sort + accumulate as usual.
+        kmers, weights = _recv_pairs(
+            (recv_normal.reshape(-1, recv_normal.shape[-1]),
+             recv_heavy.reshape(-1), None), cfg=cfg, mode=mode)
+        keys, w = sort_with_weights(kmers, weights, impl=impl,
+                                    total_bits=total_bits, sentinel_val=sent)
+        return accumulate(keys, w, sentinel_val=sent, impl=accum_impl)
     flat = recv_normal.reshape(-1)
     if mode == "none":
         # single raw-word lane: skip the weights lane entirely
@@ -401,7 +564,7 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
             None if recv_heavy is None else recv_heavy.reshape(-1),
             None if recv_heavy_counts is None
             else recv_heavy_counts.reshape(-1))
-    kmers, weights = _recv_pairs(recv, mode=mode, k=k, bps=bps)
+    kmers, weights = _recv_pairs(recv, cfg=cfg, mode=mode)
     keys, w = sort_with_weights(kmers, weights, impl=impl,
                                 total_bits=total_bits, sentinel_val=sent)
     return accumulate(keys, w, sentinel_val=sent, impl=accum_impl)
@@ -417,14 +580,13 @@ def _stream_fold(chunks, store: countstore.CountStore, *, cfg: DAKCConfig,
     The scan emits NO per-chunk outputs -- receive memory is the store plus
     one in-flight tile, independent of the chunk count.
     """
-    k, bps = cfg.k, cfg.bits_per_symbol
 
     def step(carry, chunk):
         raw_t, sent_t, whi, wlo, ovf_t, st = carry
         recv, (raw, sent_w, wire, ovf) = _phase1_step(
             chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
             mode=mode, axis_names=axis_names, grid=grid)
-        kmers, cnts = _recv_pairs(recv, mode=mode, k=k, bps=bps)
+        kmers, cnts = _recv_pairs(recv, cfg=cfg, mode=mode)
         st = countstore.store_insert(st, kmers, cnts)
         whi, wlo = _wire_add(whi, wlo, wire)
         # explicit int32: x64 mode (k=31 words) promotes reductions to int64
@@ -506,13 +668,16 @@ def _mesh_pes(mesh: Mesh, axis_names) -> int:
 
 
 def _default_store_capacity(cfg: DAKCConfig, shape, num_pes: int) -> int:
-    """Per-PE count-store slots when the config does not pin them.
+    """Per-PE count-store slots from the instance-count BOUND.
 
-    Slots are consumed by distinct k-mers only; absent workload knowledge
-    the safe bound is min(total instances, |alphabet|**k) spread over PEs
-    with `store_slack` headroom (hash-uniform spread; the rehash round
-    absorbs the tail). Callers with distinct-count knowledge set
-    `store_capacity` and get input-size-independent receive memory.
+    Slots are consumed by distinct k-mers only; with only the reads SHAPE
+    in hand the safe bound is min(total instances, |alphabet|**k) spread
+    over PEs with `store_slack` headroom (hash-uniform spread; the rehash
+    round absorbs the tail). This is the `store_sizing='bound'` oracle and
+    the shape-only fallback (dry-run lowering, analytic benchmarks);
+    `count_kmers` itself defaults to the two-pass sample estimate
+    (`_sampled_store_capacity`), and callers with distinct-count knowledge
+    set `store_capacity` directly.
     """
     if cfg.receiver_impl != "stream":
         return 0
@@ -523,6 +688,72 @@ def _default_store_capacity(cfg: DAKCConfig, shape, num_pes: int) -> int:
     distinct_bound = min(total,
                          1 << encoding.kmer_bits(cfg.k, cfg.bits_per_symbol))
     return plan_capacity(distinct_bound, num_pes, cfg.store_slack)
+
+
+def _sampled_store_capacity(reads, cfg: DAKCConfig, num_pes: int) -> int:
+    """Two-pass default sizing: distinct-count one sample chunk, then
+    extrapolate to the full read set (`store_sizing='sample'`).
+
+    The sample's (instances s, distinct d) pair is inverted under the
+    uniform-pool model -- find the pool size U with
+    E[distinct | s draws from U] = U * (1 - (1 - 1/U)^s) = d -- and the
+    same curve evaluated at the full instance count gives the estimate.
+    When the workload's distinct set saturates (deep coverage of a finite
+    genome), U is finite and the store stops scaling with input size --
+    the receive memory becomes distinct-count-proportional, which the
+    instance-count bound never was. A fully-distinct sample (d == s)
+    carries no saturation information and falls back to the bound; an
+    under-estimate (skewed frequencies, unlucky sample) costs one rehash
+    round, the same discipline as every other static capacity here.
+
+    The returned capacity is rounded UP to a power of two: the estimate is
+    data-dependent, and without quantization every same-shape batch with
+    slightly different content would miss the executable cache (capacity
+    is part of the trace key) and pay a full recompile -- at most 2x slots
+    buys back cache hits across a serving stream.
+    """
+    n_reads, m = reads.shape
+    k, bps = cfg.k, cfg.bits_per_symbol
+    sample = jnp.asarray(reads)[:min(cfg.chunk_reads, n_reads)]
+    words = np.asarray(encoding.extract_kmers(
+        sample, k, bps, canonical=cfg.canonical,
+        canonical_impl=cfg.canonical_impl))
+    s = int(words.size)
+    d = int(np.unique(words).size)
+    total = n_reads * (m - k + 1)
+    bound = min(total, 1 << encoding.kmer_bits(k, bps))
+    if d >= s:
+        return _default_store_capacity(cfg, tuple(reads.shape), num_pes)
+
+    def exp_distinct(u: float, n: int) -> float:
+        return u * -math.expm1(n * math.log1p(-1.0 / u))
+
+    lo, hi = float(max(d, 2)), float(bound)
+    if exp_distinct(hi, s) < d:
+        u = hi                         # even the bound-sized pool saturates
+    else:
+        for _ in range(60):            # log-space bisection; f is monotone
+            mid = math.sqrt(lo * hi)
+            if exp_distinct(mid, s) < d:
+                lo = mid
+            else:
+                hi = mid
+        u = hi
+    est = min(max(int(math.ceil(exp_distinct(u, total))), d), bound)
+    cap = plan_capacity(est, num_pes, cfg.store_slack)
+    return 1 << (cap - 1).bit_length()
+
+
+def _resolve_store_capacity(reads, cfg: DAKCConfig, num_pes: int) -> int:
+    """Store slots for one concrete read set: explicit override >
+    'sample' two-pass estimate > shape-only instance bound."""
+    if cfg.receiver_impl != "stream":
+        return 0
+    if cfg.store_capacity is not None:
+        return cfg.store_capacity
+    if cfg.store_sizing == "sample":
+        return _sampled_store_capacity(reads, cfg, num_pes)
+    return _default_store_capacity(cfg, tuple(reads.shape), num_pes)
 
 
 def _topology_grid(cfg: DAKCConfig, mesh: Mesh, axis_names):
@@ -536,9 +767,20 @@ def _topology_grid(cfg: DAKCConfig, mesh: Mesh, axis_names):
 
 def _plan_caps(cfg: DAKCConfig, num_pes: int, shape, slack: float):
     """(mode, cap_n, cap_h) for one reads shape -- shared by count_kmers,
-    the incremental-update executable and launch/kc_dryrun."""
+    the incremental-update executable and launch/kc_dryrun.
+
+    transport_impl='superkmer' reports mode 'superkmer': cap_n is then the
+    per-destination SUPER-K-MER slot capacity, planned from the expected
+    run density 2 / (w + 1) (minimizer.expected_superkmers); the L3 mode
+    machinery (and cap_h) does not apply -- overlap compression replaces
+    duplicate compression on the wire.
+    """
     n_reads, m = shape
     chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
+    if cfg.transport_impl == "superkmer":
+        est = minimizer.expected_superkmers(cfg.chunk_reads, m, cfg.k,
+                                            cfg.minimizer_len)
+        return "superkmer", plan_capacity(est, num_pes, slack), 0
     mode = _resolve_l3_mode(cfg, chunk_kmers)
     # 'dual' NORMAL lane can carry up to 2x duplicated entries.
     n_items = chunk_kmers * (2 if mode == "dual" else 1)
@@ -578,11 +820,10 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
 
 def _host_stats(cfg: DAKCConfig, raw_stats) -> DAKCStats:
     route_ovf, store_ovf, sent_w, whi, wlo, raw = raw_stats
-    wire_words = (int(whi) << _WIRE_SHIFT) + int(wlo)
-    word_bytes = jnp.iinfo(
-        encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)).bits // 8
+    # the traced accumulator already counts bytes (see _wire_add)
+    wire_bytes = (int(whi) << _WIRE_SHIFT) + int(wlo)
     return DAKCStats(overflow=route_ovf, sent_words=sent_w,
-                     wire_bytes=np.int64(wire_words * word_bytes),
+                     wire_bytes=np.int64(wire_bytes),
                      raw_kmers=raw, num_global_syncs=3,
                      store_overflow=store_ovf)
 
@@ -609,8 +850,7 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
     slack = _slack_override if _slack_override is not None else cfg.slack
     num_pes = _mesh_pes(mesh, axis_names)
     store_cap = (_store_cap_override if _store_cap_override is not None
-                 else _default_store_capacity(cfg, tuple(reads.shape),
-                                              num_pes))
+                 else _resolve_store_capacity(reads, cfg, num_pes))
     fn = _counting_executable(cfg, mesh, axis_names, tuple(reads.shape),
                               str(reads.dtype), slack, store_cap=store_cap)
 
@@ -731,8 +971,9 @@ class KmerCounter:
     (`store_grow`) and replays the batch (updates are functional -- the
     committed store is untouched until a batch folds cleanly); routing
     overflow doubles the slack for this and future batches. Store capacity
-    starts from `cfg.store_capacity`, else from the first batch's
-    distinct-count bound.
+    starts from `cfg.store_capacity`, else from the first batch's two-pass
+    sample estimate (`store_sizing='sample'`, the default) or its
+    instance-count bound ('bound').
     """
 
     def __init__(self, mesh: Mesh, cfg: DAKCConfig,
@@ -761,9 +1002,9 @@ class KmerCounter:
     def _sharding(self) -> NamedSharding:
         return NamedSharding(self._mesh, _data_spec(self._axes))
 
-    def _alloc(self, shape) -> None:
+    def _alloc(self, reads) -> None:
         if self._store_cap is None:
-            self._store_cap = _default_store_capacity(self._cfg, shape,
+            self._store_cap = _resolve_store_capacity(reads, self._cfg,
                                                       self._num_pes)
         sent = jnp.iinfo(self._dtype).max
         n = self._num_pes * self._store_cap
@@ -790,7 +1031,7 @@ class KmerCounter:
         wire statistics (post-retry: overflow fields are the final round's,
         zero unless a round gave up)."""
         if self._skeys is None:
-            self._alloc(tuple(reads.shape))
+            self._alloc(reads)
         while True:
             fn = _update_executable(self._cfg, self._mesh, self._axes,
                                     tuple(reads.shape), str(reads.dtype),

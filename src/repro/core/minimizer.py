@@ -1,0 +1,238 @@
+"""Minimizer-routed super-k-mer transport (KMC 2 / MSPKmerCounter layer).
+
+Phase-1 routing ships one packed word per k-mer even though consecutive
+k-mers overlap in k-1 bases. This module is the transport layer that stops
+paying for the overlap: reads are segmented into **super-k-mers** -- maximal
+runs of consecutive k-mers sharing the same (w, m)-minimizer -- and the
+super-k-mer substring travels the wire once instead of its k-mers
+travelling individually. The receiving PE re-extracts the k-mers locally
+(the same fused canonical shift-or loop extraction uses,
+`encoding.pack_kmers` / kernels/kmer_extract.py) and folds them into its
+count store, so counts stay exact while wire volume drops by roughly
+(w + 1) / 2 k-mers' worth of bases per super-k-mer.
+
+Definitions (m = minimizer length, w = k - m + 1 m-mers per k-mer window):
+
+- The minimizer of a k-mer is the minimum of the w m-mer words it contains
+  (canonical m-mers -- min(fwd, revcomp) -- when the pipeline counts
+  canonical k-mers, so a read and its reverse complement select the same
+  minimizer values). Ties break to the value: runs are cut only when the
+  minimizer VALUE changes, so equal-value ties never split a run. The
+  minimum itself comes from the Pallas sliding-window kernel
+  (kernels/minimizer.py) with a jnp oracle in kernels/ref.py.
+- A super-k-mer is a maximal run of consecutive k-mer positions within one
+  read whose minimizer values are equal: between k and k + w - 1 bases.
+  Every k-mer of the read belongs to exactly one super-k-mer (the runs
+  partition the positions), which is what makes the transport exact.
+- Ownership: a super-k-mer routes to `owner_pe(minimizer)`. The minimizer
+  is a pure function of the (canonical) k-mer content, so every copy of a
+  k-mer lands on the same PE -- the owner-PE convention of the paper holds,
+  just under a different (minimizer-keyed) hash family than the 'kmer'
+  transport. Global histograms are identical; the per-PE partition of
+  k-mer space differs.
+
+Wire format (fixed-word tiles + length headers): a super-k-mer slot is
+`superkmer_words(k, m)` payload words of the k-mer dtype plus one int32
+header holding the run length in k-mers (0 = empty slot). Bases are packed
+LSB-first, `bits_per_symbol` bits each, `bases_per_word` to a word; bases
+beyond the run are zeroed so the packing is a pure function of the
+super-k-mer. The header lane rides the same radix-partition plan the k-mer
+transport uses for its HEAVY counts lane, so routing reuses
+`aggregation.bucket_by_owner` unchanged.
+
+Static shapes: segmentation emits one slot per k-mer POSITION (the worst
+case: every k-mer its own super-k-mer) with a validity mask -- only
+positions that START a run are valid. Routing capacity is planned from the
+expected run density 2 / (w + 1) (`expected_superkmers`) with the usual
+slack + overflow-round discipline absorbing adversarial inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.kernels import ops
+
+
+def window_size(k: int, m: int) -> int:
+    """w: number of m-mer positions inside one k-mer window."""
+    if not 1 <= m <= k:
+        raise ValueError(f"minimizer length m={m} outside [1, k={k}]")
+    return k - m + 1
+
+
+def max_bases(k: int, m: int) -> int:
+    """Longest super-k-mer in bases: k + w - 1 = 2k - m."""
+    return k + window_size(k, m) - 1
+
+
+def bases_per_word(k: int, bits_per_symbol: int = 2) -> int:
+    """Payload bases packed per wire word (full word width, LSB-first)."""
+    return jnp.iinfo(encoding.kmer_dtype(k, bits_per_symbol)).bits \
+        // bits_per_symbol
+
+
+def superkmer_words(k: int, m: int, bits_per_symbol: int = 2) -> int:
+    """Payload words per super-k-mer slot (fixed, worst-case length)."""
+    bpw = bases_per_word(k, bits_per_symbol)
+    return -(-max_bases(k, m) // bpw)
+
+
+def slot_bytes(k: int, m: int, bits_per_symbol: int = 2) -> int:
+    """Wire bytes per routed slot: payload words + the int32 length header."""
+    word_b = jnp.iinfo(encoding.kmer_dtype(k, bits_per_symbol)).bits // 8
+    return superkmer_words(k, m, bits_per_symbol) * word_b + 4
+
+
+def expected_superkmers(n_reads: int, read_len: int, k: int, m: int) -> int:
+    """Expected super-k-mer slots per chunk for capacity planning.
+
+    A random minimizer sequence changes value with density ~2 / (w + 1)
+    (each window of w + 1 positions spawns two boundaries on average --
+    the classic minimizer-density bound), plus one run starting at every
+    read head. Upper-bounded by one run per k-mer (the static worst case).
+    """
+    n_kmers = read_len - k + 1
+    w = window_size(k, m)
+    per_read = min(int(math.ceil(n_kmers * 2.0 / (w + 1))) + 1, n_kmers)
+    return n_reads * per_read
+
+
+class SuperKmers(NamedTuple):
+    """One slot per k-mer position of the chunk (row-major reads)."""
+    words: jax.Array     # (n_slots, S) packed payload words, zero-padded
+    lengths: jax.Array   # (n_slots,) int32 run length in k-mers; 0 = invalid
+    minimizers: jax.Array  # (n_slots,) m-mer words (undefined where invalid)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3),
+                   static_argnames=("k", "m", "bits_per_symbol", "canonical",
+                                    "canonical_impl"))
+def window_minimizers(codes: jax.Array, k: int, m: int,
+                      bits_per_symbol: int = 2, *, canonical: bool = False,
+                      canonical_impl: str = "fused") -> jax.Array:
+    """(n_reads, mlen) codes -> (n_reads, mlen - k + 1) minimizer words.
+
+    Entry p is the minimum (canonical) m-mer word of the k-mer starting at
+    base p. The sliding minimum runs on the Pallas kernel
+    (kernels/minimizer.py); m-mer packing is the same fused shift-or loop
+    k-mer extraction uses.
+    """
+    w = window_size(k, m)
+    mmers = encoding.pack_kmers(codes, m, bits_per_symbol,
+                                canonical=canonical,
+                                canonical_impl=canonical_impl)
+    return ops.sliding_min(mmers, w)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3),
+                   static_argnames=("k", "m", "bits_per_symbol", "canonical",
+                                    "canonical_impl"))
+def segment_superkmers(codes: jax.Array, k: int, m: int,
+                       bits_per_symbol: int = 2, *, canonical: bool = False,
+                       canonical_impl: str = "fused") -> SuperKmers:
+    """Segment reads into super-k-mers and pack them for the wire.
+
+    codes: (n_reads, mlen) symbol codes. Returns `SuperKmers` with
+    n_reads * (mlen - k + 1) slots: slot (r, p) is valid (lengths > 0) iff
+    k-mer position p starts a minimizer run in read r, and then covers
+    `lengths` k-mers == `lengths + k - 1` bases beginning at p. Bases past
+    the run (and past the read end) are zeroed before packing.
+    """
+    n_reads, mlen = codes.shape
+    n_kmers = mlen - k + 1
+    if n_kmers < 1:
+        raise ValueError(f"reads of length {mlen} shorter than k={k}")
+    w = window_size(k, m)
+    lmax = max_bases(k, m)
+    bpw = bases_per_word(k, bits_per_symbol)
+    n_words = superkmer_words(k, m, bits_per_symbol)
+    dt = encoding.kmer_dtype(k, bits_per_symbol)
+
+    minz = window_minimizers(codes, k, m, bits_per_symbol,
+                             canonical=canonical,
+                             canonical_impl=canonical_impl)
+    # Run starts: position 0, plus every minimizer-VALUE change. A repeated
+    # minimizer value (poly-A, planted repeats) can hold the windowed min
+    # constant for arbitrarily many positions, so value runs are additionally
+    # CAPPED at w k-mers -- the longest super-k-mer the fixed lmax-base slot
+    # can carry. Split pieces keep the same minimizer value, hence the same
+    # owner PE; only the slot count changes.
+    is_start = jnp.concatenate(
+        [jnp.ones((n_reads, 1), bool), minz[:, 1:] != minz[:, :-1]], axis=1)
+    idx = jnp.arange(n_kmers, dtype=jnp.int32)[None, :]
+    cur_start = jax.lax.cummax(
+        jnp.where(is_start, idx, jnp.int32(-1)), axis=1)
+    is_start = is_start | (((idx - cur_start) % jnp.int32(w)) == 0)
+    start_idx = jnp.where(is_start, idx, jnp.int32(n_kmers))
+    # next_start[p] = first run start strictly after p (n_kmers if none):
+    # a reversed cummin over the start indices shifted left by one.
+    shifted = jnp.concatenate(
+        [start_idx[:, 1:],
+         jnp.full((n_reads, 1), n_kmers, jnp.int32)], axis=1)
+    next_start = jnp.flip(jax.lax.cummin(jnp.flip(shifted, axis=1), axis=1),
+                          axis=1)
+    lengths = jnp.where(is_start, next_start - idx, 0).astype(jnp.int32)
+
+    # Pack the (zero-masked) lmax-base window starting at every position.
+    valid_bases = jnp.where(is_start, lengths + jnp.int32(k - 1), 0)
+    cpad = jnp.concatenate(
+        [codes, jnp.zeros((n_reads, w - 1), codes.dtype)], axis=1) \
+        if w > 1 else codes
+    words = [jnp.zeros((n_reads, n_kmers), dt) for _ in range(n_words)]
+    for t in range(lmax):                   # lmax static: unrolled VPU loop
+        base = jax.lax.slice_in_dim(cpad, t, t + n_kmers, axis=1).astype(dt)
+        base = jnp.where(t < valid_bases, base, dt(0))
+        s, off = divmod(t, bpw)
+        words[s] = words[s] | (base << dt(bits_per_symbol * off))
+
+    return SuperKmers(
+        words=jnp.stack([x.reshape(-1) for x in words], axis=1),
+        lengths=lengths.reshape(-1),
+        minimizers=minz.reshape(-1))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4),
+                   static_argnames=("k", "m", "bits_per_symbol", "canonical",
+                                    "canonical_impl"))
+def superkmer_to_kmers(words: jax.Array, lengths: jax.Array, k: int, m: int,
+                       bits_per_symbol: int = 2, *, canonical: bool = False,
+                       canonical_impl: str = "fused"
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Receiver side: re-extract k-mers from arriving super-k-mers.
+
+    words: (n_slots, S) packed payload; lengths: (n_slots,) int32 run
+    lengths (0 for empty/padded slots -- tile padding arrives with a zero
+    header, so its sentinel payload words are never decoded into k-mers).
+    Returns flat ((n_slots * w,) kmers, (n_slots * w,) int32 counts):
+    invalid positions carry the sentinel word and count 0, the same skip
+    convention every receiver consumer (store insert, accumulate) uses.
+
+    The extraction is `encoding.pack_kmers` over the unpacked base codes --
+    the identical fused canonical shift-or loop the sender-side Phase 1
+    runs, so canonical orientation matches bit-for-bit.
+    """
+    n_slots = words.shape[0]
+    w = window_size(k, m)
+    lmax = max_bases(k, m)
+    bpw = bases_per_word(k, bits_per_symbol)
+    dt = words.dtype.type
+    cmask = dt((1 << bits_per_symbol) - 1)
+    codes = jnp.stack(
+        [((words[:, t // bpw] >> dt(bits_per_symbol * (t % bpw))) & cmask)
+         .astype(jnp.uint8) for t in range(lmax)], axis=1)
+    kmers = encoding.pack_kmers(codes, k, bits_per_symbol,
+                                canonical=canonical,
+                                canonical_impl=canonical_impl)  # (n_slots, w)
+    pos_valid = jnp.arange(w, dtype=jnp.int32)[None, :] \
+        < lengths.astype(jnp.int32)[:, None]
+    sent = encoding.sentinel(k, bits_per_symbol)
+    out_kmers = jnp.where(pos_valid, kmers, sent).reshape(-1)
+    out_counts = pos_valid.astype(jnp.int32).reshape(-1)
+    return out_kmers, out_counts

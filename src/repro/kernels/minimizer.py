@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: sliding-window minimum (minimizer selection).
+
+The minimizer transport layer (core/minimizer.py) needs, for every k-mer
+position of a read, the minimum m-mer word over the window of
+w = k - m + 1 consecutive m-mer positions the k-mer covers. That is a
+classic sliding-window minimum over the per-position m-mer stream -- the
+KMC 2 / MSPKmerCounter signature-selection loop, vectorized: on TPU the
+window is small and static, so the minimum is an unrolled w-way
+`jnp.minimum` tree over shifted slices (pure VPU work, the same structure
+as the shift-or loop in kmer_extract.py), not a monotonic-queue scan.
+
+Tiling: the position axis is tiled; an output tile at position-tile j
+needs input positions up to `w - 1` past its own tile end, so each grid
+instance reads its tile plus the NEXT tile (an offset-by-one input block,
+the same cross-tile-carry device the segment kernels use for their
+lookback) and slides the window over the concatenation. Tiles therefore
+stay independent; the wrapper pads the position axis with the dtype max
+(which never wins a `minimum`) so the trailing partial window positions
+are well defined, then trims them. `w <= tile` is enforced by clamping
+the tile, so one lookahead block always suffices.
+
+The rows axis (reads) is blocked like kmer_extract: each instance owns a
+(block_rows, tile) slab in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sliding_min_kernel(cur_ref, nxt_ref, out_ref, *, window: int):
+    cur = cur_ref[...]                       # (rows, tile)
+    nxt = nxt_ref[...]                       # (rows, tile): lookahead block
+    tile = cur.shape[-1]
+    ext = jnp.concatenate([cur, nxt], axis=-1)
+    acc = jax.lax.slice_in_dim(ext, 0, tile, axis=-1)
+    for j in range(1, window):               # window static: unrolled minimum
+        acc = jnp.minimum(acc, jax.lax.slice_in_dim(ext, j, j + tile,
+                                                    axis=-1))
+    out_ref[...] = acc
+
+
+def sliding_min_pallas(vals: jax.Array, window: int, block_rows: int = 8,
+                       tile: int = 512, interpret: bool = False) -> jax.Array:
+    """(n_rows, n_pos) words -> (n_rows, n_pos - window + 1) windowed minima.
+
+    out[r, p] = min(vals[r, p : p + window]). The dtype max is used as the
+    padding identity, so callers whose valid words span the full dtype range
+    (they do not: packed m-mers keep at least the sentinel's spare bits free)
+    would see padding win ties harmlessly -- equal values tie to the same
+    minimum either way.
+    """
+    n_rows, n_pos = vals.shape
+    if window < 1 or window > n_pos:
+        raise ValueError(f"window {window} outside [1, {n_pos}]")
+    n_out = n_pos - window + 1
+    if n_rows % block_rows != 0:
+        raise ValueError(
+            f"n_rows {n_rows} % block_rows {block_rows} != 0")
+    tile = max(window, min(tile, n_out))
+    n_tiles = -(-n_out // tile)
+    sent = jnp.iinfo(vals.dtype).max
+    # (n_tiles + 1) tiles of input: every instance's lookahead block exists.
+    pad = (n_tiles + 1) * tile - n_pos
+    padded = jnp.concatenate(
+        [vals, jnp.full((n_rows, pad), sent, vals.dtype)], axis=-1)
+    grid = (n_rows // block_rows, n_tiles)
+    out = pl.pallas_call(
+        functools.partial(_sliding_min_kernel, window=window),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, tile), lambda i, j: (i, j)),
+                  pl.BlockSpec((block_rows, tile), lambda i, j: (i, j + 1))],
+        out_specs=pl.BlockSpec((block_rows, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, n_tiles * tile), vals.dtype),
+        interpret=interpret,
+    )(padded, padded)
+    return out[:, :n_out]

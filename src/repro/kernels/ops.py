@@ -20,6 +20,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hash_table import hash_insert_pallas
 from repro.kernels.kmer_extract import kmer_extract_pallas
+from repro.kernels.minimizer import sliding_min_pallas
 from repro.kernels.radix_hist import radix_hist_pallas
 from repro.kernels.radix_partition import (PartitionPlan, bucket_hist_pallas,
                                            bucket_positions_pallas,
@@ -43,6 +44,18 @@ def kmer_extract(reads: jax.Array, k: int, bits_per_symbol: int = 2,
     return kmer_extract_pallas(reads, k, bits_per_symbol,
                                block_reads=block_reads, canonical=canonical,
                                interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def sliding_min(vals: jax.Array, window: int, block_rows: int = 8,
+                tile: int = 512) -> jax.Array:
+    """(n_rows, n_pos) -> (n_rows, n_pos - window + 1) windowed minima
+    (minimizer selection; kernels/minimizer.py)."""
+    n_rows = vals.shape[0]
+    if n_rows % block_rows != 0:
+        block_rows = 1
+    return sliding_min_pallas(vals, window, block_rows=block_rows, tile=tile,
+                              interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3))

@@ -31,6 +31,23 @@ def kmer_extract_ref(reads: jax.Array, k: int, bits_per_symbol: int = 2,
     return words
 
 
+# --- minimizer --------------------------------------------------------------
+
+def sliding_min_ref(vals: jax.Array, window: int) -> jax.Array:
+    """(n_rows, n_pos) -> (n_rows, n_pos - window + 1) sliding-window minima.
+
+    out[r, p] = min(vals[r, p : p + window]) -- the semantic ground truth
+    for `sliding_min_pallas` (minimizer selection), bit-identical including
+    tie behavior (ties have no observable order: only the value is kept).
+    """
+    n_out = vals.shape[-1] - window + 1
+    acc = jax.lax.slice_in_dim(vals, 0, n_out, axis=-1)
+    for j in range(1, window):
+        acc = jnp.minimum(acc, jax.lax.slice_in_dim(vals, j, j + n_out,
+                                                    axis=-1))
+    return acc
+
+
 # --- radix_hist -------------------------------------------------------------
 
 def radix_hist_ref(keys: jax.Array, shift: int, digit_bits: int,

@@ -47,13 +47,15 @@ def _flat_mesh(mesh, axis_names):
 
 def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
              chunk_reads: int, slack: float = 1.5,
-             receiver: str = "stream") -> dict:
+             receiver: str = "stream", transport: str = "kmer",
+             minimizer_len: int = 15) -> dict:
     axis_names = ("pe",)
     num_pes = mesh.size
     # flatten the mesh to one PE axis (owner space = all chips)
     flat_mesh = _flat_mesh(mesh, axis_names)
     cfg = DAKCConfig(k=k, chunk_reads=chunk_reads, slack=slack,
-                     receiver_impl=receiver)
+                     receiver_impl=receiver, transport_impl=transport,
+                     minimizer_len=minimizer_len)
     mode, cap_n, cap_h = _plan_caps(cfg, num_pes, (n_reads, read_len), slack)
     store_cap = fabsp._default_store_capacity(cfg, (n_reads, read_len),
                                               num_pes)
@@ -77,6 +79,7 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
         "workload": "dakc-kc", "k": k, "n_reads": n_reads,
         "read_len": read_len, "chunk_reads": chunk_reads,
         "l3_mode": mode, "receiver_impl": receiver,
+        "transport_impl": transport,
         "store_capacity_per_pe": store_cap if receiver == "stream" else 0,
         "mesh": dict(mesh.shape),
         "compile_seconds": round(time.time() - t0, 2),
@@ -160,6 +163,13 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--receiver", choices=["stream", "stacked", "both"],
                     default="both")
+    ap.add_argument("--transport", choices=["kmer", "superkmer"],
+                    default="kmer",
+                    help="wire payload: packed k-mer words (oracle) or "
+                         "minimizer-keyed super-k-mers (core/minimizer.py)")
+    ap.add_argument("--minimizer-len", type=int, default=15,
+                    help="minimizer length m for --transport superkmer "
+                         "(window w = k - m + 1)")
     ap.add_argument("--stream-batches", type=int, default=0,
                     help="also lower the incremental update executable "
                          "for N batches of --reads reads each")
@@ -173,7 +183,9 @@ def main() -> None:
     receivers = (["stream", "stacked"] if args.receiver == "both"
                  else [args.receiver])
     recs = {r: lower_kc(n_reads, args.read_len, args.k, mesh,
-                        chunk_reads=args.chunk_reads, receiver=r)
+                        chunk_reads=args.chunk_reads, receiver=r,
+                        transport=args.transport,
+                        minimizer_len=args.minimizer_len)
             for r in receivers}
     rec = recs[receivers[0]]
     if len(recs) > 1:

@@ -83,6 +83,18 @@ def check_kc_all_paths():
         assert merge(resc) == canon, name
     print("OK fabsp-canonical-multidev")
 
+    # minimizer-routed super-k-mer transport == the kmer oracle on real
+    # 8-PE meshes, both topologies, with strictly fewer wire bytes
+    for name, m, axes in (("1d", mesh, ("pe",)),
+                          ("2d", mesh2, ("row", "col"))):
+        cfgs = fabsp.DAKCConfig(k=k, chunk_reads=32, topology=name,
+                                transport_impl="superkmer")
+        ress, ss = fabsp.count_kmers(reads, m, cfgs, axes)
+        assert merge(ress) == oracle, name
+        assert int(ss.overflow) == 0 and int(ss.store_overflow) == 0
+    assert int(ss.wire_bytes) < int(s2.wire_bytes)  # 2d superkmer vs 2d kmer
+    print("OK fabsp-superkmer-multidev")
+
     resb, sb = bsp.count_kmers(reads, mesh, bsp.BSPConfig(k=k,
                                                           batch_reads=32))
     assert merge(resb) == oracle

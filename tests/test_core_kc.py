@@ -76,6 +76,25 @@ def test_bsp_matches_serial(reads, mesh):
     assert stats.num_global_syncs == 256 // 64 + 1
 
 
+def test_bsp_radix_engine_matches_argsort_oracle(reads, mesh):
+    """The BSP hot path rides the radix-partition engine by default; the
+    retained 'argsort' knobs are the bit-identical comparison-sort oracle
+    (and the default path lowers the final round without an HLO sort)."""
+    k = 13
+    results = {}
+    for impl in ("radix", "argsort"):
+        cfg = bsp.BSPConfig(k=k, batch_reads=64, partition_impl=impl,
+                            phase2_impl=impl)
+        res, _ = bsp.count_kmers(jnp.asarray(reads), mesh, cfg)
+        results[impl] = res
+    a, b = results["radix"], results["argsort"]
+    assert (a.unique == b.unique).all()
+    assert (a.counts == b.counts).all()
+    assert _merge(a) == serial.count_kmers_python(reads, k)
+    with pytest.raises(ValueError):
+        bsp.BSPConfig(k=k, phase2_impl="bitonic")
+
+
 def test_fabsp_l3_compression_on_skewed_data(mesh):
     """Paper Fig. 12: heavy-hitter genomes compress dramatically under L3."""
     spec = genome.ReadSetSpec(genome_bases=4096, n_reads=256, read_len=80,

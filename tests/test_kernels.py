@@ -30,6 +30,31 @@ def test_kmer_extract_canonical_sweep(k, n_reads, m):
     assert (out == exp).all()
 
 
+@pytest.mark.parametrize("window", [1, 7, 25, 64])
+@pytest.mark.parametrize("n_rows,n_pos", [(8, 88), (16, 600), (1, 64)])
+def test_sliding_min_sweep(window, n_rows, n_pos):
+    """Sliding-window-minimum kernel == ref across window/tiling shapes,
+    including window == n_pos (a single output column)."""
+    window = min(window, n_pos)
+    vals = jnp.asarray(RNG.integers(0, 1 << 30, (n_rows, n_pos),
+                                    dtype=np.uint32))
+    out = ops.sliding_min(vals, window)
+    exp = ref.sliding_min_ref(vals, window)
+    assert out.dtype == exp.dtype
+    assert (out == exp).all()
+
+
+def test_sliding_min_tie_and_plateau():
+    """Repeated minimum values (the poly-A regime) keep the windowed min
+    constant -- the kernel must match ref through long plateaus."""
+    vals = np.full((4, 200), 5, np.uint32)
+    vals[:, ::17] = 1                               # periodic equal minima
+    vals = jnp.asarray(vals)
+    out = ops.sliding_min(vals, 13)
+    exp = ref.sliding_min_ref(vals, 13)
+    assert (out == exp).all()
+
+
 @pytest.mark.parametrize("tile", [128, 512, 1024])
 @pytest.mark.parametrize("frac_pad", [0.0, 0.3])
 def test_segment_accumulate_sweep(tile, frac_pad):

@@ -209,6 +209,62 @@ def test_degenerate_store_sizing_rejected():
     fabsp.DAKCConfig(k=13, store_capacity=1)    # minimal but legal
 
 
+# --- two-pass store sizing ----------------------------------------------------
+
+
+def test_sampled_store_sizing_tracks_distinct_not_instances(mesh1d):
+    """Deep coverage of a SMALL genome: the distinct set saturates, so the
+    two-pass sample estimate must size the store far below the
+    instance-count bound -- and still count exactly (a rehash round absorbs
+    any under-estimate)."""
+    spec = genome.ReadSetSpec(genome_bases=512, n_reads=512, read_len=60,
+                              seed=21)                  # ~60x coverage
+    reads = jnp.asarray(genome.sample_reads(spec))
+    cfg = fabsp.DAKCConfig(k=13, chunk_reads=32)        # sizing='sample'
+    sampled = fabsp._resolve_store_capacity(reads, cfg, 1)
+    bound = fabsp._default_store_capacity(cfg, tuple(reads.shape), 1)
+    assert sampled < bound // 4, (sampled, bound)
+    # quantized (power of two) so near-identical batches share one
+    # executable-cache entry despite the data-dependent estimate
+    assert sampled & (sampled - 1) == 0
+    # the saturated estimate still covers the true distinct count
+    res, stats = fabsp.count_kmers(reads, mesh1d, cfg)
+    assert int(stats.store_overflow) == 0
+    assert _merge(res) == _serial_dict(reads, 13)
+
+
+def test_sampled_store_sizing_override_and_oracle():
+    """Explicit store_capacity wins over sampling; store_sizing='bound'
+    restores the shape-only instance bound; unknown values are rejected."""
+    spec = genome.ReadSetSpec(genome_bases=512, n_reads=128, read_len=60,
+                              seed=22)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    cfg_pin = fabsp.DAKCConfig(k=13, chunk_reads=32, store_capacity=777)
+    assert fabsp._resolve_store_capacity(reads, cfg_pin, 1) == 777
+    cfg_bound = fabsp.DAKCConfig(k=13, chunk_reads=32, store_sizing="bound")
+    assert fabsp._resolve_store_capacity(reads, cfg_bound, 1) \
+        == fabsp._default_store_capacity(cfg_bound, tuple(reads.shape), 1)
+    with pytest.raises(ValueError):
+        fabsp.DAKCConfig(k=13, store_sizing="guess")
+
+
+def test_sampled_store_sizing_fully_distinct_sample_falls_back():
+    """A sample with no duplicate k-mers carries no saturation information:
+    the estimator must fall back to the instance-count bound rather than
+    extrapolate from nothing."""
+    n_reads, read_len, k = 64, 24, 11
+    rng = np.random.default_rng(23)
+    while True:                       # draw until the sample is all-distinct
+        reads = rng.integers(0, 4, (n_reads, read_len), dtype=np.uint8)
+        words = np.asarray(encoding.extract_kmers(jnp.asarray(reads[:32]),
+                                                  k))
+        if np.unique(words).size == words.size:
+            break
+    cfg = fabsp.DAKCConfig(k=k, chunk_reads=32)
+    got = fabsp._resolve_store_capacity(jnp.asarray(reads), cfg, 1)
+    assert got == fabsp._default_store_capacity(cfg, reads.shape, 1)
+
+
 # --- overflow rounds: store rehash + executable cache ------------------------
 
 
