@@ -23,10 +23,19 @@ fi
 echo "== slow tier =="
 python -m pytest -q -m slow
 
-echo "== benchmark smoke (includes the superkmer wire gate) =="
+echo "== routing-parity smoke gate =="
+# The lane-list routing conformance grid at toy scale: histograms across
+# {1d,2d} x {kmer,superkmer} x {stream,stacked} x {compact,padded} equal
+# the serial oracle, and DAKCStats.wire_bytes matches the per-lane byte
+# model exactly (tests/test_routing.py; also part of tier-1 -- rerun here
+# as a named gate so a routing regression fails loudly on its own line).
+python -m pytest -q tests/test_routing.py -k "parity or wire"
+
+echo "== benchmark smoke (superkmer + compact-hop-2 wire gates) =="
 # benchmarks/superkmer_transport.py asserts -- in smoke mode too -- that
 # the smoke-scale super-k-mer stream moves strictly fewer wire bytes than
-# the k-mer stream, so this pass is also the transport's wire gate.
+# the k-mer stream; benchmarks/route_lanes.py asserts the compact hop 2
+# cuts hop-2 wire bytes >= 1.5x at low occupancy. Both gates run here.
 python -m benchmarks.run --smoke
 
 echo "CI OK"

@@ -28,20 +28,38 @@ because a destination exceeded capacity) is *counted and returned* -- callers
 either assert it is zero (tests; uniform/hash-spread traffic) or run the
 overflow round (`fabsp.count_kmers` does).
 
-Data path (the L2 hot loop): `bucket_by_owner` is **sort-free** by default.
-The owner key has only P distinct values, so packing the tile via a
-comparison `argsort` (O(n log^2 n) bitonic on TPU) is replaced by one stable
-radix partition -- ONE `PartitionPlan` (per-tile Pallas owner histogram +
-exclusive-prefix offsets + stable ranks; kernels/radix_partition.py) applied
-by one scatter per lane (`impl='radix'`). The partition is multi-lane: an
-optional int32 counts lane (HEAVY {kmer, count} packets) rides the same
-plan, so NORMAL and HEAVY traffic share one bucketing code path. A caller
-may also pass a precomputed `plan` to route several lane sets off one
-histogram pass. The 2d routing topology exploits the same plan-object: it
-buckets by the two-digit (dest_col, dest_row) key so that BOTH hops of the
-hierarchical all_to_all are served by this single plan (fabsp._route).
-`impl='argsort'` keeps the stable-argsort oracle for parity tests; the two
-produce bit-identical tiles.
+Data path (the L2 hot loop): `route_lanes` is THE routing implementation --
+every transport in the repo (the 'kmer' and 'superkmer' DAKC transports,
+fabsp._phase1_step; the BSP baseline's per-batch exchange, bsp._batch_round)
+is one call to it. A route takes an arbitrary LIST of payload lanes (packed
+k-mer words, super-k-mer payload words, int32 length headers or HEAVY
+counts) plus one owner map, buckets every lane off ONE `PartitionPlan`
+(per-tile Pallas owner histogram + exclusive-prefix offsets + stable ranks;
+kernels/radix_partition.py -- sort-free, one scatter per lane), runs the
+1d or hierarchical 2d all_to_all, and accounts the exact wire bytes of
+every lane in one place (per-slot byte width summed over lanes; headers and
+counts are int32 = 4 bytes, word lanes their dtype width). `route_tiles` is
+the pre-collective stage (the L2 tile build), exposed for the conformance
+property tests (tests/test_routing.py) and for `bucket_by_owner`, the
+two-lane wrapper kept for its external users (benchmarks/phase_breakdown
+and the partition-plan test surfaces).
+
+2d topologies: the 'oneplan' route buckets ONCE by the two-digit
+(dest_col, dest_row) key so hop 2 is a plain transpose + all_to_all served
+by the same plan; the 'perhop' oracle re-derives owners from the received
+word lane and re-plans per hop. Hop 2 may additionally be OCCUPANCY-AWARE
+(`hop2_capacity`): each bucket row of the hop-1 tile is a contiguous valid
+prefix, so the route ships only the first `hop2_capacity` slots per row on
+the second hop -- a smaller measured-occupancy tile. Whether the hop-1 fill
+histogram actually fits is checked from the sender-side fills (exact after
+the stats psum, no tile re-scan); entries past the compact capacity are
+counted in `RouteResult.hop2_dropped` and ride the caller's overflow round
+(fabsp falls back to the padded tile -- the KMC 3-style two-capacity
+scheme).
+
+`impl='argsort'` swaps the plan builder for the stable-argsort oracle
+(kernels/ref.partition_plan_ref); both plans drive the SAME tile build, so
+the two impls are bit-identical by construction.
 """
 
 from __future__ import annotations
@@ -63,6 +81,219 @@ class BucketResult(NamedTuple):
     fill: jax.Array       # (P,) int32 valid entries per destination
     overflow: jax.Array   # () int32 dropped entries (capacity exceeded)
     counts: Optional[jax.Array] = None  # (P, capacity) int32 lane (HEAVY)
+
+
+class RouteResult(NamedTuple):
+    """One `route_lanes` exchange, as seen by this PE.
+
+    `sent_valid`, `wire_bytes` and the drop counters follow the fill-aware
+    convention: each PE charges its OWN bucket fills for every hop (the
+    exchange preserves the global totals, so the psum'd stats are exact;
+    per-PE they need not equal 'what I received').
+    """
+    lanes: Tuple[jax.Array, ...]  # received lanes, each flat (recv_slots,)
+    sent_valid: jax.Array         # () int32 valid slots moved (all hops)
+    wire_bytes: jax.Array         # () int32 exact padded bytes moved
+    overflow: jax.Array           # () int32 bucket-capacity drops
+    hop2_dropped: jax.Array       # () int32 compact-hop-2 drops (0 unless
+                                  # 2d 'oneplan' with hop2_capacity set)
+
+
+def lane_wire_bytes(lanes, kinds) -> int:
+    """Exact wire bytes of ONE routed tile slot: the single source of truth
+    for per-lane byte accounting (every transport's wire stat derives from
+    it). 'word' lanes cost their dtype width; 'i32' header/count lanes 4."""
+    if len(lanes) != len(kinds):
+        raise ValueError(f"{len(lanes)} lanes vs {len(kinds)} kinds")
+    total = 0
+    for lane, kind in zip(lanes, kinds):
+        if kind == "word":
+            total += jnp.iinfo(lane.dtype).bits // 8
+        elif kind == "i32":
+            total += 4
+        else:
+            raise ValueError(f"unknown lane kind {kind!r}")
+    return total
+
+
+def route_tiles(lanes, kinds, owners, valid, num_pes: int, capacity: int, *,
+                plan: Optional[ops.PartitionPlan] = None,
+                impl: str = "radix"):
+    """Bucket an arbitrary lane list into destination-major (P, capacity)
+    tiles off ONE partition plan (the pre-collective stage of every route).
+
+    lanes: tuple of (n,) arrays, all routed by the same (owners, valid);
+           zipped tuples survive -- slot (p, j) of every tile holds the
+           same source element.
+    kinds: per-lane 'word' (payload; invalid/empty slots hold the dtype-max
+           sentinel) | 'i32' (length-header / count lane; int32, zero pad).
+    plan:  optional precomputed PartitionPlan over the (num_pes + 1)-bucket
+           key `where(valid, owners, num_pes)` ('radix' impl only).
+    impl:  'radix' (sort-free Pallas plan, default) | 'argsort' (the
+           stable-argsort oracle plan) -- both drive the same tile build,
+           so results are bit-identical.
+
+    Returns (tiles, fill, overflow). On overflow the first `capacity`
+    entries per destination in stream order are kept.
+    """
+    if len(lanes) != len(kinds) or not lanes:
+        raise ValueError("lanes/kinds must be equal-length and non-empty")
+    for kind in kinds:
+        if kind not in ("word", "i32"):
+            raise ValueError(f"unknown lane kind {kind!r}")
+    if plan is not None and impl != "radix":
+        raise ValueError(f"plan= requires impl='radix', got {impl!r}")
+    key = jnp.where(valid, owners.astype(jnp.int32), num_pes)  # invalid last
+    if impl == "radix":
+        if plan is None:
+            plan = ops.make_partition_plan(key, num_pes + 1)
+    elif impl == "argsort":
+        plan = ops.make_partition_plan_ref(key, num_pes + 1)
+    else:
+        raise ValueError(f"unknown route impl {impl!r}")
+    dst, fill, overflow = plan.tile_slots(key, valid, capacity)
+    tiles = []
+    for lane, kind in zip(lanes, kinds):
+        if kind == "word":
+            sent = jnp.array(jnp.iinfo(lane.dtype).max, lane.dtype)
+            flat = jnp.full((num_pes * capacity,), sent, lane.dtype)
+            tiles.append(flat.at[dst].set(
+                jnp.where(valid, lane, sent),
+                mode="drop").reshape(num_pes, capacity))
+        else:  # 'i32' (validated by lane_wire_bytes callers / kinds above)
+            tiles.append(jnp.zeros((num_pes * capacity,), jnp.int32).at[dst]
+                         .set(jnp.where(valid, lane.astype(jnp.int32), 0),
+                              mode="drop").reshape(num_pes, capacity))
+    return tuple(tiles), fill, overflow
+
+
+def oneplan_bucket_key(owners, rows: int, cols: int):
+    """Two-digit bucket key of the one-plan 2d decomposition: col-major
+    (dest_col, dest_row), so hop 1's chunks are contiguous per destination
+    column AND pre-partitioned by destination row."""
+    return (owners % cols) * rows + owners // cols
+
+
+def _oneplan_two_hop(tiles, axis_names, rows: int, cols: int, capacity: int,
+                     hop2_capacity: int):
+    """Hop 1 + (src_col, dest_row) -> (dest_row, src_col) transpose + hop 2
+    for tiles bucketed by `oneplan_bucket_key`. With hop2_capacity <
+    capacity, each row's contiguous valid prefix is sliced to the compact
+    measured-occupancy width before the second hop."""
+    def swap(t):
+        return t.reshape(cols, rows, capacity).transpose(1, 0, 2) \
+            .reshape(rows * cols, capacity)
+
+    out = []
+    for t in tiles:
+        h1 = swap(jax.lax.all_to_all(t, axis_names[1], 0, 0, tiled=True))
+        out.append(jax.lax.all_to_all(h1[:, :hop2_capacity], axis_names[0],
+                                      0, 0, tiled=True))
+    return out
+
+
+def route_lanes(lanes, kinds, owners, valid, *, num_pes: int, capacity: int,
+                axis_names, grid=None, impl: str = "radix",
+                route2d: str = "oneplan",
+                hop2_capacity: Optional[int] = None,
+                rederive_owners=None) -> RouteResult:
+    """THE routing implementation: bucket an arbitrary lane list by owner,
+    exchange, account exact wire bytes. Runs inside shard_map.
+
+    lanes/kinds/impl: as `route_tiles` (one partition plan per bucket
+    stage; every lane rides the same plan, so zipped tuples survive the
+    route).
+    owners: (n,) int32 destination PE per element -- callers hash whatever
+    keys their transport owns by (k-mer words, minimizers) BEFORE routing.
+    grid: None for the 1d topology (one all_to_all over axis_names[0]) or
+    (rows, cols) for the hierarchical 2d exchange over (axis_names[0],
+    axis_names[1]).
+
+    2d 'oneplan' (default): one two-digit (dest_col, dest_row) plan; hop 2
+    is a transpose + all_to_all of the already-partitioned tile. With
+    `hop2_capacity` set (the occupancy-aware compact scheme) only the first
+    hop2_capacity slots of each bucket row travel the second hop; entries
+    the hop-1 fill histogram shows past that capacity are counted in
+    `hop2_dropped` (sender-side fills, exact after psum) and must ride the
+    caller's overflow round.
+
+    2d 'perhop' (oracle): each hop re-plans from the received words;
+    requires kinds[0] == 'word' and `rederive_owners` (maps the received
+    word lane back to owner PEs). Incompatible with hop2_capacity.
+
+    Returns a RouteResult; received lanes come back flat, length
+    P * capacity (1d / perhop's rows * capacity * cols) or
+    P * hop2_capacity (2d oneplan).
+    """
+    slot_bytes = lane_wire_bytes(lanes, kinds)
+    zero = jnp.int32(0)
+
+    def a2a(t, axis):
+        return jax.lax.all_to_all(t, axis, 0, 0, tiled=True)
+
+    if grid is None:
+        if hop2_capacity is not None:
+            raise ValueError("hop2_capacity (compact hop 2) requires the "
+                             "2d 'oneplan' topology; the 1d route has no "
+                             "second hop to compact")
+        tiles, fill, ovf = route_tiles(lanes, kinds, owners, valid, num_pes,
+                                       capacity, impl=impl)
+        out = tuple(a2a(t, axis_names[0]).reshape(-1) for t in tiles)
+        return RouteResult(
+            lanes=out, sent_valid=fill.sum().astype(jnp.int32),
+            wire_bytes=jnp.int32(num_pes * capacity * slot_bytes),
+            overflow=ovf, hop2_dropped=zero)
+
+    rows, cols = grid
+    if route2d == "oneplan":
+        cap2 = capacity if hop2_capacity is None \
+            else min(hop2_capacity, capacity)
+        tiles, fill, ovf = route_tiles(
+            lanes, kinds, oneplan_bucket_key(owners, rows, cols), valid,
+            num_pes, capacity, impl=impl)
+        out = _oneplan_two_hop(tiles, axis_names, rows, cols, capacity, cap2)
+        # Fill-aware two-hop accounting: hop 2 forwards exactly the (possibly
+        # compacted) prefixes hop 1 delivered and the exchange preserves the
+        # GLOBAL fill total, so after the stats psum each PE may charge its
+        # own fill histogram for both hops -- no O(P * capacity) sentinel
+        # re-scan of the received tile, no metadata exchange. The same
+        # histogram prices the compact hop 2: entries past cap2 in any
+        # bucket are sliced off on the receiving side, and their count here
+        # is globally exact.
+        fwd = jnp.minimum(fill, cap2)
+        return RouteResult(
+            lanes=tuple(t.reshape(-1) for t in out),
+            sent_valid=(fill.sum() + fwd.sum()).astype(jnp.int32),
+            wire_bytes=jnp.int32(num_pes * (capacity + cap2) * slot_bytes),
+            overflow=ovf,
+            hop2_dropped=(fill - fwd).sum().astype(jnp.int32))
+
+    if route2d != "perhop":
+        raise ValueError(f"unknown route2d {route2d!r}")
+    if hop2_capacity is not None:
+        raise ValueError("hop2_capacity (compact hop 2) requires the "
+                         "'oneplan' 2d route")
+    if rederive_owners is None or kinds[0] != "word":
+        raise ValueError("the 'perhop' oracle re-plans from the received "
+                         "word lane: kinds[0] must be 'word' and "
+                         "rederive_owners must be provided")
+    # Stage 1 routes along the column axis to the destination column,
+    # stage 2 re-derives owners from the received words and re-plans.
+    cap1 = capacity * rows  # per-column capacity: rows destinations share it
+    tiles1, fill1, ovf1 = route_tiles(lanes, kinds, owners % cols, valid,
+                                      cols, cap1, impl=impl)
+    recv1 = tuple(a2a(t, axis_names[1]).reshape(-1) for t in tiles1)
+    sent1 = jnp.array(jnp.iinfo(recv1[0].dtype).max, recv1[0].dtype)
+    valid1 = recv1[0] != sent1
+    dest_row = rederive_owners(recv1[0]) // cols
+    cap2 = capacity * cols  # stage-2 input is cols * cap1 entries
+    tiles2, fill2, ovf2 = route_tiles(recv1, kinds, dest_row, valid1, rows,
+                                      cap2, impl=impl)
+    out = tuple(a2a(t, axis_names[0]).reshape(-1) for t in tiles2)
+    return RouteResult(
+        lanes=out, sent_valid=(fill1.sum() + fill2.sum()).astype(jnp.int32),
+        wire_bytes=jnp.int32((cols * cap1 + rows * cap2) * slot_bytes),
+        overflow=ovf1 + ovf2, hop2_dropped=zero)
 
 
 def plan_capacity(num_items: int, num_pes: int, slack: float = 1.5,
@@ -100,53 +331,15 @@ def bucket_by_owner(words: jax.Array, owners: jax.Array, valid: jax.Array,
 
     On overflow (a destination receiving more than `capacity` entries) the
     first `capacity` entries in stream order are kept, identically for both
-    implementations.
+    implementations. This is a two-lane wrapper over `route_tiles` (the
+    lane-list tile build every transport routes through).
     """
-    n = words.shape[0]
-    if plan is not None and impl != "radix":
-        raise ValueError(f"plan= requires impl='radix', got {impl!r}")
-    sent = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
-    key = jnp.where(valid, owners.astype(jnp.int32), num_pes)  # invalid last
-    if impl == "radix":
-        if plan is None:
-            plan = ops.make_partition_plan(key, num_pes + 1)
-        hist = plan.totals[:num_pes]
-        within = plan.positions - plan.starts[key]  # stable rank within owner
-        ok = valid & (within < capacity)
-        dst = jnp.where(ok, key * capacity + within, num_pes * capacity)
-        flat = jnp.full((num_pes * capacity,), sent, words.dtype)
-        tile = flat.at[dst].set(jnp.where(valid, words, sent),
-                                mode="drop").reshape(num_pes, capacity)
-        ctile = None
-        if counts is not None:
-            ctile = jnp.zeros((num_pes * capacity,), jnp.int32).at[dst].set(
-                jnp.where(valid, counts.astype(jnp.int32), 0),
-                mode="drop").reshape(num_pes, capacity)
-    elif impl == "argsort":
-        order = jnp.argsort(key, stable=True)
-        s_owner = key[order]
-        s_words = jnp.where(valid[order], words[order], sent)
-        hist = jnp.bincount(jnp.minimum(s_owner, num_pes),
-                            length=num_pes + 1)[:num_pes]
-        offsets = jnp.concatenate([jnp.zeros((1,), hist.dtype),
-                                   jnp.cumsum(hist)[:-1]])
-        within = jnp.arange(n) - offsets[jnp.minimum(s_owner, num_pes - 1)]
-        ok = (s_owner < num_pes) & (within < capacity)
-        tile = jnp.full((num_pes, capacity), sent, words.dtype)
-        rows = jnp.where(ok, s_owner, num_pes)           # row P -> dropped
-        cols = jnp.where(ok, within, 0)
-        tile = tile.at[rows, cols].set(s_words, mode="drop")
-        ctile = None
-        if counts is not None:
-            s_counts = jnp.where(valid[order], counts[order].astype(jnp.int32),
-                                 0)
-            ctile = jnp.zeros((num_pes, capacity), jnp.int32)
-            ctile = ctile.at[rows, cols].set(s_counts, mode="drop")
-    else:
-        raise ValueError(f"unknown bucket impl {impl!r}")
-    fill = jnp.minimum(hist, capacity).astype(jnp.int32)
-    overflow = jnp.sum(jnp.maximum(hist - capacity, 0)).astype(jnp.int32)
-    return BucketResult(tile=tile, fill=fill, overflow=overflow, counts=ctile)
+    lanes = (words,) if counts is None else (words, counts)
+    kinds = ("word",) if counts is None else ("word", "i32")
+    tiles, fill, overflow = route_tiles(lanes, kinds, owners, valid, num_pes,
+                                        capacity, plan=plan, impl=impl)
+    return BucketResult(tile=tiles[0], fill=fill, overflow=overflow,
+                        counts=tiles[1] if counts is not None else None)
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2), static_argnames=("impl",))

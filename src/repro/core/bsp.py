@@ -12,7 +12,10 @@ duplicates). The FA-BSP counter with `use_l3=False` is the single-dispatch
 control for isolating the synchronization cost (benchmarks/aggregation_ablation).
 
 Hot path: the baseline is synchronization-poor by DESIGN, not sort-slow by
-accident -- its per-batch bucketing and final sort ride the same sort-free
+accident -- its per-batch exchange is one single-lane call into the shared
+routing engine (`aggregation.route_lanes`: identical bucketing, collective
+and exact wire-byte accounting as DAKC's transports), and its bucketing and
+final sort ride the same sort-free
 radix-partition engine as DAKC (`partition_impl`/`phase2_impl`, 'radix'
 default: stable counting partition for the L2 tile, LSD radix passes + the
 fused Pallas accumulate sweep for the final round; zero HLO sort ops).
@@ -33,8 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import compat, encoding
-from repro.core.aggregation import bucket_by_owner, plan_capacity
+from repro.core import aggregation, compat, encoding
+from repro.core.aggregation import plan_capacity, route_lanes
 from repro.core.owner import owner_pe
 from repro.core.sort import AccumResult, accumulate, radix_sort
 
@@ -71,14 +74,19 @@ def _batch_round(batch_local, *, cfg: BSPConfig, num_pes: int, cap: int,
                  axis_name: str):
     words = encoding.extract_kmers(batch_local, cfg.k, cfg.bits_per_symbol,
                                    canonical=cfg.canonical)
-    owners = owner_pe(words, num_pes)
-    tile, fill, ovf, _ = bucket_by_owner(words, owners,
-                                         jnp.ones(words.shape, bool),
-                                         num_pes, cap,
-                                         impl=cfg.partition_impl)
-    recv = jax.lax.all_to_all(tile, axis_name, 0, 0, tiled=True)
-    return recv, (jax.lax.psum(ovf, axis_name),
-                  jax.lax.psum(fill.sum(), axis_name))
+    # One single-lane call into the shared routing engine: the same
+    # bucketing, exchange and exact wire-byte conventions as DAKC
+    # (aggregation.route_lanes), minus its L2/L3 compression. The wire stat
+    # is NOT psum'd in-trace: per-PE bytes are a static int32, and the
+    # global total (x P x n_batches) overflows int32 at paper scale -- the
+    # host multiplies exact Python ints instead (count_kmers below).
+    rr = route_lanes((words,), ("word",), owner_pe(words, num_pes),
+                     jnp.ones(words.shape, bool), num_pes=num_pes,
+                     capacity=cap, axis_names=(axis_name,), grid=None,
+                     impl=cfg.partition_impl)
+    recv = rr.lanes[0].reshape(num_pes, cap)
+    return recv, (jax.lax.psum(rr.overflow, axis_name),
+                  jax.lax.psum(rr.sent_valid, axis_name))
 
 
 def _final_round(recv_all, *, cfg: BSPConfig, axis_name: str):
@@ -146,10 +154,14 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: BSPConfig,
 
     recv_all = jnp.concatenate(recvs, axis=1)
     result = final_fn(recv_all)
-    word_bytes = jnp.iinfo(recv_all.dtype).bits // 8
+    # Exact wire bytes, host-side in Python ints (int32 psums overflow at
+    # paper scale): every round each PE moves one padded single-word-lane
+    # tile -- the same per-slot convention as aggregation.lane_wire_bytes.
+    slot_b = aggregation.lane_wire_bytes((recv_all,), ("word",))
+    wire_bytes = n_batches * num_pes * num_pes * cap * slot_b
     raw = n_reads * (m - cfg.k + 1)
     stats = BSPStats(
         overflow=overflow, sent_words=sent_words,
-        wire_bytes=float(n_batches * num_pes * num_pes * cap * word_bytes),
+        wire_bytes=float(wire_bytes),
         raw_kmers=raw, num_global_syncs=n_batches + 1)
     return result, stats

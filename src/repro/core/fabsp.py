@@ -53,6 +53,14 @@ by `l3_mode`:
   <= 2 sent as duplicates) plus HEAVY tiles of {kmer, count} pairs for local
   count > 2. Needed at k=31 where a 64-bit word has no spare bits.
 
+Routing: every transport is ONE call per lane set into
+`aggregation.route_lanes` -- the lane-list routing engine (`_phase1_step`
+describes each wire format as payload word lanes plus optional int32
+header/count lanes; route_lanes buckets them all off one PartitionPlan,
+runs the exchange, and returns exact per-lane wire bytes). The BSP
+baseline's per-batch exchange rides the same engine (core/bsp.py), so
+wire-stat and capacity conventions live in exactly one place.
+
 Topologies (paper Table II): '1d' = direct all_to_all over the full axis;
 '2d' = two-stage all_to_all over a factorized (row, col) device grid -- the
 2D-HyperX analogue, trading an extra hop for O(sqrt(P)) tile memory. The
@@ -60,11 +68,18 @@ Topologies (paper Table II): '1d' = direct all_to_all over the full axis;
 'oneplan'`; owner decomposed as (dest_col, dest_row) digits, hop 2 a plain
 transpose + all_to_all) and accounts hop-2 occupancy straight from the
 hop-1 fill histogram instead of re-scanning the received tile.
+`hop2_impl='compact'` additionally SHIPS only a measured-occupancy hop-2
+tile: a smaller power-of-two capacity planned from a sample of the reads
+(each hop-1 bucket row is a contiguous valid prefix, so the compact tile
+is a static slice); when the hop-1 fill histogram shows a bucket past the
+compact capacity the drop is counted and the round retries on the padded
+tile -- the KMC 3-style two-capacity scheme, cutting Eq. 11 hop-2 wire
+volume at low occupancy with bit-identical histograms.
 
 Sort-free hot path: with the default `partition_impl='radix'` /
 `phase2_impl='radix'` knobs the whole counting pipeline lowers without a
 single HLO `sort` -- L2 bucketing is a stable radix partition
-(aggregation.bucket_by_owner), chunk-local L3 compressors and the final
+(aggregation.route_tiles), chunk-local L3 compressors and the final
 store compaction run the LSD radix engine (core/sort.py,
 kernels/radix_partition.py), and canonicalization happens inside extraction
 (`canonical_impl='fused'`). Every knob's 'argsort'/'sweep'/'perhop'/
@@ -102,12 +117,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import compat, countstore, encoding, minimizer
-from repro.core.aggregation import bucket_by_owner, plan_capacity
+from repro.core import aggregation, compat, countstore, encoding, minimizer
+from repro.core.aggregation import plan_capacity
 from repro.core.owner import owner_pe
 from repro.core.sort import (AccumResult, accumulate, radix_sort,
                              sort_with_weights)
-from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,7 +138,7 @@ class DAKCConfig:
     bits_per_symbol: int = 2
     # Implementation selectors ('radix' = sort-free partition engine,
     # 'argsort' = jnp comparison-sort oracle; bit-identical results).
-    partition_impl: str = "radix"  # L2 bucketing (bucket_by_owner)
+    partition_impl: str = "radix"  # L2 bucketing (aggregation.route_tiles)
     phase2_impl: str = "radix"     # store/stream compaction + L3 compressors
     # 'fused' folds min(word, revcomp) into the extraction loop (O(1)/base);
     # 'sweep' is the separate-pass oracle. Only read when canonical=True.
@@ -132,6 +146,15 @@ class DAKCConfig:
     # 'oneplan' routes both 2d hops off one (col, row)-digit partition plan;
     # 'perhop' is the plan-per-hop oracle. Only read when topology='2d'.
     route2d_impl: str = "oneplan"
+    # Occupancy-aware hop 2 (2d 'oneplan' only): 'compact' ships a smaller
+    # power-of-two hop-2 tile sized from a measured sample of the reads
+    # (the KMC 3-style two-capacity scheme) -- when the hop-1 fill histogram
+    # shows a bucket past the compact capacity, the drop is counted and the
+    # round retries with the padded tile (the second capacity). 'padded'
+    # (default, and the wire-parity oracle) always ships the full
+    # (P, capacity) tile on hop 2. Histograms are bit-identical; only wire
+    # volume (and, under a mis-estimate, one fallback round) differs.
+    hop2_impl: str = "padded"
     # 'stream' folds received tiles into the carry-resident count store
     # inside the Phase-1 scan (receive memory independent of n_chunks);
     # 'stacked' is the stack-then-sort oracle. Histograms are identical as
@@ -167,12 +190,19 @@ class DAKCConfig:
                 ("phase2_impl", ("radix", "argsort")),
                 ("canonical_impl", ("fused", "sweep")),
                 ("route2d_impl", ("oneplan", "perhop")),
+                ("hop2_impl", ("padded", "compact")),
                 ("receiver_impl", ("stream", "stacked")),
                 ("transport_impl", ("kmer", "superkmer")),
                 ("store_sizing", ("sample", "bound"))):
             v = getattr(self, knob)
             if v not in allowed:
                 raise ValueError(f"{knob} must be one of {allowed}, got {v!r}")
+        if (self.topology == "2d" and self.route2d_impl == "perhop"
+                and self.hop2_impl == "compact"):
+            raise ValueError(
+                "hop2_impl='compact' slices the one-plan route's "
+                "already-partitioned hop-2 tile; the 'perhop' oracle "
+                "re-plans per hop and has no compact seam")
         if self.transport_impl == "superkmer":
             if not 1 <= self.minimizer_len <= self.k:
                 raise ValueError(
@@ -205,11 +235,16 @@ class DAKCStats(NamedTuple):
     num_global_syncs: int          # static: 3 for DAKC (paper Sec. I)
     store_overflow: jax.Array      # () int32: inserts dropped by a full count
                                    # store (stream receiver; 0 for 'stacked')
+    hop2_dropped: jax.Array = 0    # () int32: entries past the compact hop-2
+                                   # capacity (hop2_impl='compact' only; a
+                                   # nonzero value triggers the padded
+                                   # fallback round)
 
 
 # Flat per-call stats tuple threaded out of the shard_map body, in order:
-# (route_overflow, store_overflow, sent_words, wire_hi, wire_lo, raw_kmers).
-STATS_FIELDS = 6
+# (route_overflow, store_overflow, sent_words, wire_hi, wire_lo, raw_kmers,
+#  hop2_dropped).
+STATS_FIELDS = 7
 
 # Wire volume is carried as an int32 (hi, lo) pair in base 2**20: lo stays
 # exact per PE, psum(hi)/psum(lo) stay inside int32 for any realistic mesh,
@@ -269,185 +304,27 @@ def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int,
     return normal_words, normal_valid, heavy_words, heavy_counts, is_heavy
 
 
-def _oneplan_bucket(owners, rows: int, cols: int):
-    """Two-digit bucket key of the one-plan 2d decomposition: col-major
-    (dest_col, dest_row), so hop 1's chunks are contiguous per destination
-    column AND pre-partitioned by destination row."""
-    return (owners % cols) * rows + owners // cols
-
-
-def _oneplan_two_hop(tiles, axis_names, rows: int, cols: int,
-                     capacity: int):
-    """Hop 1 + (src_col, dest_row) -> (dest_row, src_col) transpose + hop 2
-    for tiles bucketed by `_oneplan_bucket` -- the shared 2d exchange of
-    the kmer and super-k-mer transports (their stats/parity depend on this
-    staying one implementation)."""
-    def swap(t):
-        return t.reshape(cols, rows, capacity).transpose(1, 0, 2) \
-            .reshape(rows * cols, capacity)
-
-    return [jax.lax.all_to_all(
-        swap(jax.lax.all_to_all(t, axis_names[1], 0, 0, tiled=True)),
-        axis_names[0], 0, 0, tiled=True) for t in tiles]
-
-
-def _route(words, counts_or_none, valid, *, num_pes, capacity, axis_names,
-           grid, k, bps, impl="radix", route2d="oneplan"):
-    """Bucket + (possibly hierarchical) all_to_all for one lane set.
-
-    Returns (recv_words, recv_counts_or_none, sent_valid, wire_slots,
-    overflow); `wire_slots` is the number of padded tile slots moved (the
-    caller converts to bytes per its wire format).
-    `grid` is None for 1d or (rows, cols) for the 2d topology.
-    counts lane, when present, follows the words through every stage
-    (one multi-lane partition per hop; see aggregation.bucket_by_owner).
-
-    2d topologies ('route2d'):
-    - 'oneplan' (default): the owner id is decomposed into its two digits
-      (dest_col, dest_row) and the stream is bucketed ONCE, col-major, by
-      the single-plan radix partition. Hop 1's all_to_all chunks are then
-      contiguous per destination column AND pre-partitioned by destination
-      row, so hop 2 is a plain (src_col, dest_row) -> (dest_row, src_col)
-      transpose + all_to_all: no re-hash of the received words, no second
-      histogram/rank plan. One partition plan per route. Hop-2 occupancy
-      accounting is FILL-AWARE: because the exchange preserves the global
-      fill total, each PE charges its own (P,) fill histogram for both
-      hops -- the old O(P * capacity) sentinel re-scan of the received
-      tile is gone, and the psum'd stat is exactly equal.
-    - 'perhop': the oracle -- each hop re-derives owners from the received
-      words and builds its own plan (two plans per route). Final counts are
-      bit-identical; only the overflow granularity differs (per-(col,row)
-      bucket vs per-column share), which the overflow round absorbs.
-    """
-    mask = encoding.kmer_mask(k, bps)
-
-    def exchange(words_, counts_, valid_, owners, pes, cap, axis):
-        br = bucket_by_owner(words_, owners, valid_, pes, cap,
-                             counts=counts_, impl=impl)
-        recvw = jax.lax.all_to_all(br.tile, axis, 0, 0, tiled=True)
-        recvc = None if br.counts is None else jax.lax.all_to_all(
-            br.counts, axis, 0, 0, tiled=True)
-        return recvw, recvc, br.fill, br.overflow
-
-    if grid is None:
-        owners = owner_pe(words & mask, num_pes)
-        recvw, recvc, fill, ovf = exchange(words, counts_or_none, valid,
-                                           owners, num_pes, capacity,
-                                           axis_names[0])
-        sent_valid = fill.sum()
-        wire = jnp.int32(num_pes * capacity)
-        return recvw.reshape(-1), (None if recvc is None else recvc.reshape(-1)), \
-            sent_valid, wire, ovf
-
-    rows, cols = grid
-    owners = owner_pe(words & mask, num_pes)
-    if route2d == "oneplan":
-        # ONE two-digit radix plan: bucket = dest_col * rows + dest_row.
-        br = bucket_by_owner(words, _oneplan_bucket(owners, rows, cols),
-                             valid, num_pes, capacity,
-                             counts=counts_or_none, impl=impl)
-        tiles = [br.tile] + ([] if br.counts is None else [br.counts])
-        out = _oneplan_two_hop(tiles, axis_names, rows, cols, capacity)
-        r2w = out[0]
-        r2c = None if br.counts is None else out[1]
-        # Fill-aware hop-2 accounting: hop 2 forwards exactly the words hop 1
-        # delivered and the exchange preserves the GLOBAL fill total, so
-        # after the stats psum each PE may charge its own fill for both hops
-        # -- no O(P * capacity) sentinel re-scan of the received tile, no
-        # metadata exchange. (Per-PE the convention differs from 'what I
-        # received'; the psum'd stat is exactly equal.)
-        sent_valid = (jnp.int32(2) * br.fill.sum().astype(jnp.int32))
-        wire = jnp.int32(2 * num_pes * capacity)
-        return r2w.reshape(-1), (None if r2c is None else r2c.reshape(-1)), \
-            sent_valid, wire, br.overflow
-
-    # 'perhop' oracle: stage 1 routes along the column axis to the
-    # destination column, stage 2 re-plans from the received words.
-    dest_col = owners % cols
-    cap1 = capacity * rows  # per-column capacity: rows destinations share it
-    r1w, r1c, fill1, ovf1 = exchange(words, counts_or_none, valid, dest_col,
-                                     cols, cap1, axis_names[1])
-    flat1 = r1w.reshape(-1)
-    flat1c = None if r1c is None else r1c.reshape(-1)
-    sentv = jnp.array(jnp.iinfo(words.dtype).max, words.dtype)
-    valid1 = flat1 != sentv
-    owners1 = owner_pe(flat1 & mask, num_pes)
-    dest_row = owners1 // cols
-    cap2 = capacity * cols  # stage-2 input is cols * cap1 entries
-    r2w, r2c, fill2, ovf2 = exchange(flat1, flat1c, valid1, dest_row,
-                                     rows, cap2, axis_names[0])
-    sent_valid = fill1.sum() + fill2.sum()
-    wire = jnp.int32(cols * cap1 + rows * cap2)
-    return r2w.reshape(-1), (None if r2c is None else r2c.reshape(-1)), \
-        sent_valid, wire, ovf1 + ovf2
-
-
-def _route_sk(skw, lens, valid, owners, *, num_pes, capacity, axis_names,
-              grid, impl):
-    """Bucket + all_to_all for the super-k-mer lane set (S payload word
-    lanes + the int32 length-header lane).
-
-    All lanes ride ONE partition plan ('radix': `ops.make_partition_plan`
-    built once, passed to `bucket_by_owner` per lane -- the multi-lane hook
-    the PartitionPlan API exists for; 'argsort': the stable oracle re-sorts
-    per lane, which yields the identical layout). 2d topologies use the
-    one-plan (dest_col, dest_row)-digit decomposition exclusively -- the
-    per-hop oracle would have to re-derive minimizers from packed payloads
-    and is rejected at config time.
-
-    Returns (recv_words (N, S), recv_lens (N,), sent_valid, wire_slots,
-    overflow).
-    """
-    n_lanes = skw.shape[1]
-
-    def bucket_lanes(bucket_key, pes, cap):
-        plan = None
-        if impl == "radix":
-            key = jnp.where(valid, bucket_key.astype(jnp.int32), pes)
-            plan = ops.make_partition_plan(key, pes + 1)
-        first = bucket_by_owner(skw[:, 0], bucket_key, valid, pes, cap,
-                                counts=lens, plan=plan, impl=impl)
-        tiles = [first.tile]
-        for s in range(1, n_lanes):
-            tiles.append(bucket_by_owner(skw[:, s], bucket_key, valid, pes,
-                                         cap, plan=plan, impl=impl).tile)
-        return tiles, first.counts, first.fill, first.overflow
-
-    def a2a(t, axis):
-        return jax.lax.all_to_all(t, axis, 0, 0, tiled=True)
-
-    if grid is None:
-        tiles, ltile, fill, ovf = bucket_lanes(owners, num_pes, capacity)
-        rw = jnp.stack([a2a(t, axis_names[0]).reshape(-1) for t in tiles],
-                       axis=1)
-        rl = a2a(ltile, axis_names[0]).reshape(-1)
-        return rw, rl, fill.sum(), jnp.int32(num_pes * capacity), ovf
-
-    rows, cols = grid
-    tiles, ltile, fill, ovf = bucket_lanes(
-        _oneplan_bucket(owners, rows, cols), num_pes, capacity)
-    out = _oneplan_two_hop(tiles + [ltile], axis_names, rows, cols,
-                           capacity)
-    rw = jnp.stack([t.reshape(-1) for t in out[:-1]], axis=1)
-    rl = out[-1].reshape(-1)
-    # Fill-aware two-hop accounting, as in _route's oneplan branch.
-    sent_valid = jnp.int32(2) * fill.sum().astype(jnp.int32)
-    return rw, rl, sent_valid, jnp.int32(2 * num_pes * capacity), ovf
-
-
 def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
-                 cap_h: int, mode: str, axis_names, grid):
-    """One scan step: parse -> L3 / super-k-mer segmentation -> L2 tiles ->
-    all_to_all.
+                 cap_h: int, mode: str, axis_names, grid, hop2_caps=None):
+    """One scan step: parse -> L3 / super-k-mer segmentation -> one
+    `aggregation.route_lanes` exchange per lane set.
+
+    Every wire format is a lane list: 'packed'/'none' route one word lane,
+    'dual' routes a NORMAL word lane plus a HEAVY (word, i32-count) pair,
+    'superkmer' routes S payload word lanes plus the i32 length header --
+    route_lanes buckets each set off ONE partition plan and returns the
+    exact wire bytes (per-lane byte widths are accounted in
+    aggregation.lane_wire_bytes, the single source of truth).
 
     Canonicalization (cfg.canonical) happens inside the extraction loop
     (encoding.extract_kmers canonical=/canonical_impl=): no separate
-    revcomp sweep over the packed words. The returned wire stat is exact
-    BYTES for this chunk's padded tiles (word lanes + int32 header/count
-    lanes).
+    revcomp sweep over the packed words. `hop2_caps` is the optional
+    (normal, heavy) compact hop-2 capacity pair (hop2_impl='compact').
+
+    Returns (recv, (raw, sent_valid, wire_bytes, overflow, hop2_dropped)).
     """
     k, bps = cfg.k, cfg.bits_per_symbol
-    word_b = jnp.iinfo(encoding.kmer_dtype(k, bps)).bits // 8
+    h2n, h2h = (None, None) if hop2_caps is None else hop2_caps
 
     if mode == "superkmer":
         # Minimizer transport: route packed super-k-mer windows, not
@@ -456,43 +333,55 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
             chunk, k, cfg.minimizer_len, bps, canonical=cfg.canonical,
             canonical_impl=cfg.canonical_impl)
         raw = jnp.int32(sk.lengths.shape[0])   # one slot per k-mer instance
-        rw, rl, sentn, slots, ovf = _route_sk(
-            sk.words, sk.lengths, sk.lengths > 0,
-            owner_pe(sk.minimizers, num_pes), num_pes=num_pes,
-            capacity=cap_n, axis_names=axis_names, grid=grid,
-            impl=cfg.partition_impl)
-        wire = slots * jnp.int32(
-            minimizer.slot_bytes(k, cfg.minimizer_len, bps))
-        return (rw, rl, None), (raw, sentn, wire, ovf)
+        n_lanes = sk.words.shape[1]
+        rr = aggregation.route_lanes(
+            tuple(sk.words[:, s] for s in range(n_lanes)) + (sk.lengths,),
+            ("word",) * n_lanes + ("i32",),
+            owner_pe(sk.minimizers, num_pes), sk.lengths > 0,
+            num_pes=num_pes, capacity=cap_n, axis_names=axis_names,
+            grid=grid, impl=cfg.partition_impl, route2d="oneplan",
+            hop2_capacity=h2n)
+        rw = jnp.stack(rr.lanes[:-1], axis=1)
+        return (rw, rr.lanes[-1], None), (raw, rr.sent_valid, rr.wire_bytes,
+                                          rr.overflow, rr.hop2_dropped)
 
     words = encoding.extract_kmers(chunk, k, bps, canonical=cfg.canonical,
                                    canonical_impl=cfg.canonical_impl)
     raw = jnp.int32(words.shape[0])
     valid = jnp.ones(words.shape, bool)
-    route = functools.partial(_route, num_pes=num_pes, axis_names=axis_names,
-                              grid=grid, k=k, bps=bps,
-                              impl=cfg.partition_impl,
-                              route2d=cfg.route2d_impl)
+    mask = encoding.kmer_mask(k, bps)
+
+    def route(payload, counts, pvalid, capacity, hop2):
+        lanes = (payload,) if counts is None else (payload, counts)
+        kinds = ("word",) if counts is None else ("word", "i32")
+        return aggregation.route_lanes(
+            lanes, kinds, owner_pe(payload & mask, num_pes), pvalid,
+            num_pes=num_pes, capacity=capacity, axis_names=axis_names,
+            grid=grid, impl=cfg.partition_impl, route2d=cfg.route2d_impl,
+            hop2_capacity=hop2,
+            rederive_owners=lambda w: owner_pe(w & mask, num_pes))
 
     if mode == "packed":
         from repro.core.aggregation import l3_compress
         payload, pvalid = l3_compress(words, k, bps, impl=cfg.phase2_impl)
-        rw, _, sentn, slots, ovf = route(payload, None, pvalid,
-                                         capacity=cap_n)
-        return (rw, None, None), (raw, sentn, slots * jnp.int32(word_b), ovf)
+        rr = route(payload, None, pvalid, cap_n, h2n)
+        return (rr.lanes[0], None, None), (raw, rr.sent_valid, rr.wire_bytes,
+                                           rr.overflow, rr.hop2_dropped)
 
     if mode == "dual":
         nw, nv, hw, hc, hv = _l3_split_dual(words, valid, k, bps,
                                             impl=cfg.phase2_impl)
-        rnw, _, sentn, slots_n, ovf_n = route(nw, None, nv, capacity=cap_n)
-        rhw, rhc, senth, slots_h, ovf_h = route(hw, hc, hv, capacity=cap_h)
-        # HEAVY wire carries a word + an int32 count per slot.
-        wire = slots_n * jnp.int32(word_b) + slots_h * jnp.int32(word_b + 4)
-        return (rnw, rhw, rhc), (raw, sentn + senth, wire, ovf_n + ovf_h)
+        rn = route(nw, None, nv, cap_n, h2n)
+        rh = route(hw, hc, hv, cap_h, h2h)
+        return (rn.lanes[0], rh.lanes[0], rh.lanes[1]), \
+            (raw, rn.sent_valid + rh.sent_valid,
+             rn.wire_bytes + rh.wire_bytes, rn.overflow + rh.overflow,
+             rn.hop2_dropped + rh.hop2_dropped)
 
     # mode == 'none': BSP-style raw words, single lane, no compression.
-    rw, _, sentn, slots, ovf = route(words, None, valid, capacity=cap_n)
-    return (rw, None, None), (raw, sentn, slots * jnp.int32(word_b), ovf)
+    rr = route(words, None, valid, cap_n, h2n)
+    return (rr.lanes[0], None, None), (raw, rr.sent_valid, rr.wire_bytes,
+                                       rr.overflow, rr.hop2_dropped)
 
 
 def _recv_pairs(recv, *, cfg: DAKCConfig, mode: str):
@@ -572,32 +461,33 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
 
 def _stream_fold(chunks, store: countstore.CountStore, *, cfg: DAKCConfig,
                  num_pes: int, cap_n: int, cap_h: int, mode: str, axis_names,
-                 grid):
+                 grid, hop2_caps=None):
     """Phase-1 scan with the streaming receiver: route each chunk, then fold
     its decompressed receive tiles into the carry-resident count store.
 
-    Returns (store, (raw, sent_words, wire_hi, wire_lo, route_overflow)).
-    The scan emits NO per-chunk outputs -- receive memory is the store plus
-    one in-flight tile, independent of the chunk count.
+    Returns (store, (raw, sent_words, wire_hi, wire_lo, route_overflow,
+    hop2_dropped)). The scan emits NO per-chunk outputs -- receive memory is
+    the store plus one in-flight tile, independent of the chunk count.
     """
 
     def step(carry, chunk):
-        raw_t, sent_t, whi, wlo, ovf_t, st = carry
-        recv, (raw, sent_w, wire, ovf) = _phase1_step(
+        raw_t, sent_t, whi, wlo, ovf_t, h2_t, st = carry
+        recv, (raw, sent_w, wire, ovf, h2) = _phase1_step(
             chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
-            mode=mode, axis_names=axis_names, grid=grid)
+            mode=mode, axis_names=axis_names, grid=grid, hop2_caps=hop2_caps)
         kmers, cnts = _recv_pairs(recv, cfg=cfg, mode=mode)
         st = countstore.store_insert(st, kmers, cnts)
         whi, wlo = _wire_add(whi, wlo, wire)
         # explicit int32: x64 mode (k=31 words) promotes reductions to int64
         return (raw_t + raw.astype(jnp.int32),
                 sent_t + sent_w.astype(jnp.int32), whi, wlo,
-                ovf_t + ovf.astype(jnp.int32), st), None
+                ovf_t + ovf.astype(jnp.int32),
+                h2_t + h2.astype(jnp.int32), st), None
 
     zero = jnp.int32(0)
-    (raw, sent_w, whi, wlo, ovf, store), _ = jax.lax.scan(
-        step, (zero, zero, zero, zero, zero, store), chunks)
-    return store, (raw, sent_w, whi, wlo, ovf)
+    (raw, sent_w, whi, wlo, ovf, h2, store), _ = jax.lax.scan(
+        step, (zero, zero, zero, zero, zero, zero, store), chunks)
+    return store, (raw, sent_w, whi, wlo, ovf, h2)
 
 
 def _chunked(reads_local: jax.Array, chunk_reads: int) -> jax.Array:
@@ -611,39 +501,43 @@ def _chunked(reads_local: jax.Array, chunk_reads: int) -> jax.Array:
 
 def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
                  cap_n: int, cap_h: int, store_cap: int, mode: str,
-                 axis_names, grid) -> Tuple[AccumResult, tuple]:
+                 axis_names, grid, hop2_caps=None
+                 ) -> Tuple[AccumResult, tuple]:
     chunks = _chunked(reads_local, cfg.chunk_reads)
     if cfg.receiver_impl == "stream":
         dt = encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)
         store = countstore.empty_store(store_cap, dt)
-        store, (raw, sent_w, whi, wlo, ovf) = _stream_fold(
+        store, (raw, sent_w, whi, wlo, ovf, h2) = _stream_fold(
             chunks, store, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
-            cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid)
+            cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid,
+            hop2_caps=hop2_caps)
         result = countstore.store_histogram(
             store, total_bits=encoding.kmer_bits(cfg.k, cfg.bits_per_symbol),
             impl=cfg.phase2_impl)
         store_ovf = store.dropped
     else:
         def step(carry, chunk):
-            recv, (raw, sent_w, wire, ovf) = _phase1_step(
+            recv, (raw, sent_w, wire, ovf, h2) = _phase1_step(
                 chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
-                mode=mode, axis_names=axis_names, grid=grid)
-            raw_t, sent_t, whi, wlo, ovf_t = carry
+                mode=mode, axis_names=axis_names, grid=grid,
+                hop2_caps=hop2_caps)
+            raw_t, sent_t, whi, wlo, ovf_t, h2_t = carry
             whi, wlo = _wire_add(whi, wlo, wire)
             return (raw_t + raw.astype(jnp.int32),
                     sent_t + sent_w.astype(jnp.int32), whi, wlo,
-                    ovf_t + ovf.astype(jnp.int32)), recv
+                    ovf_t + ovf.astype(jnp.int32),
+                    h2_t + h2.astype(jnp.int32)), recv
 
         zero = jnp.int32(0)
-        (raw, sent_w, whi, wlo, ovf), recvs = jax.lax.scan(
-            step, (zero, zero, zero, zero, zero), chunks)
+        (raw, sent_w, whi, wlo, ovf, h2), recvs = jax.lax.scan(
+            step, (zero, zero, zero, zero, zero, zero), chunks)
         recv_n, recv_h, recv_hc = recvs
         result = _phase2(recv_n, recv_h, recv_hc, cfg=cfg, mode=mode)
         store_ovf = jnp.int32(0)
 
     ax = tuple(axis_names)
     stats = tuple(jax.lax.psum(x, ax)
-                  for x in (ovf, store_ovf, sent_w, whi, wlo, raw))
+                  for x in (ovf, store_ovf, sent_w, whi, wlo, raw, h2))
     return AccumResult(unique=result.unique, counts=result.counts,
                        num_unique=result.num_unique.reshape(1)), stats
 
@@ -789,17 +683,120 @@ def _plan_caps(cfg: DAKCConfig, num_pes: int, shape, slack: float):
     return mode, cap_n, cap_h
 
 
+def _pow2ceil(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+# How many evenly-spaced chunks _chunk_valid_estimate samples: one chunk's
+# count is Poisson-noisy for the small lanes (the HEAVY split especially --
+# a skewed read set can put 20x more heavy k-mers in a later chunk than in
+# the first), and the compact capacity sizes for the max.
+_HOP2_SAMPLE_CHUNKS = 4
+
+
+def _chunk_valid_estimate(reads, cfg: DAKCConfig, mode: str,
+                          shape) -> Tuple[int, int]:
+    """Measured per-chunk (normal, heavy) VALID slot estimate -- the
+    occupancy the compact hop 2 sizes its tile for.
+
+    Up to `_HOP2_SAMPLE_CHUNKS` evenly-spaced chunks of the reads are
+    pushed through the mode's own compression ('packed': distinct count;
+    'dual': duplicate/heavy split; 'superkmer': actual minimizer-run
+    count) and the per-chunk MAX is the estimate; 'none' ships every
+    instance so the shape bound is already exact. With no reads in hand
+    (shape-only lowering) the estimate degrades to the instance bound and
+    compact degenerates to padded. A sample smaller than one chunk is
+    scaled up (over-estimating -- the safe direction; an under-estimate
+    costs one padded-fallback round, the same discipline as every static
+    capacity).
+    """
+    n_reads, m = shape
+    chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
+    if mode == "none" or reads is None or n_reads == 0:
+        if mode == "superkmer":
+            return minimizer.expected_superkmers(
+                cfg.chunk_reads, m, cfg.k, cfg.minimizer_len), 0
+        return chunk_kmers * (2 if mode == "dual" else 1), chunk_kmers
+    reads = jnp.asarray(reads)
+    n_chunks = max(1, n_reads // cfg.chunk_reads)
+    est_n = est_h = 0
+    for c in sorted({(i * n_chunks) // _HOP2_SAMPLE_CHUNKS
+                     for i in range(min(_HOP2_SAMPLE_CHUNKS, n_chunks))}):
+        lo = c * cfg.chunk_reads
+        sample = reads[lo:lo + min(cfg.chunk_reads, n_reads)]
+        scale = -(-cfg.chunk_reads // sample.shape[0])
+        if mode == "superkmer":
+            sk = minimizer.segment_superkmers(
+                sample, cfg.k, cfg.minimizer_len, cfg.bits_per_symbol,
+                canonical=cfg.canonical, canonical_impl=cfg.canonical_impl)
+            est_n = max(est_n, scale * int((np.asarray(sk.lengths) > 0)
+                                           .sum()))
+            continue
+        words = np.asarray(encoding.extract_kmers(
+            sample, cfg.k, cfg.bits_per_symbol, canonical=cfg.canonical,
+            canonical_impl=cfg.canonical_impl))
+        _, counts = np.unique(words, return_counts=True)
+        if mode == "packed":
+            est_n = max(est_n, scale * int(counts.size))
+            continue
+        # 'dual': NORMAL ships `count` copies for count <= 2, HEAVY a pair.
+        est_n = max(est_n, scale * int((counts == 1).sum()
+                                       + 2 * (counts == 2).sum()))
+        est_h = max(est_h, scale * int((counts > 2).sum()))
+    return est_n, est_h
+
+
+def _hop2_engaged(cfg: DAKCConfig) -> bool:
+    """Whether the compact hop-2 scheme applies to this config at all."""
+    return (cfg.topology == "2d" and cfg.hop2_impl == "compact"
+            and cfg.route2d_impl == "oneplan")
+
+
+def _resolve_hop2_caps(reads, cfg: DAKCConfig, num_pes: int, shape,
+                       slack: float,
+                       est: Optional[Tuple[int, int]] = None
+                       ) -> Optional[Tuple[int, int]]:
+    """(normal, heavy) compact hop-2 capacities, or None for the padded
+    oracle (also when compact would not engage: 1d, perhop, or
+    hop2_impl='padded').
+
+    Each capacity is the measured-occupancy plan (`_chunk_valid_estimate`
+    spread over PEs with the routing slack) rounded UP to a power of two:
+    the estimate is data-dependent, and quantizing keeps near-identical
+    batches on one executable-cache entry (the same discipline as the
+    sampled store sizing). Floored at 64 slots -- per-bucket fills are
+    Poisson, and for small estimates the relative tail is wide while 64
+    slots cost next to nothing -- and clamped to the hop-1 capacity, where
+    compact degenerates to the padded tile exactly. `est` short-circuits
+    the sampling pass: retry rounds re-derive capacities at their doubled
+    slack without re-reading the data (the estimate is slack-independent).
+    """
+    if not _hop2_engaged(cfg):
+        return None
+    mode, cap_n, cap_h = _plan_caps(cfg, num_pes, shape, slack)
+    est_n, est_h = (_chunk_valid_estimate(reads, cfg, mode, shape)
+                    if est is None else est)
+
+    def cap2(cap, est_lane):
+        return min(cap, max(64, _pow2ceil(
+            plan_capacity(max(est_lane, 1), num_pes, slack))))
+
+    return cap2(cap_n, est_n), cap2(cap_h, est_h) if cap_h else 0
+
+
 def _data_spec(axis_names):
     return P(axis_names if len(axis_names) > 1 else axis_names[0])
 
 
 def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
                          dtype_name: str, slack: float,
-                         store_cap: Optional[int] = None):
+                         store_cap: Optional[int] = None,
+                         hop2_caps: Optional[Tuple[int, int]] = None):
     num_pes = _mesh_pes(mesh, axis_names)
     if store_cap is None:
         store_cap = _default_store_capacity(cfg, shape, num_pes)
-    key = (cfg, mesh, axis_names, shape, dtype_name, slack, store_cap)
+    key = (cfg, mesh, axis_names, shape, dtype_name, slack, store_cap,
+           hop2_caps)
     fn = _EXEC_CACHE.get(key)
     if fn is not None:
         return fn
@@ -810,7 +807,8 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
     fn = jax.jit(compat.shard_map(
         functools.partial(_local_count, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
                           cap_h=cap_h, store_cap=store_cap, mode=mode,
-                          axis_names=axis_names, grid=grid),
+                          axis_names=axis_names, grid=grid,
+                          hop2_caps=hop2_caps),
         mesh=mesh, in_specs=(spec,),
         out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
                    (P(),) * STATS_FIELDS)))
@@ -819,19 +817,21 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
 
 
 def _host_stats(cfg: DAKCConfig, raw_stats) -> DAKCStats:
-    route_ovf, store_ovf, sent_w, whi, wlo, raw = raw_stats
+    route_ovf, store_ovf, sent_w, whi, wlo, raw, hop2_dropped = raw_stats
     # the traced accumulator already counts bytes (see _wire_add)
     wire_bytes = (int(whi) << _WIRE_SHIFT) + int(wlo)
     return DAKCStats(overflow=route_ovf, sent_words=sent_w,
                      wire_bytes=np.int64(wire_bytes),
                      raw_kmers=raw, num_global_syncs=3,
-                     store_overflow=store_ovf)
+                     store_overflow=store_ovf, hop2_dropped=hop2_dropped)
 
 
 def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
                 axis_names: Sequence[str] = ("pe",),
                 _slack_override: Optional[float] = None,
-                _store_cap_override: Optional[int] = None
+                _store_cap_override: Optional[int] = None,
+                _hop2_padded: bool = False,
+                _hop2_est: Optional[Tuple[int, int]] = None
                 ) -> Tuple[AccumResult, DAKCStats]:
     """Distributed asynchronous k-mer counting (DAKC).
 
@@ -843,7 +843,10 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
     Overflow rounds: routing-capacity overflow (possible only under
     adversarial skew with L3 off) retries with doubled slack; a full count
     store (stream receiver sized below the distinct-count) retries with
-    doubled store capacity -- a rehash round. Both retry shapes land in the
+    doubled store capacity -- a rehash round; a compact hop-2 tile the
+    hop-1 fill histogram did not fit (hop2_impl='compact' under skew or a
+    mis-estimated sample) retries with the PADDED hop-2 tile -- the second
+    capacity of the two-capacity scheme. All retry shapes land in the
     executable cache (`_counting_executable`).
     """
     axis_names = tuple(axis_names)
@@ -851,14 +854,25 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
     num_pes = _mesh_pes(mesh, axis_names)
     store_cap = (_store_cap_override if _store_cap_override is not None
                  else _resolve_store_capacity(reads, cfg, num_pes))
+    hop2_caps = None
+    if not _hop2_padded and _hop2_engaged(cfg):
+        if _hop2_est is None:      # sample once; retries re-plan from it
+            mode = _plan_caps(cfg, num_pes, tuple(reads.shape), slack)[0]
+            _hop2_est = _chunk_valid_estimate(reads, cfg, mode,
+                                              tuple(reads.shape))
+        hop2_caps = _resolve_hop2_caps(reads, cfg, num_pes,
+                                       tuple(reads.shape), slack,
+                                       est=_hop2_est)
     fn = _counting_executable(cfg, mesh, axis_names, tuple(reads.shape),
-                              str(reads.dtype), slack, store_cap=store_cap)
+                              str(reads.dtype), slack, store_cap=store_cap,
+                              hop2_caps=hop2_caps)
 
     result, raw_stats = fn(reads)
     stats = _host_stats(cfg, raw_stats)
     route_over = int(stats.overflow) > 0
     store_over = int(stats.store_overflow) > 0
-    if route_over or store_over:
+    hop2_over = int(stats.hop2_dropped) > 0
+    if route_over or store_over or hop2_over:
         if route_over and slack > 8:
             raise RuntimeError(
                 f"capacity overflow persists at slack {slack}: "
@@ -870,7 +884,8 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
         return count_kmers(
             reads, mesh, cfg, axis_names,
             _slack_override=slack * 2 if route_over else slack,
-            _store_cap_override=store_cap * 2 if store_over else store_cap)
+            _store_cap_override=store_cap * 2 if store_over else store_cap,
+            _hop2_padded=_hop2_padded or hop2_over, _hop2_est=_hop2_est)
     return result, stats
 
 
@@ -880,9 +895,10 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
 
 
 def _update_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
-                       dtype_name: str, slack: float, store_cap: int):
+                       dtype_name: str, slack: float, store_cap: int,
+                       hop2_caps: Optional[Tuple[int, int]] = None):
     key = ("update", cfg, mesh, axis_names, shape, dtype_name, slack,
-           store_cap)
+           store_cap, hop2_caps)
     fn = _EXEC_CACHE.get(key)
     if fn is not None:
         return fn
@@ -895,12 +911,14 @@ def _update_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
         chunks = _chunked(reads_local, cfg.chunk_reads)
         store = countstore.CountStore(keys=skeys, counts=scounts,
                                       dropped=jnp.int32(0))
-        store, (raw, sent_w, whi, wlo, ovf) = _stream_fold(
+        store, (raw, sent_w, whi, wlo, ovf, h2) = _stream_fold(
             chunks, store, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
-            cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid)
+            cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid,
+            hop2_caps=hop2_caps)
         ax = tuple(axis_names)
         stats = tuple(jax.lax.psum(x, ax)
-                      for x in (ovf, store.dropped, sent_w, whi, wlo, raw))
+                      for x in (ovf, store.dropped, sent_w, whi, wlo, raw,
+                                h2))
         return store.keys, store.counts, stats
 
     fn = jax.jit(compat.shard_map(
@@ -987,6 +1005,10 @@ class KmerCounter:
         self._dtype = encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)
         self._slack = cfg.slack
         self._store_cap: Optional[int] = cfg.store_capacity
+        # compact hop-2 state: once a batch's hop-1 fill histogram misses
+        # the compact tile, this stream stays on the padded fallback (the
+        # second capacity) -- sticky, like the doubled routing slack.
+        self._hop2_padded = False
         self._skeys = None
         self._scounts = None
         # host-side running totals across updates (Python ints: an
@@ -1032,14 +1054,27 @@ class KmerCounter:
         zero unless a round gave up)."""
         if self._skeys is None:
             self._alloc(reads)
+        hop2_est = None
+        if not self._hop2_padded and _hop2_engaged(self._cfg):
+            mode = _plan_caps(self._cfg, self._num_pes, tuple(reads.shape),
+                              self._slack)[0]
+            hop2_est = _chunk_valid_estimate(reads, self._cfg, mode,
+                                             tuple(reads.shape))
         while True:
+            hop2_caps = None if self._hop2_padded else _resolve_hop2_caps(
+                reads, self._cfg, self._num_pes, tuple(reads.shape),
+                self._slack, est=hop2_est)
             fn = _update_executable(self._cfg, self._mesh, self._axes,
                                     tuple(reads.shape), str(reads.dtype),
-                                    self._slack, self._store_cap)
+                                    self._slack, self._store_cap,
+                                    hop2_caps=hop2_caps)
             nk, nc, raw_stats = fn(reads, self._skeys, self._scounts)
             stats = _host_stats(self._cfg, raw_stats)
             if int(stats.store_overflow) > 0:
                 self._grow()           # rehash round; replay this batch
+                continue
+            if int(stats.hop2_dropped) > 0:
+                self._hop2_padded = True   # padded fallback round; replay
                 continue
             if int(stats.overflow) > 0:
                 if self._slack > 8:

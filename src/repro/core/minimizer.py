@@ -36,9 +36,10 @@ Wire format (fixed-word tiles + length headers): a super-k-mer slot is
 header holding the run length in k-mers (0 = empty slot). Bases are packed
 LSB-first, `bits_per_symbol` bits each, `bases_per_word` to a word; bases
 beyond the run are zeroed so the packing is a pure function of the
-super-k-mer. The header lane rides the same radix-partition plan the k-mer
-transport uses for its HEAVY counts lane, so routing reuses
-`aggregation.bucket_by_owner` unchanged.
+super-k-mer. Routing is one `aggregation.route_lanes` call over the S
+payload word lanes plus the 'i32' header lane -- the same lane-list engine
+(and per-lane wire-byte accounting) every other transport uses, with all
+lanes riding one radix-partition plan.
 
 Static shapes: segmentation emits one slot per k-mer POSITION (the worst
 case: every k-mer its own super-k-mer) with a validity mask -- only

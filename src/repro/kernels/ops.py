@@ -147,6 +147,15 @@ def make_partition_plan(buckets: jax.Array, num_buckets: int,
                                 interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnums=(1,))
+def make_partition_plan_ref(buckets: jax.Array,
+                            num_buckets: int) -> PartitionPlan:
+    """Stable-argsort oracle of `make_partition_plan` (bit-identical plan;
+    see kernels/ref.py). The `impl='argsort'` path of the lane-list routing
+    engine builds its plan here so both impls share one tile-build."""
+    return ref.partition_plan_ref(buckets, num_buckets)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "scale", "q_offset", "block_q", "block_k",
     "impl"))

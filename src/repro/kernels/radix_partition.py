@@ -13,11 +13,13 @@ extra histogram of the stream.
 Two kernels, composed by `make_partition_plan` into a reusable
 `PartitionPlan` object (positions + per-bucket totals + exclusive-prefix
 starts). A plan is built from ONE histogram pass and then applied to any
-number of payload lanes by pure scatters -- `aggregation.bucket_by_owner`
-routes its words and counts lanes off one plan, and the `'2d'` routing
-topology decomposes the owner id into (col, row) digits so both hops of the
-hierarchical all_to_all run off a single plan (the second hop is a plain
-transpose of the already-partitioned tile; see `fabsp._route`).
+number of payload lanes by pure scatters -- `aggregation.route_tiles`
+buckets an arbitrary lane LIST (k-mer words, super-k-mer payload words,
+int32 headers/counts) off one plan via `PartitionPlan.tile_slots`, and the
+`'2d'` routing topology decomposes the owner id into (col, row) digits so
+both hops of the hierarchical all_to_all run off a single plan (the second
+hop is a plain transpose of the already-partitioned tile; see
+`aggregation.route_lanes`).
 
 1. `bucket_hist_pallas`: per-tile bucket histogram. Each grid instance
    histograms a VMEM-resident tile of int32 bucket ids via a broadcast
@@ -121,11 +123,36 @@ class PartitionPlan(NamedTuple):
     Built from a single histogram pass; applying it to a payload lane is one
     scatter (`positions`), so any number of lanes -- and, for multi-digit
     bucket keys, any number of routing hops whose digit order matches the
-    bucket-major layout -- share the same plan.
+    bucket-major layout -- share the same plan. `aggregation.route_tiles`
+    applies one plan to an arbitrary LIST of payload lanes (the lane-list
+    transport API); `tile_slots` below is the shared slot math it scatters
+    through.
     """
     positions: jax.Array  # (n,) int32 destination slot of every element
     totals: jax.Array     # (num_buckets,) int32 per-bucket counts (no pads)
     starts: jax.Array     # (num_buckets,) int32 exclusive prefix of totals
+
+    def tile_slots(self, key: jax.Array, valid: jax.Array, capacity: int):
+        """Padded-tile destination of every element under this plan.
+
+        Convention: the plan was built over B = `num_buckets` bucket ids
+        where the LAST bucket is the invalid/trash bucket (`key == B - 1`
+        for invalid elements); payload rows are the first B - 1 buckets.
+        Returns (dst, fill, overflow): `dst` is the flat slot in a
+        ((B - 1) * capacity,) destination-major tile, with every dropped
+        element (invalid, or past its bucket's capacity) pointed one past
+        the end so a scatter with mode='drop' discards it. `fill` is the
+        per-bucket valid count clamped to capacity; `overflow` counts the
+        clamped-off entries. Stable: within a bucket, stream order.
+        """
+        num_rows = self.totals.shape[0] - 1
+        hist = self.totals[:num_rows]
+        within = self.positions - self.starts[key]   # stable rank in bucket
+        ok = valid & (key < num_rows) & (within < capacity)
+        dst = jnp.where(ok, key * capacity + within, num_rows * capacity)
+        fill = jnp.minimum(hist, capacity).astype(jnp.int32)
+        overflow = jnp.sum(jnp.maximum(hist - capacity, 0)).astype(jnp.int32)
+        return dst, fill, overflow
 
 
 def make_partition_plan(buckets: jax.Array, num_buckets: int,

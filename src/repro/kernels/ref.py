@@ -68,6 +68,30 @@ def radix_hist_ref(keys: jax.Array, shift: int, digit_bits: int,
 
 # --- radix_partition --------------------------------------------------------
 
+def partition_plan_ref(buckets: jax.Array, num_buckets: int):
+    """Stable-argsort oracle of `make_partition_plan`: the same
+    (positions, totals, starts) plan object, built from one comparison sort
+    instead of the histogram/rank kernels.
+
+    The positions of a stable bucket partition are exactly each element's
+    rank in the stable sort by bucket id, so the two builders are
+    bit-identical -- `aggregation.route_tiles` selects between them with its
+    `impl` knob and runs ONE shared tile-build on either plan.
+    """
+    from repro.kernels.radix_partition import PartitionPlan
+
+    n = buckets.shape[0]
+    b = buckets.astype(jnp.int32)
+    order = jnp.argsort(b, stable=True)
+    positions = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    totals = jnp.bincount(b, length=num_buckets).astype(jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(totals)[:-1].astype(jnp.int32)])
+    return PartitionPlan(positions=positions, totals=totals, starts=starts)
+
+
 def bucket_hist_ref(buckets: jax.Array, num_buckets: int,
                     tile: int) -> jax.Array:
     """Per-tile bucket histograms: (n,) int32 ids -> (n//tile, B) int32."""

@@ -29,6 +29,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import compat, encoding, fabsp
@@ -48,23 +49,50 @@ def _flat_mesh(mesh, axis_names):
 def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
              chunk_reads: int, slack: float = 1.5,
              receiver: str = "stream", transport: str = "kmer",
-             minimizer_len: int = 15) -> dict:
-    axis_names = ("pe",)
+             minimizer_len: int = 15, topology: str = "1d",
+             hop2: str = "padded",
+             hop2_occupancy: float = None) -> dict:
     num_pes = mesh.size
-    # flatten the mesh to one PE axis (owner space = all chips)
-    flat_mesh = _flat_mesh(mesh, axis_names)
+    if topology == "2d":
+        # near-square (row, col) factorization of the chip count: largest
+        # divisor <= sqrt(P), so any device count reshapes cleanly
+        rows = max(r for r in range(1, int(num_pes ** 0.5) + 1)
+                   if num_pes % r == 0)
+        axis_names, grid = ("row", "col"), (rows, num_pes // rows)
+        flat_mesh = jax.sharding.Mesh(
+            np.asarray(mesh.devices).reshape(grid), axis_names)
+        spec = P(axis_names)
+    else:
+        axis_names, grid = ("pe",), None
+        # flatten the mesh to one PE axis (owner space = all chips)
+        flat_mesh = _flat_mesh(mesh, axis_names)
+        spec = P(axis_names[0])
     cfg = DAKCConfig(k=k, chunk_reads=chunk_reads, slack=slack,
                      receiver_impl=receiver, transport_impl=transport,
-                     minimizer_len=minimizer_len)
+                     minimizer_len=minimizer_len, topology=topology,
+                     hop2_impl=hop2)
     mode, cap_n, cap_h = _plan_caps(cfg, num_pes, (n_reads, read_len), slack)
     store_cap = fabsp._default_store_capacity(cfg, (n_reads, read_len),
                                               num_pes)
+    # Compact hop-2 capacities: the dry-run has shapes, not reads, so the
+    # measured-occupancy sample is unavailable -- either assume an
+    # occupancy fraction (--hop2-occupancy) or let the shape-only bound
+    # degenerate compact to the padded tile.
+    hop2_caps = None
+    if hop2 == "compact" and topology == "2d":
+        if hop2_occupancy is not None:
+            def p2(c):
+                return min(c, fabsp._pow2ceil(max(8, int(c * hop2_occupancy))))
+            hop2_caps = (p2(cap_n), p2(cap_h) if cap_h else 0)
+        else:
+            hop2_caps = fabsp._resolve_hop2_caps(
+                None, cfg, num_pes, (n_reads, read_len), slack)
 
-    spec = P(axis_names[0])
     fn = jax.jit(compat.shard_map(
         functools.partial(_local_count, cfg=cfg, num_pes=num_pes,
                           cap_n=cap_n, cap_h=cap_h, store_cap=store_cap,
-                          mode=mode, axis_names=axis_names, grid=None),
+                          mode=mode, axis_names=axis_names, grid=grid,
+                          hop2_caps=hop2_caps),
         mesh=flat_mesh, in_specs=(spec,),
         out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
                    (P(),) * fabsp.STATS_FIELDS)))
@@ -79,7 +107,9 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
         "workload": "dakc-kc", "k": k, "n_reads": n_reads,
         "read_len": read_len, "chunk_reads": chunk_reads,
         "l3_mode": mode, "receiver_impl": receiver,
-        "transport_impl": transport,
+        "transport_impl": transport, "topology": topology,
+        "hop2_impl": hop2 if topology == "2d" else "n/a",
+        "hop2_caps": list(hop2_caps) if hop2_caps else None,
         "store_capacity_per_pe": store_cap if receiver == "stream" else 0,
         "mesh": dict(mesh.shape),
         "compile_seconds": round(time.time() - t0, 2),
@@ -170,6 +200,19 @@ def main() -> None:
     ap.add_argument("--minimizer-len", type=int, default=15,
                     help="minimizer length m for --transport superkmer "
                          "(window w = k - m + 1)")
+    ap.add_argument("--topology", choices=["1d", "2d"], default="1d",
+                    help="'2d' lowers the hierarchical one-plan route over "
+                         "a near-square (row, col) chip grid")
+    ap.add_argument("--hop2", choices=["padded", "compact"],
+                    default="padded",
+                    help="hop-2 tile of the 2d route: 'compact' ships a "
+                         "measured-occupancy power-of-two tile "
+                         "(DAKCConfig.hop2_impl)")
+    ap.add_argument("--hop2-occupancy", type=float, default=None,
+                    help="assumed valid-slot fraction for sizing the "
+                         "compact hop-2 tile (the dry-run has no reads to "
+                         "sample; without this, compact degenerates to the "
+                         "padded capacity)")
     ap.add_argument("--stream-batches", type=int, default=0,
                     help="also lower the incremental update executable "
                          "for N batches of --reads reads each")
@@ -185,7 +228,9 @@ def main() -> None:
     recs = {r: lower_kc(n_reads, args.read_len, args.k, mesh,
                         chunk_reads=args.chunk_reads, receiver=r,
                         transport=args.transport,
-                        minimizer_len=args.minimizer_len)
+                        minimizer_len=args.minimizer_len,
+                        topology=args.topology, hop2=args.hop2,
+                        hop2_occupancy=args.hop2_occupancy)
             for r in receivers}
     rec = recs[receivers[0]]
     if len(recs) > 1:
@@ -204,6 +249,10 @@ def main() -> None:
     if "receive_memory_ratio_stacked_over_stream" in rec:
         print(f"\nstacked/stream temp memory: "
               f"{rec['receive_memory_ratio_stacked_over_stream']:.2f}x")
+    if rec["topology"] == "2d":
+        print(f"\n2d route: hop2_impl={rec['hop2_impl']} "
+              f"hop2_caps={rec['hop2_caps']} (compact ships the smaller "
+              f"power-of-two tile on hop 2; DAKCConfig.hop2_impl)")
     print(f"\ndominant: {r['dominant']}; bound throughput "
           f"{r['kmers_per_sec_per_chip_bound']:.3e} kmers/s/chip "
           f"({r['kmers_per_sec_per_chip_bound'] * mesh.size:.3e} global)")

@@ -95,6 +95,16 @@ def check_kc_all_paths():
     assert int(ss.wire_bytes) < int(s2.wire_bytes)  # 2d superkmer vs 2d kmer
     print("OK fabsp-superkmer-multidev")
 
+    # occupancy-aware hop 2 on a real (2, 4) grid: identical histogram,
+    # zero drops (so no fallback round fired), strictly fewer wire bytes
+    # than the padded oracle under the L3-compressed (under-occupied) tile
+    cfg2c = dataclasses.replace(cfg2, hop2_impl="compact")
+    res2c, s2c = fabsp.count_kmers(reads, mesh2, cfg2c, ("row", "col"))
+    assert merge(res2c) == oracle
+    assert int(s2c.hop2_dropped) == 0 and int(s2c.overflow) == 0
+    assert int(s2c.wire_bytes) < int(s2.wire_bytes)
+    print("OK fabsp-2d-compact-hop2")
+
     resb, sb = bsp.count_kmers(reads, mesh, bsp.BSPConfig(k=k,
                                                           batch_reads=32))
     assert merge(resb) == oracle

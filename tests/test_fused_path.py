@@ -101,16 +101,19 @@ def test_2d_oneplan_bit_identical_to_perhop(reads, mesh2d):
 
 def test_2d_route_builds_exactly_one_partition_plan(mesh2d, monkeypatch):
     """No per-hop re-plan: tracing the default 2d path invokes the L2
-    bucketing (one partition plan = one histogram kernel launch) exactly
-    once per route; the per-hop oracle pays two."""
+    bucketing (`aggregation.route_tiles`, one partition plan = one
+    histogram kernel launch) exactly once per route; the per-hop oracle
+    pays two."""
+    from repro.core import aggregation
+
     calls = {"n": 0}
-    orig = fabsp.bucket_by_owner
+    orig = aggregation.route_tiles
 
     def counting(*args, **kwargs):
         calls["n"] += 1
         return orig(*args, **kwargs)
 
-    monkeypatch.setattr(fabsp, "bucket_by_owner", counting)
+    monkeypatch.setattr(aggregation, "route_tiles", counting)
     try:
         for r2d, expected in (("oneplan", 1), ("perhop", 2)):
             fabsp.clear_executable_cache()
