@@ -31,6 +31,25 @@ echo "== routing-parity smoke gate =="
 # as a named gate so a routing regression fails loudly on its own line).
 python -m pytest -q tests/test_routing.py -k "parity or wire"
 
+echo "== fault-injection smoke gate =="
+# Every injectable fault class, as a named gate (tests/test_resilience.py;
+# also part of tier-1): recoverable faults (route_drop / store_drop /
+# hop2_misfit) must reproduce the fault-free histogram exactly with the
+# replays recorded in DAKCStats.retry_*; persistent faults must raise the
+# typed give-up errors carrying the round history. The kc_dryrun --inject
+# sweep runs the same invariants on a real 4-device mesh.
+python -m pytest -q tests/test_resilience.py -k "recover or fall or persistent or budget"
+python -m repro.launch.kc_dryrun --inject
+
+echo "== save/kill/restore/reshard gate =="
+# The durability drill (8 PEs -> checkpoint -> injected kill -> restore
+# onto 4 PEs -> elastic reshard -> replay): the resumed stream's final
+# histogram must equal the uninterrupted 8-PE run's, for both ownership
+# families (kmer-hash owners in tier-1, minimizer owners in the slow tier
+# above). AsyncSaver failure propagation rides test_checkpoint.py.
+python -m pytest -q tests/test_resilience.py tests/test_checkpoint.py \
+    -k "reshard or saver or ckpt_write"
+
 echo "== benchmark smoke (superkmer + compact-hop-2 wire gates) =="
 # benchmarks/superkmer_transport.py asserts -- in smoke mode too -- that
 # the smoke-scale super-k-mer stream moves strictly fewer wire bytes than

@@ -14,10 +14,19 @@ Sizing: slots are consumed by DISTINCT k-mers only, so the right capacity
 tracks the workload's distinct-count, not its instance-count. Callers that
 know neither start from a bound (`fabsp` defaults to
 min(total instances, 4**k) / P * store_slack) and rely on the overflow
-round: a full table drops-and-counts, and the caller rehashes into doubled
-capacity (`store_grow`) -- the same slack-doubling discipline as the
-routing tiles. Empty slots are keyed by the all-ones sentinel, the same
-value that pads every routed tile, so receive padding is skipped for free.
+round: a full table drops-and-counts, and the caller rehashes into
+capacity scaled by `RetryPolicy.store_growth` (default: doubled,
+`store_grow`) and replays -- the same growth discipline as the routing
+tiles, and since this PR the same ENGINE: both loops run through
+`resilience.RetryController`, which records every rehash round
+(`DAKCStats.retry_store_rehash`), enforces the capacity ceiling
+(`RetryPolicy.store_cap_ceiling`, default 1<<28 slots/PE), and gives up
+with a typed `CapacityExhausted` carrying the full round history instead
+of an anonymous RuntimeError. Dropping is deliberate and counted
+(`CountStore.dropped`), never silent: a drop either triggers a recorded
+rehash round or surfaces in the raised error. Empty slots are keyed by
+the all-ones sentinel, the same value that pads every routed tile, so
+receive padding is skipped for free.
 
 Slot hashing uses `owner.slot_hash`, a second avalanche family independent
 of `owner_pe`: every k-mer reaching PE p already satisfies

@@ -87,9 +87,28 @@ kernels/radix_partition.py), and canonicalization happens inside extraction
 set-identical) oracle.
 
 Overflow discipline: static capacities everywhere, drops counted and
-returned, `count_kmers` retries -- doubled routing slack when a routing
-tile overflowed, doubled store capacity (a rehash round) when the count
-store filled. Both retry shapes land in the executable cache.
+returned, replays driven by ONE typed retry engine
+(core/resilience.py, `DAKCConfig.retry`). Every retried call --
+`count_kmers` and `KmerCounter.update` alike -- runs a
+`resilience.RetryController` loop: a routing-tile overflow doubles the
+slack (cause 'route-slack'), a full count store doubles its capacity and
+rehashes (cause 'store-rehash'), a compact hop-2 misfit falls back to the
+padded tile (cause 'hop2-padded-fallback'). The policy bounds every cause
+(slack past `max_slack`, store past `store_cap_ceiling`, plus a total
+replay budget) and gives up with typed errors --
+`resilience.CapacityExhausted` / `resilience.RetryBudgetExceeded` --
+carrying the full round history. Replays are never silent: the per-cause
+round counts come back in `DAKCStats.retry_*`. Every retry shape lands in
+the executable cache, and `DAKCConfig.faults` (a seeded
+`resilience.FaultPlan`) can inject deterministic drops at any named site
+to exercise each recovery path on demand; a fault that stops firing
+recovers with exactly the fault-free histogram.
+
+Durability: `KmerCounter.save/restore` checkpoint the sharded store plus
+the sticky retry state through train/checkpoint.py's atomic saver;
+restoring onto a different PE count (or transport family) is an elastic
+reshard -- live (key, count) entries re-route to their new owners through
+one `route_lanes` call and fold back in via the normal insert path.
 
 Incremental API: `KmerCounter` holds the sharded count store across calls
 -- `update(reads)` folds one batch per call (same executables, same
@@ -117,7 +136,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import aggregation, compat, countstore, encoding, minimizer
+from repro.core import (aggregation, compat, countstore, encoding, minimizer,
+                        resilience)
 from repro.core.aggregation import plan_capacity
 from repro.core.owner import owner_pe
 from repro.core.sort import (AccumResult, accumulate, radix_sort,
@@ -183,6 +203,19 @@ class DAKCConfig:
     store_sizing: str = "sample"
     store_slack: float = 1.5
     store_capacity: Optional[int] = None
+    # The one retry engine (core/resilience.py): per-cause caps, growth
+    # factors, total replay budget. Every retried call -- count_kmers and
+    # KmerCounter.update -- flows through this policy; the default
+    # reproduces the historical hand-rolled loops exactly (slack gives up
+    # past 8, the store past 2**28 slots).
+    retry: resilience.RetryPolicy = resilience.RetryPolicy()
+    # Deterministic fault injection: a seeded resilience.FaultPlan naming
+    # one site (route_drop / store_drop / hop2_misfit / update_fail /
+    # ckpt_write). None (default, production) injects nothing. A fault
+    # that stops firing after its `rounds` attempts recovers through the
+    # retry engine with exactly the fault-free histogram; a persistent
+    # fault drives the typed give-up errors.
+    faults: Optional[resilience.FaultPlan] = None
 
     def __post_init__(self):
         for knob, allowed in (
@@ -221,6 +254,18 @@ class DAKCConfig:
         if self.store_slack <= 0:
             raise ValueError(
                 f"store_slack must be positive, got {self.store_slack}")
+        if self.faults is not None:
+            if (self.faults.site == "store_drop"
+                    and self.receiver_impl != "stream"):
+                raise ValueError(
+                    "FaultPlan site 'store_drop' targets the streaming "
+                    "receiver's count store; receiver_impl='stacked' has "
+                    "no store to drop inserts from")
+            if self.faults.site == "hop2_misfit" and not _hop2_engaged(self):
+                raise ValueError(
+                    "FaultPlan site 'hop2_misfit' forces a compact hop-2 "
+                    "misfit: it requires topology='2d', "
+                    "hop2_impl='compact', route2d_impl='oneplan'")
 
 
 class DAKCStats(NamedTuple):
@@ -239,6 +284,14 @@ class DAKCStats(NamedTuple):
                                    # capacity (hop2_impl='compact' only; a
                                    # nonzero value triggers the padded
                                    # fallback round)
+    # Per-cause replayed-round counts for this call (host-side Python
+    # ints, zero-cost in-trace): how many rounds doubled the routing
+    # slack, rehashed the store, or fell back to the padded hop-2 tile
+    # before the returned (clean) round. A caller that sees zeros here
+    # paid exactly one execution.
+    retry_route_slack: int = 0
+    retry_store_rehash: int = 0
+    retry_hop2_fallback: int = 0
 
 
 # Flat per-call stats tuple threaded out of the shard_map body, in order:
@@ -261,6 +314,14 @@ _WIRE_BASE = 1 << _WIRE_SHIFT
 def _wire_add(whi: jax.Array, wlo: jax.Array, wire_bytes: jax.Array):
     lo = wlo + wire_bytes.astype(jnp.int32)
     return whi + (lo >> _WIRE_SHIFT), lo & jnp.int32(_WIRE_BASE - 1)
+
+
+def _stamp_retries(stats: DAKCStats, counts) -> DAKCStats:
+    """Fold a RetryController's per-cause round counts into the stats."""
+    return stats._replace(
+        retry_route_slack=counts[resilience.ROUTE_SLACK],
+        retry_store_rehash=counts[resilience.STORE_REHASH],
+        retry_hop2_fallback=counts[resilience.HOP2_FALLBACK])
 
 
 def _resolve_l3_mode(cfg: DAKCConfig, chunk_kmers: int) -> str:
@@ -305,7 +366,8 @@ def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int,
 
 
 def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
-                 cap_h: int, mode: str, axis_names, grid, hop2_caps=None):
+                 cap_h: int, mode: str, axis_names, grid, hop2_caps=None,
+                 chunk_idx=None, fault=None):
     """One scan step: parse -> L3 / super-k-mer segmentation -> one
     `aggregation.route_lanes` exchange per lane set.
 
@@ -321,10 +383,22 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
     revcomp sweep over the packed words. `hop2_caps` is the optional
     (normal, heavy) compact hop-2 capacity pair (hop2_impl='compact').
 
+    `chunk_idx` is the traced scan counter and `fault` an armed
+    'route_drop' FaultPlan (resilience.active_trace_fault): the seeded
+    drop mask invalidates a deterministic subset of the primary lane's
+    entries BEFORE routing, and the drop count rides the overflow stat so
+    the round replays at doubled slack exactly like a real tile overflow.
+
     Returns (recv, (raw, sent_valid, wire_bytes, overflow, hop2_dropped)).
     """
     k, bps = cfg.k, cfg.bits_per_symbol
     h2n, h2h = (None, None) if hop2_caps is None else hop2_caps
+
+    def inject_drop(pvalid):
+        if fault is None or fault.site != "route_drop":
+            return pvalid, jnp.int32(0)
+        hit = resilience.fault_mask(pvalid.shape[0], fault, chunk_idx)
+        return pvalid & ~hit, jnp.sum(pvalid & hit).astype(jnp.int32)
 
     if mode == "superkmer":
         # Minimizer transport: route packed super-k-mer windows, not
@@ -334,16 +408,18 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
             canonical_impl=cfg.canonical_impl)
         raw = jnp.int32(sk.lengths.shape[0])   # one slot per k-mer instance
         n_lanes = sk.words.shape[1]
+        sk_valid, injected = inject_drop(sk.lengths > 0)
         rr = aggregation.route_lanes(
             tuple(sk.words[:, s] for s in range(n_lanes)) + (sk.lengths,),
             ("word",) * n_lanes + ("i32",),
-            owner_pe(sk.minimizers, num_pes), sk.lengths > 0,
+            owner_pe(sk.minimizers, num_pes), sk_valid,
             num_pes=num_pes, capacity=cap_n, axis_names=axis_names,
             grid=grid, impl=cfg.partition_impl, route2d="oneplan",
             hop2_capacity=h2n)
         rw = jnp.stack(rr.lanes[:-1], axis=1)
         return (rw, rr.lanes[-1], None), (raw, rr.sent_valid, rr.wire_bytes,
-                                          rr.overflow, rr.hop2_dropped)
+                                          rr.overflow + injected,
+                                          rr.hop2_dropped)
 
     words = encoding.extract_kmers(chunk, k, bps, canonical=cfg.canonical,
                                    canonical_impl=cfg.canonical_impl)
@@ -364,24 +440,30 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
     if mode == "packed":
         from repro.core.aggregation import l3_compress
         payload, pvalid = l3_compress(words, k, bps, impl=cfg.phase2_impl)
+        pvalid, injected = inject_drop(pvalid)
         rr = route(payload, None, pvalid, cap_n, h2n)
         return (rr.lanes[0], None, None), (raw, rr.sent_valid, rr.wire_bytes,
-                                           rr.overflow, rr.hop2_dropped)
+                                           rr.overflow + injected,
+                                           rr.hop2_dropped)
 
     if mode == "dual":
         nw, nv, hw, hc, hv = _l3_split_dual(words, valid, k, bps,
                                             impl=cfg.phase2_impl)
+        nv, injected = inject_drop(nv)
         rn = route(nw, None, nv, cap_n, h2n)
         rh = route(hw, hc, hv, cap_h, h2h)
         return (rn.lanes[0], rh.lanes[0], rh.lanes[1]), \
             (raw, rn.sent_valid + rh.sent_valid,
-             rn.wire_bytes + rh.wire_bytes, rn.overflow + rh.overflow,
+             rn.wire_bytes + rh.wire_bytes,
+             rn.overflow + rh.overflow + injected,
              rn.hop2_dropped + rh.hop2_dropped)
 
     # mode == 'none': BSP-style raw words, single lane, no compression.
+    valid, injected = inject_drop(valid)
     rr = route(words, None, valid, cap_n, h2n)
     return (rr.lanes[0], None, None), (raw, rr.sent_valid, rr.wire_bytes,
-                                       rr.overflow, rr.hop2_dropped)
+                                       rr.overflow + injected,
+                                       rr.hop2_dropped)
 
 
 def _recv_pairs(recv, *, cfg: DAKCConfig, mode: str):
@@ -461,22 +543,45 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
 
 def _stream_fold(chunks, store: countstore.CountStore, *, cfg: DAKCConfig,
                  num_pes: int, cap_n: int, cap_h: int, mode: str, axis_names,
-                 grid, hop2_caps=None):
+                 grid, hop2_caps=None, fault=None):
     """Phase-1 scan with the streaming receiver: route each chunk, then fold
     its decompressed receive tiles into the carry-resident count store.
+
+    `fault` is an armed in-trace FaultPlan (or None): 'route_drop' rides
+    into `_phase1_step`; 'store_drop' zeroes a seeded subset of the chunk's
+    decoded insert counts here -- optionally gated on the store holding at
+    least `fault.fill` of its capacity -- and charges them to
+    `store.dropped`, so the round replays as a rehash exactly like a real
+    full table.
 
     Returns (store, (raw, sent_words, wire_hi, wire_lo, route_overflow,
     hop2_dropped)). The scan emits NO per-chunk outputs -- receive memory is
     the store plus one in-flight tile, independent of the chunk count.
     """
 
-    def step(carry, chunk):
+    def step(carry, xs):
+        chunk, cidx = xs
         raw_t, sent_t, whi, wlo, ovf_t, h2_t, st = carry
         recv, (raw, sent_w, wire, ovf, h2) = _phase1_step(
             chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
-            mode=mode, axis_names=axis_names, grid=grid, hop2_caps=hop2_caps)
+            mode=mode, axis_names=axis_names, grid=grid, hop2_caps=hop2_caps,
+            chunk_idx=cidx, fault=fault)
         kmers, cnts = _recv_pairs(recv, cfg=cfg, mode=mode)
-        st = countstore.store_insert(st, kmers, cnts)
+        if fault is not None and fault.site == "store_drop":
+            hit = resilience.fault_mask(kmers.shape[0], fault, cidx)
+            if fault.fill > 0:
+                sent_k = jnp.array(jnp.iinfo(st.keys.dtype).max,
+                                   st.keys.dtype)
+                occupied = jnp.sum(st.keys != sent_k)
+                hit = hit & (occupied.astype(jnp.float32)
+                             >= fault.fill * st.keys.shape[0])
+            drop = hit & (cnts > 0)
+            st = countstore.store_insert(st, kmers,
+                                         jnp.where(drop, 0, cnts))
+            st = st._replace(dropped=st.dropped
+                             + jnp.sum(drop).astype(jnp.int32))
+        else:
+            st = countstore.store_insert(st, kmers, cnts)
         whi, wlo = _wire_add(whi, wlo, wire)
         # explicit int32: x64 mode (k=31 words) promotes reductions to int64
         return (raw_t + raw.astype(jnp.int32),
@@ -485,8 +590,10 @@ def _stream_fold(chunks, store: countstore.CountStore, *, cfg: DAKCConfig,
                 h2_t + h2.astype(jnp.int32), st), None
 
     zero = jnp.int32(0)
+    chunk_ids = jnp.arange(chunks.shape[0], dtype=jnp.int32)
     (raw, sent_w, whi, wlo, ovf, h2, store), _ = jax.lax.scan(
-        step, (zero, zero, zero, zero, zero, zero, store), chunks)
+        step, (zero, zero, zero, zero, zero, zero, store),
+        (chunks, chunk_ids))
     return store, (raw, sent_w, whi, wlo, ovf, h2)
 
 
@@ -501,7 +608,7 @@ def _chunked(reads_local: jax.Array, chunk_reads: int) -> jax.Array:
 
 def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
                  cap_n: int, cap_h: int, store_cap: int, mode: str,
-                 axis_names, grid, hop2_caps=None
+                 axis_names, grid, hop2_caps=None, fault=None
                  ) -> Tuple[AccumResult, tuple]:
     chunks = _chunked(reads_local, cfg.chunk_reads)
     if cfg.receiver_impl == "stream":
@@ -510,17 +617,18 @@ def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
         store, (raw, sent_w, whi, wlo, ovf, h2) = _stream_fold(
             chunks, store, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
             cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid,
-            hop2_caps=hop2_caps)
+            hop2_caps=hop2_caps, fault=fault)
         result = countstore.store_histogram(
             store, total_bits=encoding.kmer_bits(cfg.k, cfg.bits_per_symbol),
             impl=cfg.phase2_impl)
         store_ovf = store.dropped
     else:
-        def step(carry, chunk):
+        def step(carry, xs):
+            chunk, cidx = xs
             recv, (raw, sent_w, wire, ovf, h2) = _phase1_step(
                 chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
                 mode=mode, axis_names=axis_names, grid=grid,
-                hop2_caps=hop2_caps)
+                hop2_caps=hop2_caps, chunk_idx=cidx, fault=fault)
             raw_t, sent_t, whi, wlo, ovf_t, h2_t = carry
             whi, wlo = _wire_add(whi, wlo, wire)
             return (raw_t + raw.astype(jnp.int32),
@@ -530,7 +638,8 @@ def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
 
         zero = jnp.int32(0)
         (raw, sent_w, whi, wlo, ovf, h2), recvs = jax.lax.scan(
-            step, (zero, zero, zero, zero, zero, zero), chunks)
+            step, (zero, zero, zero, zero, zero, zero),
+            (chunks, jnp.arange(chunks.shape[0], dtype=jnp.int32)))
         recv_n, recv_h, recv_hc = recvs
         result = _phase2(recv_n, recv_h, recv_hc, cfg=cfg, mode=mode)
         store_ovf = jnp.int32(0)
@@ -791,12 +900,16 @@ def _data_spec(axis_names):
 def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
                          dtype_name: str, slack: float,
                          store_cap: Optional[int] = None,
-                         hop2_caps: Optional[Tuple[int, int]] = None):
+                         hop2_caps: Optional[Tuple[int, int]] = None,
+                         fault=None):
     num_pes = _mesh_pes(mesh, axis_names)
     if store_cap is None:
         store_cap = _default_store_capacity(cfg, shape, num_pes)
+    # `fault` (the armed in-trace FaultPlan, hashable) is part of the key:
+    # a faulted round and its clean retry are distinct executables, both
+    # cached.
     key = (cfg, mesh, axis_names, shape, dtype_name, slack, store_cap,
-           hop2_caps)
+           hop2_caps, fault)
     fn = _EXEC_CACHE.get(key)
     if fn is not None:
         return fn
@@ -808,7 +921,7 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
         functools.partial(_local_count, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
                           cap_h=cap_h, store_cap=store_cap, mode=mode,
                           axis_names=axis_names, grid=grid,
-                          hop2_caps=hop2_caps),
+                          hop2_caps=hop2_caps, fault=fault),
         mesh=mesh, in_specs=(spec,),
         out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
                    (P(),) * STATS_FIELDS)))
@@ -826,6 +939,24 @@ def _host_stats(cfg: DAKCConfig, raw_stats) -> DAKCStats:
                      store_overflow=store_ovf, hop2_dropped=hop2_dropped)
 
 
+def _retry_hop2_caps(reads, cfg: DAKCConfig, num_pes: int, shape,
+                     ctrl: "resilience.RetryController",
+                     est) -> Optional[Tuple[int, int]]:
+    """Compact hop-2 capacities for the controller's current round (None
+    once the round runs on the padded tile). An armed 'hop2_misfit' fault
+    forces a 1-slot compact tile, which the hop-1 fill histogram cannot
+    fit -- the padded-fallback recovery path, on demand."""
+    if ctrl.hop2_padded:
+        return None
+    caps = _resolve_hop2_caps(reads, cfg, num_pes, shape, ctrl.slack,
+                              est=est)
+    plan = cfg.faults
+    if (caps is not None and plan is not None
+            and plan.site == "hop2_misfit" and plan.fires(ctrl.attempts)):
+        caps = (1, 1 if caps[1] else 0)
+    return caps
+
+
 def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
                 axis_names: Sequence[str] = ("pe",),
                 _slack_override: Optional[float] = None,
@@ -840,53 +971,49 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
     Returns the per-shard AccumResult (each shard owns a disjoint k-mer set;
     the global histogram is the concatenation) and wire statistics.
 
-    Overflow rounds: routing-capacity overflow (possible only under
-    adversarial skew with L3 off) retries with doubled slack; a full count
-    store (stream receiver sized below the distinct-count) retries with
-    doubled store capacity -- a rehash round; a compact hop-2 tile the
-    hop-1 fill histogram did not fit (hop2_impl='compact' under skew or a
-    mis-estimated sample) retries with the PADDED hop-2 tile -- the second
-    capacity of the two-capacity scheme. All retry shapes land in the
-    executable cache (`_counting_executable`).
+    Overflow rounds run through `cfg.retry` (one resilience.RetryController
+    per call): routing-capacity overflow (possible only under adversarial
+    skew with L3 off) replays at doubled slack; a full count store (stream
+    receiver sized below the distinct-count) replays at doubled store
+    capacity -- a rehash round; a compact hop-2 tile the hop-1 fill
+    histogram did not fit (hop2_impl='compact' under skew or a
+    mis-estimated sample) replays on the PADDED hop-2 tile -- the second
+    capacity of the two-capacity scheme. Per-cause replay counts come back
+    in `DAKCStats.retry_*`; a cause that persists past its policy cap
+    raises `resilience.CapacityExhausted` (and the total budget,
+    `resilience.RetryBudgetExceeded`), both carrying the round history.
+    All retry shapes land in the executable cache
+    (`_counting_executable`). The underscore parameters seed the
+    controller's initial state (tests and the dry-run drive specific
+    rounds through them).
     """
     axis_names = tuple(axis_names)
-    slack = _slack_override if _slack_override is not None else cfg.slack
     num_pes = _mesh_pes(mesh, axis_names)
+    shape = tuple(reads.shape)
+    slack = _slack_override if _slack_override is not None else cfg.slack
     store_cap = (_store_cap_override if _store_cap_override is not None
                  else _resolve_store_capacity(reads, cfg, num_pes))
-    hop2_caps = None
-    if not _hop2_padded and _hop2_engaged(cfg):
-        if _hop2_est is None:      # sample once; retries re-plan from it
-            mode = _plan_caps(cfg, num_pes, tuple(reads.shape), slack)[0]
-            _hop2_est = _chunk_valid_estimate(reads, cfg, mode,
-                                              tuple(reads.shape))
-        hop2_caps = _resolve_hop2_caps(reads, cfg, num_pes,
-                                       tuple(reads.shape), slack,
-                                       est=_hop2_est)
-    fn = _counting_executable(cfg, mesh, axis_names, tuple(reads.shape),
-                              str(reads.dtype), slack, store_cap=store_cap,
-                              hop2_caps=hop2_caps)
-
-    result, raw_stats = fn(reads)
-    stats = _host_stats(cfg, raw_stats)
-    route_over = int(stats.overflow) > 0
-    store_over = int(stats.store_overflow) > 0
-    hop2_over = int(stats.hop2_dropped) > 0
-    if route_over or store_over or hop2_over:
-        if route_over and slack > 8:
-            raise RuntimeError(
-                f"capacity overflow persists at slack {slack}: "
-                f"{int(stats.overflow)} entries dropped")
-        if store_over and store_cap > (1 << 28):
-            raise RuntimeError(
-                f"count store still overflows at {store_cap} slots: "
-                f"{int(stats.store_overflow)} inserts dropped")
-        return count_kmers(
-            reads, mesh, cfg, axis_names,
-            _slack_override=slack * 2 if route_over else slack,
-            _store_cap_override=store_cap * 2 if store_over else store_cap,
-            _hop2_padded=_hop2_padded or hop2_over, _hop2_est=_hop2_est)
-    return result, stats
+    engaged = _hop2_engaged(cfg) and not _hop2_padded
+    if engaged and _hop2_est is None:   # sample once; retries re-plan on it
+        mode = _plan_caps(cfg, num_pes, shape, slack)[0]
+        _hop2_est = _chunk_valid_estimate(reads, cfg, mode, shape)
+    ctrl = resilience.RetryController(cfg.retry, slack=slack,
+                                      store_cap=store_cap,
+                                      hop2_padded=not engaged)
+    while True:
+        hop2_caps = _retry_hop2_caps(reads, cfg, num_pes, shape, ctrl,
+                                     _hop2_est)
+        fault = resilience.active_trace_fault(cfg.faults, ctrl.attempts)
+        fn = _counting_executable(cfg, mesh, axis_names, shape,
+                                  str(reads.dtype), ctrl.slack,
+                                  store_cap=ctrl.store_cap,
+                                  hop2_caps=hop2_caps, fault=fault)
+        result, raw_stats = fn(reads)
+        stats = _host_stats(cfg, raw_stats)
+        if not ctrl.observe(route_dropped=int(stats.overflow),
+                            store_dropped=int(stats.store_overflow),
+                            hop2_dropped=int(stats.hop2_dropped)):
+            return result, _stamp_retries(stats, ctrl.counts)
 
 
 # ---------------------------------------------------------------------------
@@ -896,9 +1023,10 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
 
 def _update_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
                        dtype_name: str, slack: float, store_cap: int,
-                       hop2_caps: Optional[Tuple[int, int]] = None):
+                       hop2_caps: Optional[Tuple[int, int]] = None,
+                       fault=None):
     key = ("update", cfg, mesh, axis_names, shape, dtype_name, slack,
-           store_cap, hop2_caps)
+           store_cap, hop2_caps, fault)
     fn = _EXEC_CACHE.get(key)
     if fn is not None:
         return fn
@@ -914,7 +1042,7 @@ def _update_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
         store, (raw, sent_w, whi, wlo, ovf, h2) = _stream_fold(
             chunks, store, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
             cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid,
-            hop2_caps=hop2_caps)
+            hop2_caps=hop2_caps, fault=fault)
         ax = tuple(axis_names)
         stats = tuple(jax.lax.psum(x, ax)
                       for x in (ovf, store.dropped, sent_w, whi, wlo, raw,
@@ -974,6 +1102,88 @@ def _grow_executable(cfg: DAKCConfig, mesh: Mesh, axis_names,
     return fn
 
 
+def _ownership_keys(words: jax.Array, cfg: DAKCConfig) -> jax.Array:
+    """The key `owner_pe` hashes for one stored k-mer word.
+
+    'kmer' transport owns by the masked word itself. 'superkmer' transport
+    owns by the k-mer's (canonical) minimizer -- a pure function of the
+    word, recomputed here by unpacking the word back to base codes (base j
+    sits at bit offset bps*(k-1-j), the pack_kmers layout) and running the
+    same windowed-minimum the sender used. A reshard MUST preserve the
+    ownership family: routing restored superkmer-counted entries by k-mer
+    hash would land them away from where future updates send fresh copies,
+    splitting counts across PEs.
+    """
+    k, bps = cfg.k, cfg.bits_per_symbol
+    w = words & encoding.kmer_mask(k, bps)
+    if cfg.transport_impl != "superkmer":
+        return w
+    shifts = (jnp.arange(k - 1, -1, -1).astype(words.dtype)
+              * words.dtype.type(bps))
+    codes = ((w[:, None] >> shifts[None, :])
+             & words.dtype.type((1 << bps) - 1)).astype(jnp.uint8)
+    return minimizer.window_minimizers(
+        codes, k, cfg.minimizer_len, bps, canonical=cfg.canonical,
+        canonical_impl=cfg.canonical_impl)[:, 0]
+
+
+def _reshard_executable(cfg: DAKCConfig, mesh: Mesh, axis_names,
+                        dtype_name: str, n_local: int, route_cap: int,
+                        store_cap: int):
+    """One elastic-reshard round: each PE re-routes its slice of the saved
+    (key, count) entries to the entries' owners under THIS mesh's PE count
+    via one `route_lanes` call, and folds the received lanes into a fresh
+    store through the normal insert path. Returns (keys, counts,
+    psum(route_dropped), psum(store_dropped)) -- both drop counters ride
+    the caller's RetryController exactly like a counting round's."""
+    key = ("reshard", cfg, mesh, axis_names, dtype_name, n_local, route_cap,
+           store_cap)
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    num_pes = _mesh_pes(mesh, axis_names)
+    grid = _topology_grid(cfg, mesh, axis_names)
+    spec = _data_spec(axis_names)
+
+    def local_reshard(keys_local, counts_local):
+        sent = jnp.array(jnp.iinfo(keys_local.dtype).max, keys_local.dtype)
+        valid = (keys_local != sent) & (counts_local > 0)
+        owners = owner_pe(_ownership_keys(keys_local, cfg), num_pes)
+        rr = aggregation.route_lanes(
+            (keys_local, counts_local), ("word", "i32"), owners, valid,
+            num_pes=num_pes, capacity=route_cap, axis_names=axis_names,
+            grid=grid, impl=cfg.partition_impl, route2d="oneplan")
+        st = countstore.store_insert(
+            countstore.empty_store(store_cap, keys_local.dtype),
+            rr.lanes[0], rr.lanes[1])
+        ax = tuple(axis_names)
+        return (st.keys, st.counts, jax.lax.psum(rr.overflow, ax),
+                jax.lax.psum(st.dropped, ax))
+
+    fn = jax.jit(compat.shard_map(
+        local_reshard, mesh=mesh, in_specs=(spec, spec),
+        out_specs=(spec, spec, P(), P())))
+    _EXEC_CACHE[key] = fn
+    return fn
+
+
+# Checkpoint-manifest compatibility: `_fingerprint` fields define what the
+# stored WORDS mean (a mismatch is unrecoverable -> restore refuses);
+# `_ownership_tag` fields define which PE owns a word (a mismatch, like a
+# different PE count, just means the restore path reshards).
+_FINGERPRINT_FIELDS = ("k", "bits_per_symbol", "canonical")
+
+
+def _cfg_fingerprint(cfg: DAKCConfig) -> dict:
+    return {f: getattr(cfg, f) for f in _FINGERPRINT_FIELDS}
+
+
+def _ownership_tag(cfg: DAKCConfig) -> dict:
+    return {"transport_impl": cfg.transport_impl,
+            "minimizer_len": (cfg.minimizer_len
+                              if cfg.transport_impl == "superkmer" else None)}
+
+
 class KmerCounter:
     """Incremental DAKC: fold arbitrary batches into one persistent store.
 
@@ -985,13 +1195,24 @@ class KmerCounter:
     `count_kmers` call. Receive memory is the store -- proportional to the
     DISTINCT k-mer count, never to how many batches streamed through.
 
-    Overflow rounds per update: a full store rehashes into doubled capacity
-    (`store_grow`) and replays the batch (updates are functional -- the
-    committed store is untouched until a batch folds cleanly); routing
-    overflow doubles the slack for this and future batches. Store capacity
-    starts from `cfg.store_capacity`, else from the first batch's two-pass
-    sample estimate (`store_sizing='sample'`, the default) or its
-    instance-count bound ('bound').
+    Overflow rounds per update run through `cfg.retry` (the same
+    resilience.RetryController engine as `count_kmers`): a full store
+    rehashes into doubled capacity (`store_grow`) and replays the batch
+    (updates are functional -- the committed store is untouched until a
+    batch folds cleanly); routing overflow doubles the slack for this and
+    future batches; a compact hop-2 misfit moves this stream onto the
+    padded tile. Per-batch replay counts come back in the returned
+    `DAKCStats.retry_*`; give-ups raise the typed resilience errors with
+    the round history attached. Store capacity starts from
+    `cfg.store_capacity`, else from the first batch's two-pass sample
+    estimate (`store_sizing='sample'`, the default) or its instance-count
+    bound ('bound').
+
+    Durability: `save()` checkpoints the sharded store plus every piece of
+    sticky host state through train/checkpoint.py's atomic saver;
+    `restore()` rebuilds a counter mid-stream. Restoring onto a different
+    PE count (or a different ownership family) is an elastic reshard --
+    see `restore`.
     """
 
     def __init__(self, mesh: Mesh, cfg: DAKCConfig,
@@ -1016,6 +1237,10 @@ class KmerCounter:
         self._raw = 0
         self._sent = 0
         self._wire_bytes = 0
+        # cumulative per-cause replayed-round counts across the stream's
+        # lifetime (finalize() reports them; save() persists them)
+        self._retries = {c: 0 for c in resilience.CAUSES}
+        self._n_updates = 0
 
     @property
     def store_capacity(self) -> Optional[int]:
@@ -1035,11 +1260,9 @@ class KmerCounter:
         self._scounts = jax.device_put(jnp.zeros((n,), jnp.int32),
                                        self._sharding())
 
-    def _grow(self) -> None:
-        if self._store_cap > (1 << 28):
-            raise RuntimeError(
-                f"count store still overflows at {self._store_cap} slots")
-        new_cap = self._store_cap * 2
+    def _grow(self, new_cap: int) -> None:
+        """Rehash the committed store into `new_cap` slots per PE (the
+        rehash round; ceilings live in `cfg.retry`, not here)."""
         fn = _grow_executable(self._cfg, self._mesh, self._axes, new_cap,
                               self._store_cap)
         nk, nc, dropped = fn(self._skeys, self._scounts)
@@ -1050,44 +1273,59 @@ class KmerCounter:
 
     def update(self, reads: jax.Array) -> DAKCStats:
         """Fold one (n_reads, m) batch into the store; returns this batch's
-        wire statistics (post-retry: overflow fields are the final round's,
-        zero unless a round gave up)."""
+        wire statistics (post-retry: overflow fields are the final clean
+        round's zeros, with the replay counts in the retry_* fields)."""
+        plan = self._cfg.faults
+        if (plan is not None and plan.site == "update_fail"
+                and self._n_updates == plan.update_n):
+            # the preemption drill: die host-side before anything commits
+            # (the committed store, totals and counters are untouched --
+            # the caller restores from its last checkpoint and replays)
+            raise resilience.InjectedFault(
+                f"injected failure at update #{self._n_updates} "
+                f"(FaultPlan site='update_fail')")
         if self._skeys is None:
             self._alloc(reads)
+        shape = tuple(reads.shape)
+        engaged = _hop2_engaged(self._cfg) and not self._hop2_padded
         hop2_est = None
-        if not self._hop2_padded and _hop2_engaged(self._cfg):
-            mode = _plan_caps(self._cfg, self._num_pes, tuple(reads.shape),
+        if engaged:
+            mode = _plan_caps(self._cfg, self._num_pes, shape,
                               self._slack)[0]
-            hop2_est = _chunk_valid_estimate(reads, self._cfg, mode,
-                                             tuple(reads.shape))
+            hop2_est = _chunk_valid_estimate(reads, self._cfg, mode, shape)
+        ctrl = resilience.RetryController(
+            self._cfg.retry, slack=self._slack, store_cap=self._store_cap,
+            hop2_padded=not engaged)
         while True:
-            hop2_caps = None if self._hop2_padded else _resolve_hop2_caps(
-                reads, self._cfg, self._num_pes, tuple(reads.shape),
-                self._slack, est=hop2_est)
+            if ctrl.store_cap != self._store_cap:
+                self._grow(ctrl.store_cap)   # rehash round; then replay
+            hop2_caps = _retry_hop2_caps(reads, self._cfg, self._num_pes,
+                                         shape, ctrl, hop2_est)
+            fault = resilience.active_trace_fault(plan, ctrl.attempts)
             fn = _update_executable(self._cfg, self._mesh, self._axes,
-                                    tuple(reads.shape), str(reads.dtype),
-                                    self._slack, self._store_cap,
-                                    hop2_caps=hop2_caps)
+                                    shape, str(reads.dtype), ctrl.slack,
+                                    self._store_cap, hop2_caps=hop2_caps,
+                                    fault=fault)
             nk, nc, raw_stats = fn(reads, self._skeys, self._scounts)
             stats = _host_stats(self._cfg, raw_stats)
-            if int(stats.store_overflow) > 0:
-                self._grow()           # rehash round; replay this batch
-                continue
-            if int(stats.hop2_dropped) > 0:
-                self._hop2_padded = True   # padded fallback round; replay
-                continue
-            if int(stats.overflow) > 0:
-                if self._slack > 8:
-                    raise RuntimeError(
-                        f"capacity overflow persists at slack {self._slack}")
-                self._slack *= 2       # doubled routing slack; replay
-                continue
-            break
+            if not ctrl.observe(route_dropped=int(stats.overflow),
+                                store_dropped=int(stats.store_overflow),
+                                hop2_dropped=int(stats.hop2_dropped)):
+                break
         self._skeys, self._scounts = nk, nc
+        # write the controller's final knobs back into the sticky state
+        # (doubled slack and the padded-hop-2 fallback persist for future
+        # batches; the grown store already committed via _grow)
+        self._slack = ctrl.slack
+        if _hop2_engaged(self._cfg):
+            self._hop2_padded = ctrl.hop2_padded
+        for cause, n in ctrl.counts.items():
+            self._retries[cause] += n
+        self._n_updates += 1
         self._raw += int(stats.raw_kmers)
         self._sent += int(stats.sent_words)
         self._wire_bytes += int(stats.wire_bytes)
-        return stats
+        return _stamp_retries(stats, ctrl.counts)
 
     def finalize(self) -> Tuple[AccumResult, DAKCStats]:
         """Compact the store into the per-shard histogram (callable more
@@ -1098,10 +1336,150 @@ class KmerCounter:
                                   self._store_cap)
         result = fn(self._skeys, self._scounts)
         # int64 throughout: an unbounded stream's cumulative totals outgrow
-        # int32 long before anything else breaks.
+        # int32 long before anything else breaks. retry_* counters are the
+        # stream's LIFETIME totals (per-batch counts ride each update()'s
+        # returned stats).
         stats = DAKCStats(
             overflow=np.int64(0), sent_words=np.int64(self._sent),
             wire_bytes=np.int64(self._wire_bytes),
             raw_kmers=np.int64(self._raw), num_global_syncs=3,
             store_overflow=np.int64(0))
-        return result, stats
+        return result, _stamp_retries(stats, self._retries)
+
+    # --- durability ----------------------------------------------------------
+
+    def save(self, ckpt_dir: Optional[str] = None, step: int = 0, *,
+             saver=None, keep: int = 3):
+        """Checkpoint the live store plus every piece of sticky host state.
+
+        Rides train/checkpoint.py: stage-then-rename, so a crash mid-write
+        (including an injected `FaultPlan(site='ckpt_write')`) leaves prior
+        checkpoints intact and `latest_step` pointing at the last complete
+        one. Pass `saver=AsyncSaver(...)` for the overlapped path (returns
+        None; the saver's `wait()` surfaces write failures), or `ckpt_dir`
+        for a blocking save (returns the checkpoint directory path).
+        """
+        if self._skeys is None:
+            raise RuntimeError("KmerCounter.save before any update")
+        if (ckpt_dir is None) == (saver is None):
+            raise ValueError("pass exactly one of ckpt_dir / saver")
+        from repro.train import checkpoint as ckpt_lib
+        trees = {"store": {"keys": self._skeys, "counts": self._scounts}}
+        extra = {
+            "format": 1,
+            "fingerprint": _cfg_fingerprint(self._cfg),
+            "ownership": _ownership_tag(self._cfg),
+            "num_pes": self._num_pes,
+            "store_cap": self._store_cap,
+            "slack": self._slack,
+            "hop2_padded": self._hop2_padded,
+            "raw": self._raw,
+            "sent": self._sent,
+            "wire_bytes": self._wire_bytes,
+            "n_updates": self._n_updates,
+            "retries": dict(self._retries),
+        }
+        if saver is not None:
+            saver.save(step, trees, extra=extra)
+            return None
+        plan = self._cfg.faults
+        fault = plan if (plan is not None
+                         and plan.site == "ckpt_write") else None
+        return ckpt_lib.save(ckpt_dir, step, trees, extra=extra, keep=keep,
+                             fault=fault)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, mesh: Mesh, cfg: DAKCConfig,
+                axis_names: Sequence[str] = ("pe",),
+                step: Optional[int] = None) -> "KmerCounter":
+        """Rebuild a counter mid-stream from a checkpoint.
+
+        If the new mesh has the same PE count and ownership family
+        (transport_impl + minimizer length) as the saved one, the sharded
+        store is loaded in place. Otherwise this is an elastic reshard:
+        `owner_pe` is a pure function of P, so every live (key, count)
+        entry is re-routed to its new owner in one `route_lanes` exchange
+        and folded through the ordinary insert path into a fresh store --
+        counts merge exactly, order-independent. The cfg must agree with
+        the saved fingerprint on k / bits_per_symbol / canonical (anything
+        else changes what the stored words MEAN).
+        """
+        from repro.train import checkpoint as ckpt_lib
+        if step is None:
+            step = ckpt_lib.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no complete checkpoint under {ckpt_dir}")
+        dt = encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)
+        templates = {"store": {"keys": np.zeros(0, dt),
+                               "counts": np.zeros(0, np.int32)}}
+        trees, extra = ckpt_lib.restore(ckpt_dir, step, templates)
+        saved_fp = extra["fingerprint"]
+        want_fp = _cfg_fingerprint(cfg)
+        if saved_fp != want_fp:
+            raise ValueError(
+                f"checkpoint fingerprint {saved_fp} is incompatible with "
+                f"cfg {want_fp}: the stored words would be reinterpreted")
+        self = cls(mesh, cfg, axis_names)
+        self._raw = int(extra["raw"])
+        self._sent = int(extra["sent"])
+        self._wire_bytes = int(extra["wire_bytes"])
+        self._n_updates = int(extra["n_updates"])
+        saved_retries = extra.get("retries", {})
+        self._retries = {c: int(saved_retries.get(c, 0))
+                         for c in resilience.CAUSES}
+        self._slack = float(extra["slack"])
+        self._hop2_padded = bool(extra["hop2_padded"])
+        keys_np = np.asarray(trees["store"]["keys"], dtype=dt)
+        counts_np = np.asarray(trees["store"]["counts"], dtype=np.int32)
+        if (self._num_pes == int(extra["num_pes"])
+                and extra["ownership"] == _ownership_tag(cfg)):
+            self._store_cap = int(extra["store_cap"])
+            self._skeys = jax.device_put(jnp.asarray(keys_np),
+                                         self._sharding())
+            self._scounts = jax.device_put(jnp.asarray(counts_np),
+                                           self._sharding())
+        else:
+            self._reshard_from(keys_np, counts_np)
+        return self
+
+    def _reshard_from(self, keys: np.ndarray, counts: np.ndarray) -> None:
+        """Re-route saved (key, count) entries onto this mesh's ownership.
+
+        One `route_lanes` exchange moves every live entry to its new owner
+        PE, then `store_insert` folds the routed lanes into a fresh store;
+        overflow on either side retries through `cfg.retry` like any other
+        round (a fresh store per attempt -- no rehash needed, capacity is
+        just re-planned)."""
+        P = self._num_pes
+        sent = int(np.iinfo(keys.dtype).max)
+        live = int(((keys != sent) & (counts > 0)).sum())
+        if self._store_cap is None:
+            self._store_cap = _pow2ceil(plan_capacity(
+                max(live, 1), P, self._cfg.store_slack))
+        n_pad = ((keys.shape[0] + P - 1) // P) * P
+        if n_pad == 0:
+            n_pad = P
+        gk = np.full((n_pad,), sent, keys.dtype)
+        gc = np.zeros((n_pad,), np.int32)
+        gk[:keys.shape[0]] = keys
+        gc[:counts.shape[0]] = counts
+        gk = jax.device_put(jnp.asarray(gk), self._sharding())
+        gc = jax.device_put(jnp.asarray(gc), self._sharding())
+        ctrl = resilience.RetryController(
+            self._cfg.retry, slack=self._slack, store_cap=self._store_cap,
+            hop2_padded=True)
+        while True:
+            self._store_cap = ctrl.store_cap   # fresh store each attempt
+            route_cap = plan_capacity(n_pad // P, P, ctrl.slack)
+            fn = _reshard_executable(self._cfg, self._mesh, self._axes,
+                                     str(keys.dtype), n_pad // P, route_cap,
+                                     self._store_cap)
+            nk, nc, route_drop, store_drop = fn(gk, gc)
+            if not ctrl.observe(route_dropped=int(route_drop),
+                                store_dropped=int(store_drop)):
+                self._skeys, self._scounts = nk, nc
+                break
+        self._slack = ctrl.slack
+        for cause, n in ctrl.counts.items():
+            self._retries[cause] += n

@@ -180,6 +180,78 @@ def lower_kc_incremental(batch_reads: int, read_len: int, k: int, mesh, *,
     }
 
 
+def _merged_hist(res) -> dict:
+    out = {}
+    nsh = res.num_unique.shape[0]
+    L = res.unique.shape[0] // nsh
+    u = np.asarray(res.unique).reshape(nsh, L)
+    c = np.asarray(res.counts).reshape(nsh, L)
+    for s in range(nsh):
+        for i in range(int(res.num_unique[s])):
+            out[int(u[s, i])] = int(c[s, i])
+    return out
+
+
+def run_inject() -> None:
+    """Fault-injection sweep on a small real workload (the CI smoke gate):
+    every recoverable fault class must reproduce the fault-free histogram
+    exactly, with the replays visible in DAKCStats.retry_*; a persistent
+    fault must raise the typed give-up error carrying the round history."""
+    from repro.core import resilience
+    from repro.data import genome
+
+    spec = genome.ReadSetSpec(genome_bases=2048, n_reads=64, read_len=52,
+                              heavy_hitter_frac=0.3, seed=7)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    mesh1d = jax.sharding.Mesh(np.asarray(jax.devices()[:4]), ("pe",))
+    mesh2d = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:4]).reshape(2, 2), ("row", "col"))
+
+    def show(tag, stats):
+        print(f"  {tag:32s} retries: route-slack={stats.retry_route_slack} "
+              f"store-rehash={stats.retry_store_rehash} "
+              f"hop2-fallback={stats.retry_hop2_fallback}")
+
+    scenarios = [
+        ("route_drop", mesh1d, ("pe",), dict(k=11, chunk_reads=4),
+         resilience.FaultPlan(site="route_drop", seed=1, chunk=0, frac=0.3)),
+        ("store_drop", mesh1d, ("pe",),
+         dict(k=11, chunk_reads=4, store_capacity=128),
+         resilience.FaultPlan(site="store_drop", seed=2, chunk=0, frac=0.25)),
+        ("hop2_misfit", mesh2d, ("row", "col"),
+         dict(k=11, chunk_reads=4, topology="2d", hop2_impl="compact",
+              use_l3=False),
+         resilience.FaultPlan(site="hop2_misfit")),
+    ]
+    print("fault-injection sweep (recovered histogram == fault-free):")
+    for site, mesh, axes, base, plan in scenarios:
+        clean, _ = fabsp.count_kmers(reads, mesh, DAKCConfig(**base),
+                                     axis_names=axes)
+        got, stats = fabsp.count_kmers(
+            reads, mesh, DAKCConfig(**base, faults=plan), axis_names=axes)
+        if _merged_hist(got) != _merged_hist(clean):
+            raise SystemExit(f"FAIL: {site} recovery diverged")
+        replays = (stats.retry_route_slack + stats.retry_store_rehash
+                   + stats.retry_hop2_fallback)
+        if replays < 1:
+            raise SystemExit(f"FAIL: {site} fault never fired")
+        show(site, stats)
+
+    # the give-up path: a persistent fault must exhaust the slack ladder
+    cfg = DAKCConfig(
+        k=11, chunk_reads=4,
+        retry=resilience.RetryPolicy(max_slack=2.0),
+        faults=resilience.FaultPlan(site="route_drop", seed=1, chunk=-1,
+                                    frac=0.5, rounds=99))
+    try:
+        fabsp.count_kmers(reads, mesh1d, cfg)
+        raise SystemExit("FAIL: persistent fault did not raise")
+    except resilience.CapacityExhausted as e:
+        print(f"  {'route_drop (persistent)':32s} gave up: cause={e.cause} "
+              f"after {len(e.rounds)} recorded round(s)")
+    print("inject sweep OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     # Synthetic 30 (paper Table V): 357,913,900 reads x 150nt. Default here
@@ -216,8 +288,15 @@ def main() -> None:
     ap.add_argument("--stream-batches", type=int, default=0,
                     help="also lower the incremental update executable "
                          "for N batches of --reads reads each")
+    ap.add_argument("--inject", action="store_true",
+                    help="run the fault-injection sweep (small real "
+                         "workload; CI smoke gate) instead of the lowering "
+                         "dry-run")
     ap.add_argument("--out", default="experiments/dryrun_kc.json")
     args = ap.parse_args()
+    if args.inject:
+        run_inject()
+        return
     n_reads = 357_913_900 if args.full else args.reads
     # pad to a mesh/chunk quantum
     mesh = make_production_mesh(multi_pod=args.multi_pod)

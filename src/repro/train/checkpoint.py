@@ -13,6 +13,21 @@ Fault-tolerance contract (DESIGN.md Sec. 8):
   identity operation + new shardings -- this is what elastic.remesh uses
   after a node failure.
 - GC: keep the most recent `keep` checkpoints.
+
+Durability contract for the k-mer count store (Sec. 8 addendum): the
+sharded `CountStore` is the counting pipeline's only long-lived state, and
+`fabsp.KmerCounter.save/restore` ride exactly this saver -- store keys and
+counts as leaves, the sticky retry knobs (slack, hop-2 fallback, store
+capacity), running totals, and the DAKCConfig fingerprint (k,
+bits_per_symbol, canonical) in the manifest's `extra`. Because `owner_pe`
+is a pure function of the PE count, the count-store reshard is NOT the
+identity reshard described above: restoring onto a different P re-routes
+every live (key, count) entry to its new owner (one `route_lanes`
+exchange) and folds it through the ordinary insert path. Checkpoint
+atomicity is what makes the kill-mid-write fault class
+(`FaultPlan(site='ckpt_write')`, threaded through `save(fault=...)`)
+recoverable: the staged `<step>.tmp` never becomes visible to
+`latest_step`, so restore falls back to the last complete step.
 """
 
 from __future__ import annotations
@@ -40,8 +55,15 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 def save(ckpt_dir: str, step: int, trees: Dict[str, Any],
-         extra: Optional[Dict[str, Any]] = None, keep: int = 3) -> str:
-    """trees: named pytrees, e.g. {'params': ..., 'opt': ...}."""
+         extra: Optional[Dict[str, Any]] = None, keep: int = 3, *,
+         fault=None) -> str:
+    """trees: named pytrees, e.g. {'params': ..., 'opt': ...}.
+
+    `fault`: an armed `resilience.FaultPlan(site='ckpt_write')` kills the
+    write after `fault.fail_after` complete leaves -- a truncated leaf file
+    is left in the staged `.tmp` directory and `InjectedFault` raised
+    BEFORE the atomic rename, exactly the crash window the stage-then-
+    rename protocol is built to survive."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -49,6 +71,7 @@ def save(ckpt_dir: str, step: int, trees: Dict[str, Any],
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     manifest = {"step": step, "trees": {}, "extra": extra or {}}
+    files_written = 0
     for name, tree in trees.items():
         flat = _flatten(tree)
         tdir = os.path.join(tmp, name)
@@ -57,8 +80,16 @@ def save(ckpt_dir: str, step: int, trees: Dict[str, Any],
             k: {"shape": list(v.shape), "dtype": str(v.dtype)}
             for k, v in flat.items()}
         for k, v in flat.items():
-            np.save(os.path.join(tdir, k.replace("/", "_") + ".npy"), v,
-                    allow_pickle=False)
+            path = os.path.join(tdir, k.replace("/", "_") + ".npy")
+            if fault is not None and files_written == fault.fail_after:
+                from repro.core.resilience import InjectedFault
+                with open(path, "wb") as f:   # torn write: half the bytes
+                    f.write(v.tobytes()[:max(1, v.nbytes // 2)])
+                raise InjectedFault(
+                    f"injected checkpoint-write failure after "
+                    f"{files_written} leaves (FaultPlan site='ckpt_write')")
+            np.save(path, v, allow_pickle=False)
+            files_written += 1
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -70,27 +101,44 @@ def save(ckpt_dir: str, step: int, trees: Dict[str, Any],
 
 class AsyncSaver:
     """Snapshot-on-call, write-on-thread. One in-flight save at a time
-    (a newer save waits for the previous write to finish)."""
+    (a newer save waits for the previous write to finish).
+
+    A background write that fails (disk full, permission error, injected
+    fault) does NOT vanish: the exception is captured and re-raised from
+    the next `wait()` or `save()` call, so callers find out before they
+    rely on a checkpoint that was never completed. The stale on-disk state
+    is still the previous COMPLETE checkpoint (the atomic-rename
+    contract); what the re-raise prevents is the caller believing a newer
+    one exists."""
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def save(self, step: int, trees: Dict[str, Any],
              extra: Optional[Dict[str, Any]] = None) -> None:
         host_trees = {n: jax.tree.map(np.asarray, t)   # sync snapshot
                       for n, t in trees.items()}
-        self.wait()
-        self._thread = threading.Thread(
-            target=save, args=(self.ckpt_dir, step, host_trees, extra,
-                               self.keep), daemon=True)
+        self.wait()   # also surfaces the previous write's failure, if any
+
+        def _run():
+            try:
+                save(self.ckpt_dir, step, host_trees, extra, self.keep)
+            except BaseException as e:   # held for the next wait()/save()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

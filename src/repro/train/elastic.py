@@ -13,6 +13,14 @@
   (log, checkpoint-now, or exclude-host on next remesh). On single-
   controller JAX a slow *host* shows up as a slow step, so this watchdog is
   the detection layer for both compute and input stalls.
+
+The counting pipeline rides the same loop with one twist: LM parameters
+reshard as the identity (full logical arrays + new shardings), but the
+sharded k-mer count store is OWNER-PARTITIONED -- `owner_pe` is a function
+of the PE count, so shrinking the mesh moves keys between PEs.
+`fabsp.KmerCounter.restore(ckpt_dir, remesh(...), cfg)` performs that
+elastic reshard itself (one `route_lanes` re-route of the live entries);
+callers just hand it the post-failure mesh from `remesh`.
 """
 
 from __future__ import annotations

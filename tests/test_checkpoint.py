@@ -68,3 +68,46 @@ def test_crash_safety_tmp_dir_ignored(tmp_path):
     ckpt.save(d, 1, {"params": _tree()})
     os.makedirs(os.path.join(d, "step_00000002.tmp"))  # simulated crash
     assert ckpt.latest_step(d) == 1
+
+
+def test_async_saver_propagates_write_failure(tmp_path):
+    """A background write that dies (disk full, permissions) must re-raise
+    from the next wait()/save(), not silently leave a stale latest."""
+    good = str(tmp_path / "good")
+    saver = ckpt.AsyncSaver(good)
+    saver.save(0, {"params": _tree()})
+    saver.wait()
+    assert ckpt.latest_step(good) == 0
+    # retarget the saver at a path whose parent is a FILE: the background
+    # makedirs fails, and the failure surfaces on wait()
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    saver.ckpt_dir = str(blocker / "ckpt")
+    saver.save(1, {"params": _tree(1)})
+    try:
+        saver.wait()
+        raise AssertionError("background write failure was swallowed")
+    except OSError:
+        pass
+    # the error is raised exactly once, then cleared
+    saver.wait()
+    assert ckpt.latest_step(good) == 0  # nothing newer ever landed
+
+
+def test_injected_ckpt_write_fault_keeps_latest_intact(tmp_path):
+    from repro.core.resilience import FaultPlan, InjectedFault
+    d = str(tmp_path)
+    ckpt.save(d, 0, {"params": _tree()})
+    try:
+        ckpt.save(d, 1, {"params": _tree(1)},
+                  fault=FaultPlan(site="ckpt_write", fail_after=1))
+        raise AssertionError("injected fault did not fire")
+    except InjectedFault:
+        pass
+    # the torn write stayed in .tmp; step 0 is still the latest complete
+    assert ckpt.latest_step(d) == 0
+    assert os.path.isdir(os.path.join(d, "step_00000001.tmp"))
+    restored, _ = ckpt.restore(d, 0, {"params": _tree()})
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["embed"]["tok"]),
+        np.asarray(_tree()["embed"]["tok"]))

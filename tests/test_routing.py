@@ -344,10 +344,10 @@ cfg = fabsp.DAKCConfig(k=13, chunk_reads=64, topology="2d",
 rounds = []
 orig = fabsp._counting_executable
 def spy(cfg_, mesh_, axes_, shape_, dtype_, slack_, store_cap=None,
-        hop2_caps=None):
+        hop2_caps=None, **kw):
     rounds.append((slack_, hop2_caps))
     return orig(cfg_, mesh_, axes_, shape_, dtype_, slack_,
-                store_cap=store_cap, hop2_caps=hop2_caps)
+                store_cap=store_cap, hop2_caps=hop2_caps, **kw)
 fabsp._counting_executable = spy
 traces = [0]
 orig_local = fabsp._local_count
