@@ -55,6 +55,30 @@ def report(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 
+def backend_info() -> dict:
+    """The accelerator identity of this run -- stamped into every
+    BENCH_*.json so trajectories across machines/backends are comparable
+    (a CPU-emulation number and a TPU number must never diff silently)."""
+    import jax
+
+    devs = jax.devices()
+    return {"jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": devs[0].device_kind,
+            "device_count": len(devs)}
+
+
+def write_record(path: str, record: dict) -> None:
+    """Write one BENCH_*.json, stamping `record['env']` with
+    `backend_info()` (callers that measured in a subprocess with a forced
+    device count can pre-set 'env' themselves)."""
+    import json
+
+    record.setdefault("env", backend_info())
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+
 def run_subprocess_devices(code: str, num_devices: int,
                            timeout: int = 600) -> str:
     """Run `code` in a fresh python with N forced host devices; returns

@@ -29,14 +29,13 @@ two impls compare at equal semantics) is what the record tracks.
 
 from __future__ import annotations
 
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from benchmarks.common import SCALE, SMOKE, best_of, report, timed
+from benchmarks.common import SCALE, SMOKE, best_of, report, timed, \
+    write_record
 from repro.core import encoding, fabsp
 from repro.core.aggregation import bucket_by_owner, l3_compress, plan_capacity
 from repro.core.owner import owner_pe
@@ -170,5 +169,4 @@ def run() -> None:
     print(f"# phase_breakdown.partition radix_vs_argsort={speedup:.2f}x",
           flush=True)
     if not SMOKE:
-        with open("BENCH_phase_breakdown.json", "w") as f:
-            json.dump(record, f, indent=1)
+        write_record("BENCH_phase_breakdown.json", record)

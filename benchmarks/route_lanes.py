@@ -24,7 +24,8 @@ from __future__ import annotations
 
 import json
 
-from benchmarks.common import SCALE, SMOKE, report, run_subprocess_devices
+from benchmarks.common import SCALE, SMOKE, report, \
+    run_subprocess_devices, write_record
 
 GATE_REDUCTION = 1.5   # ISSUE 5 acceptance: >= 1.5x at smoke-scale low occ.
 
@@ -105,5 +106,4 @@ def run() -> None:
         rec["workload"] = {"n_reads": n_reads, "read_len": 100,
                            "chunk_reads": 32, "k": 9, "l3_mode": "packed",
                            "mesh": [2, 4]}
-        with open("BENCH_route_lanes.json", "w") as f:
-            json.dump(rec, f, indent=1)
+        write_record("BENCH_route_lanes.json", rec)

@@ -25,7 +25,6 @@ the two receivers' steady states compare at equal semantics.
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
 
 import jax
@@ -33,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from benchmarks.common import SCALE, SMOKE, best_of, report
+from benchmarks.common import SCALE, SMOKE, best_of, report, write_record
 from repro.core import encoding, fabsp
 from repro.data import genome
 
@@ -144,5 +143,4 @@ def run() -> None:
            f"store_cap={counter.store_capacity}")
 
     if not SMOKE:
-        with open("BENCH_stream_receiver.json", "w") as f:
-            json.dump(record, f, indent=1)
+        write_record("BENCH_stream_receiver.json", record)

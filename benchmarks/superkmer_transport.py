@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from benchmarks.common import SCALE, SMOKE, best_of, report
+from benchmarks.common import SCALE, SMOKE, best_of, report, write_record
 from repro.core import fabsp, minimizer
 from repro.data import genome
 
@@ -163,5 +163,4 @@ def run() -> None:
                    f"wire_bytes={k21[t]['wire_bytes']}")
         print(f"# superkmer_transport.k21 wire_reduction="
               f"{k21['wire_reduction']:.2f}x", flush=True)
-        with open("BENCH_superkmer_transport.json", "w") as f:
-            json.dump(record, f, indent=1)
+        write_record("BENCH_superkmer_transport.json", record)

@@ -50,6 +50,18 @@ echo "== save/kill/restore/reshard gate =="
 python -m pytest -q tests/test_resilience.py tests/test_checkpoint.py \
     -k "reshard or saver or ckpt_write"
 
+echo "== memory-pressure spill gate =="
+# Tier-3 graceful degradation (core/spill.py): clamp the store's rehash
+# ceiling below the dataset's distinct-k-mer count, assert >= 1 bin
+# spilled and the out-of-core histogram equals the unconstrained run
+# (tests/test_spill.py pressure grid: both transports, both topologies;
+# kc_dryrun --spill runs the same invariant on a real 4-device mesh),
+# then the kill-mid-spill drill: torn segment write on 8 PEs -> restore
+# the manifest from checkpoint onto 4 PEs -> resume draining.
+python -m pytest -q tests/test_spill.py -k "pressure or kill or corrupt"
+python -m repro.launch.kc_dryrun --spill
+python -m pytest -q -m slow tests/test_spill.py -k "drill_8_to_4"
+
 echo "== benchmark smoke (superkmer + compact-hop-2 wire gates) =="
 # benchmarks/superkmer_transport.py asserts -- in smoke mode too -- that
 # the smoke-scale super-k-mer stream moves strictly fewer wire bytes than

@@ -22,7 +22,13 @@ tiles, and since this PR the same ENGINE: both loops run through
 (`DAKCStats.retry_store_rehash`), enforces the capacity ceiling
 (`RetryPolicy.store_cap_ceiling`, default 1<<28 slots/PE), and gives up
 with a typed `CapacityExhausted` carrying the full round history instead
-of an anonymous RuntimeError. Dropping is deliberate and counted
+of an anonymous RuntimeError. Since the spill tier (core/spill.py) that
+give-up is itself recoverable: with `DAKCConfig.spill='auto'` the
+`CapacityExhausted(store-rehash)` is intercepted, the table's live
+entries are exported to disk bins, and counting continues out-of-core --
+the table shrinks to a vestigial few slots and each bin is later folded
+back through this same store at a capacity it can afford. Dropping is
+deliberate and counted
 (`CountStore.dropped`), never silent: a drop either triggers a recorded
 rehash round or surfaces in the raised error. Empty slots are keyed by
 the all-ones sentinel, the same value that pads every routed tile, so

@@ -88,21 +88,38 @@ set-identical) oracle.
 
 Overflow discipline: static capacities everywhere, drops counted and
 returned, replays driven by ONE typed retry engine
-(core/resilience.py, `DAKCConfig.retry`). Every retried call --
-`count_kmers` and `KmerCounter.update` alike -- runs a
-`resilience.RetryController` loop: a routing-tile overflow doubles the
-slack (cause 'route-slack'), a full count store doubles its capacity and
-rehashes (cause 'store-rehash'), a compact hop-2 misfit falls back to the
-padded tile (cause 'hop2-padded-fallback'). The policy bounds every cause
-(slack past `max_slack`, store past `store_cap_ceiling`, plus a total
-replay budget) and gives up with typed errors --
-`resilience.CapacityExhausted` / `resilience.RetryBudgetExceeded` --
-carrying the full round history. Replays are never silent: the per-cause
-round counts come back in `DAKCStats.retry_*`. Every retry shape lands in
-the executable cache, and `DAKCConfig.faults` (a seeded
-`resilience.FaultPlan`) can inject deterministic drops at any named site
-to exercise each recovery path on demand; a fault that stops firing
-recovers with exactly the fault-free histogram.
+(core/resilience.py, `DAKCConfig.retry`), escalating through THREE tiers:
+
+1. **Slack retry.** A routing-tile overflow doubles the slack (cause
+   'route-slack') and replays the round; a compact hop-2 misfit falls
+   back to the padded tile (cause 'hop2-padded-fallback'). Cheap, fully
+   in-core, bounded by `max_slack`.
+2. **Rehash.** A full count store doubles its capacity and rehashes the
+   committed entries (cause 'store-rehash'), bounded by
+   `store_cap_ceiling` -- the HBM budget.
+3. **Spill.** Past the ceiling the in-core discipline is out of moves:
+   with `DAKCConfig.spill='auto'` the `CapacityExhausted(store-rehash)`
+   give-up is intercepted instead of raised -- the committed store
+   exports to disk-backed bins (core/spill.py, the KMC 3-style
+   external-memory tier), the batch replays through the bin-routed spill
+   path, and `finalize()` drains the bins back through the fold engine
+   one bin at a time at a store capacity each bin can afford.
+   `spill='always'` runs pure out-of-core from the first batch;
+   `spill='off'` (default) keeps tier 3 disabled and the typed give-up.
+
+The policy bounds tiers 1-2 (slack past `max_slack`, store past
+`store_cap_ceiling`, plus a total replay budget) and -- with the spill
+tier off or unable to engage -- gives up with typed errors
+(`resilience.CapacityExhausted` / `resilience.RetryBudgetExceeded`)
+carrying the bounded round history. Replays are never silent: the
+per-cause round counts come back in `DAKCStats.retry_*`, and the spill
+tier reports `DAKCStats.spilled_bins/spilled_bytes/bins_folded`. Every
+retry shape lands in the executable cache, and `DAKCConfig.faults` (a
+seeded `resilience.FaultPlan`) can inject deterministic drops at any
+named site -- including mid-bin-write deaths ('spill_write') and sealed
+bin corruption ('bin_corrupt') -- to exercise each recovery path on
+demand; a fault that stops firing recovers with exactly the fault-free
+histogram.
 
 Durability: `KmerCounter.save/restore` checkpoint the sharded store plus
 the sticky retry state through train/checkpoint.py's atomic saver;
@@ -137,7 +154,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import (aggregation, compat, countstore, encoding, minimizer,
-                        resilience)
+                        resilience, spill)
 from repro.core.aggregation import plan_capacity
 from repro.core.owner import owner_pe
 from repro.core.sort import (AccumResult, accumulate, radix_sort,
@@ -211,11 +228,34 @@ class DAKCConfig:
     retry: resilience.RetryPolicy = resilience.RetryPolicy()
     # Deterministic fault injection: a seeded resilience.FaultPlan naming
     # one site (route_drop / store_drop / hop2_misfit / update_fail /
-    # ckpt_write). None (default, production) injects nothing. A fault
-    # that stops firing after its `rounds` attempts recovers through the
-    # retry engine with exactly the fault-free histogram; a persistent
-    # fault drives the typed give-up errors.
+    # ckpt_write / spill_write / bin_corrupt). None (default, production)
+    # injects nothing. A fault that stops firing after its `rounds`
+    # attempts recovers through the retry engine with exactly the
+    # fault-free histogram; a persistent fault drives the typed give-up
+    # errors.
     faults: Optional[resilience.FaultPlan] = None
+    # Disk-backed spill tier (core/spill.py -- KMC 3-style two-phase
+    # external-memory counting; see "Overflow discipline" above).
+    # 'off' (default): a store past its ceiling raises CapacityExhausted.
+    # 'auto': on CapacityExhausted(store-rehash) the counter exports the
+    # store to disk bins and re-runs the batch through the bin-routed
+    # spill path -- graceful degradation under memory pressure.
+    # 'always': every batch spills (pure out-of-core; the resident store
+    # never holds counts). Requires receiver_impl='stream' and spill_dir.
+    spill: str = "off"
+    # How many disk bins k-mer space partitions into (bin = third
+    # avalanche hash family of the ownership key, spill.bin_of); the
+    # drain pass counts one bin at a time, so more bins = smaller per-bin
+    # stores.
+    spill_bins: int = 16
+    # Directory the tier OWNS: segment files + manifest.json live here
+    # (a fresh run wipes leftovers; restore prunes uncommitted files).
+    spill_dir: Optional[str] = None
+    # Host-side buffering: bytes accumulated per bin buffer before a
+    # segment flushes to disk, and the bound on in-flight async
+    # device->host copy bytes (the backpressure of the double buffer).
+    spill_flush_bytes: int = 1 << 22
+    spill_host_budget_bytes: int = 1 << 27
 
     def __post_init__(self):
         for knob, allowed in (
@@ -254,7 +294,26 @@ class DAKCConfig:
         if self.store_slack <= 0:
             raise ValueError(
                 f"store_slack must be positive, got {self.store_slack}")
+        if self.spill not in ("off", "auto", "always"):
+            raise ValueError(
+                f"spill must be one of ('off', 'auto', 'always'), "
+                f"got {self.spill!r}")
+        if self.spill_bins < 1:
+            raise ValueError(f"spill_bins must be >= 1, got {self.spill_bins}")
+        if self.spill != "off":
+            if self.spill_dir is None:
+                raise ValueError("spill != 'off' requires spill_dir")
+            if self.receiver_impl != "stream":
+                raise ValueError(
+                    "the spill tier rides the streaming receiver "
+                    "(receiver_impl='stream'): the stacked oracle has no "
+                    "per-chunk receive tile to bin")
         if self.faults is not None:
+            if (self.faults.site in ("spill_write", "bin_corrupt")
+                    and self.spill == "off"):
+                raise ValueError(
+                    f"FaultPlan site {self.faults.site!r} targets the spill "
+                    f"tier; it requires spill='auto' or 'always'")
             if (self.faults.site == "store_drop"
                     and self.receiver_impl != "stream"):
                 raise ValueError(
@@ -292,6 +351,14 @@ class DAKCStats(NamedTuple):
     retry_route_slack: int = 0
     retry_store_rehash: int = 0
     retry_hop2_fallback: int = 0
+    # Spill-tier observability (core/spill.py; nonzero only once
+    # DAKCConfig.spill engages). Lifetime totals of the tier at the time
+    # of the call: distinct bins holding committed data, committed
+    # segment bytes on disk, and bins folded back through the drain pass
+    # (finalize() / the spilled count_kmers path).
+    spilled_bins: int = 0
+    spilled_bytes: int = 0
+    bins_folded: int = 0
 
 
 # Flat per-call stats tuple threaded out of the shard_map body, in order:
@@ -988,6 +1055,21 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
     rounds through them).
     """
     axis_names = tuple(axis_names)
+    if cfg.spill != "off":
+        # Out-of-core path: delegate to the incremental counter (one
+        # update + drain), so the spill implementation lives in exactly
+        # one place for both APIs, on every transport and topology. The
+        # underscore seed parameters do not apply to the spilled path.
+        kc = KmerCounter(mesh, cfg, axis_names)
+        ustats = kc.update(reads)
+        result, fstats = kc.finalize()
+        return result, ustats._replace(
+            retry_route_slack=fstats.retry_route_slack,
+            retry_store_rehash=fstats.retry_store_rehash,
+            retry_hop2_fallback=fstats.retry_hop2_fallback,
+            spilled_bins=fstats.spilled_bins,
+            spilled_bytes=fstats.spilled_bytes,
+            bins_folded=fstats.bins_folded)
     num_pes = _mesh_pes(mesh, axis_names)
     shape = tuple(reads.shape)
     slack = _slack_override if _slack_override is not None else cfg.slack
@@ -1167,6 +1249,62 @@ def _reshard_executable(cfg: DAKCConfig, mesh: Mesh, axis_names,
     return fn
 
 
+def _spill_route_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
+                            dtype_name: str, slack: float, fault=None):
+    """One spill-tier chunk step: route chunk `cidx`'s lanes to owner PEs
+    (the unchanged `_phase1_step` exchange -- zero extra wire bytes), then
+    derive each received record's BIN in-trace: the recovered run minimizer
+    for the superkmer transport (`minimizer.superkmer_minimizers`), the
+    masked k-mer word otherwise, through the third hash family
+    (`spill.bin_of`). Returns ((payload..., bins), psum'd stats); the host
+    loop streams the lanes to `spill.SpillWriter` through the async
+    double buffer. Hop 2 always runs padded here (the compact scheme's
+    fallback round would interleave badly with the per-chunk host loop).
+    """
+    key = ("spill", cfg, mesh, axis_names, shape, dtype_name, slack, fault)
+    fn = _EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    num_pes = _mesh_pes(mesh, axis_names)
+    grid = _topology_grid(cfg, mesh, axis_names)
+    mode, cap_n, cap_h = _plan_caps(cfg, num_pes, shape, slack)
+    spec = _data_spec(axis_names)
+    mask = encoding.kmer_mask(cfg.k, cfg.bits_per_symbol)
+
+    def local_spill(reads_local, cidx):
+        chunks = _chunked(reads_local, cfg.chunk_reads)
+        chunk = jax.lax.dynamic_index_in_dim(chunks, cidx, axis=0,
+                                             keepdims=False)
+        recv, (raw, sent_w, wire, ovf, h2) = _phase1_step(
+            chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
+            mode=mode, axis_names=axis_names, grid=grid, hop2_caps=None,
+            chunk_idx=cidx, fault=fault)
+        if mode == "superkmer":
+            words, lengths, _ = recv
+            minz = minimizer.superkmer_minimizers(
+                words, cfg.k, cfg.minimizer_len, cfg.bits_per_symbol,
+                canonical=cfg.canonical, canonical_impl=cfg.canonical_impl)
+            lanes = (words, lengths.astype(jnp.int32),
+                     spill.bin_of(minz, cfg.spill_bins))
+        else:
+            kmers, cnts = _recv_pairs(recv, cfg=cfg, mode=mode)
+            lanes = (kmers, cnts.astype(jnp.int32),
+                     spill.bin_of(kmers & mask, cfg.spill_bins))
+        whi, wlo = _wire_add(jnp.int32(0), jnp.int32(0), wire)
+        ax = tuple(axis_names)
+        stats = tuple(jax.lax.psum(x, ax)
+                      for x in (ovf.astype(jnp.int32), jnp.int32(0),
+                                sent_w.astype(jnp.int32), whi, wlo,
+                                raw.astype(jnp.int32), h2.astype(jnp.int32)))
+        return lanes, stats
+
+    fn = jax.jit(compat.shard_map(
+        local_spill, mesh=mesh, in_specs=(spec, P()),
+        out_specs=((spec, spec, spec), (P(),) * STATS_FIELDS)))
+    _EXEC_CACHE[key] = fn
+    return fn
+
+
 # Checkpoint-manifest compatibility: `_fingerprint` fields define what the
 # stored WORDS mean (a mismatch is unrecoverable -> restore refuses);
 # `_ownership_tag` fields define which PE owns a word (a mismatch, like a
@@ -1241,6 +1379,14 @@ class KmerCounter:
         # lifetime (finalize() reports them; save() persists them)
         self._retries = {c: 0 for c in resilience.CAUSES}
         self._n_updates = 0
+        # bounded lifetime round history (resilience first-plus-ring
+        # discipline): seeds every controller this counter builds, rides
+        # save/restore, so a post-restore give-up carries rounds spanning
+        # the restore boundary
+        self._rounds: list = []
+        # the spill tier (core/spill.py), None until it engages
+        self._spill: Optional[spill.SpillWriter] = None
+        self._bins_folded = 0
 
     @property
     def store_capacity(self) -> Optional[int]:
@@ -1253,6 +1399,9 @@ class KmerCounter:
         if self._store_cap is None:
             self._store_cap = _resolve_store_capacity(reads, self._cfg,
                                                       self._num_pes)
+        self._alloc_store()
+
+    def _alloc_store(self) -> None:
         sent = jnp.iinfo(self._dtype).max
         n = self._num_pes * self._store_cap
         self._skeys = jax.device_put(jnp.full((n,), sent, self._dtype),
@@ -1274,7 +1423,14 @@ class KmerCounter:
     def update(self, reads: jax.Array) -> DAKCStats:
         """Fold one (n_reads, m) batch into the store; returns this batch's
         wire statistics (post-retry: overflow fields are the final clean
-        round's zeros, with the replay counts in the retry_* fields)."""
+        round's zeros, with the replay counts in the retry_* fields).
+
+        With `cfg.spill` enabled the batch may instead ride the disk
+        tier: 'always' spills from the first batch; 'auto' runs in-core
+        until the rehash ladder hits `store_cap_ceiling`, then exports
+        the committed store to bins and replays THIS batch through the
+        spill path (exactly-once: the committed store is untouched until
+        a batch folds cleanly, so nothing double-counts)."""
         plan = self._cfg.faults
         if (plan is not None and plan.site == "update_fail"
                 and self._n_updates == plan.update_n):
@@ -1284,8 +1440,31 @@ class KmerCounter:
             raise resilience.InjectedFault(
                 f"injected failure at update #{self._n_updates} "
                 f"(FaultPlan site='update_fail')")
+        if self._spill is None and self._cfg.spill == "always":
+            self._engage_spill()
+        if self._spill is not None:
+            return self._spill_update(reads)
+        try:
+            return self._incore_update(reads)
+        except resilience.CapacityExhausted as e:
+            if (self._cfg.spill != "auto"
+                    or e.cause != resilience.STORE_REHASH):
+                raise
+            # tier 3 (graceful degradation): the rehash ladder ran out of
+            # HBM -- export the committed store to disk bins and replay
+            # this batch out-of-core. The ladder's rounds seed the spill
+            # controllers' history, so later give-ups still show WHY the
+            # tier engaged.
+            self._rounds = list(e.rounds)
+            for cause, n in e.counts.items():
+                self._retries[cause] += n
+            self._engage_spill()
+            return self._spill_update(reads)
+
+    def _incore_update(self, reads: jax.Array) -> DAKCStats:
         if self._skeys is None:
             self._alloc(reads)
+        plan = self._cfg.faults
         shape = tuple(reads.shape)
         engaged = _hop2_engaged(self._cfg) and not self._hop2_padded
         hop2_est = None
@@ -1295,7 +1474,7 @@ class KmerCounter:
             hop2_est = _chunk_valid_estimate(reads, self._cfg, mode, shape)
         ctrl = resilience.RetryController(
             self._cfg.retry, slack=self._slack, store_cap=self._store_cap,
-            hop2_padded=not engaged)
+            hop2_padded=not engaged, history=self._rounds)
         while True:
             if ctrl.store_cap != self._store_cap:
                 self._grow(ctrl.store_cap)   # rehash round; then replay
@@ -1317,6 +1496,7 @@ class KmerCounter:
         # (doubled slack and the padded-hop-2 fallback persist for future
         # batches; the grown store already committed via _grow)
         self._slack = ctrl.slack
+        self._rounds = ctrl.rounds
         if _hop2_engaged(self._cfg):
             self._hop2_padded = ctrl.hop2_padded
         for cause, n in ctrl.counts.items():
@@ -1327,9 +1507,205 @@ class KmerCounter:
         self._wire_bytes += int(stats.wire_bytes)
         return _stamp_retries(stats, ctrl.counts)
 
+    # --- the spill tier (core/spill.py) --------------------------------------
+
+    # Once the tier engages, the resident store only needs to exist for
+    # the API invariants (finalize/save run against it); 8 slots per PE
+    # keeps every executable tiny.
+    _SPILL_STORE_CAP = 8
+
+    def _spill_fault(self) -> Optional[resilience.FaultPlan]:
+        plan = self._cfg.faults
+        if plan is not None and plan.site in ("spill_write", "bin_corrupt"):
+            return plan
+        return None
+
+    def _engage_spill(self) -> None:
+        """Stand up the spill writer; if a committed store exists, export
+        its live (key, count) entries into their bins and shrink it --
+        from here on batches spill and `finalize()` drains bins."""
+        cfg = self._cfg
+        meta = {"transport": cfg.transport_impl, "k": cfg.k,
+                "bits_per_symbol": cfg.bits_per_symbol,
+                "canonical": cfg.canonical,
+                "minimizer_len": cfg.minimizer_len}
+        self._spill = spill.SpillWriter(
+            cfg.spill_dir, cfg.spill_bins, meta=meta,
+            flush_bytes=cfg.spill_flush_bytes, fault=self._spill_fault())
+        if self._skeys is not None:
+            keys = np.asarray(self._skeys)
+            counts = np.asarray(self._scounts)
+            sent = np.iinfo(keys.dtype).max
+            live = (keys != sent) & (counts > 0)
+            if live.any():
+                k_live = keys[live]
+                okeys = _ownership_keys(jnp.asarray(k_live), cfg)
+                bins = np.asarray(spill.bin_of(okeys, cfg.spill_bins))
+                self._spill.add_pairs(bins, k_live, counts[live])
+            self._spill.commit()
+            # release the pressured store: the tier owns the counts now
+            self._store_cap = self._SPILL_STORE_CAP
+            self._alloc_store()
+        else:
+            # spill='always' before any in-core batch: the resident store
+            # never held counts, but the API invariants (finalize/save)
+            # still run against one -- allocate it at the tiny cap
+            self._store_cap = self._SPILL_STORE_CAP
+            self._alloc_store()
+
+    def _absorb_spill(self, host_lanes, mode: str) -> None:
+        """Feed one materialized chunk's host lanes to the writer, dropping
+        tile padding (zero length header / zero count)."""
+        if mode == "superkmer":
+            words, lengths, bins = host_lanes
+            live = lengths > 0
+            self._spill.add_superkmers(bins[live], words[live], lengths[live])
+        else:
+            kmers, cnts, bins = host_lanes
+            live = cnts > 0
+            self._spill.add_pairs(bins[live], kmers[live], cnts[live])
+
+    def _spill_update(self, reads: jax.Array) -> DAKCStats:
+        """Partition-phase update: run each chunk's exchange on device,
+        stream the received lanes host-side through the bounded async
+        double buffer, and append them to bin segments. Nothing enters
+        the manifest until the whole batch routed cleanly (a route
+        overflow aborts the pending segments and replays at doubled
+        slack), so replays never double-spill."""
+        cfg = self._cfg
+        w = self._spill
+        shape = tuple(reads.shape)
+        n_chunks = (shape[0] // self._num_pes) // cfg.chunk_reads
+        mode = _plan_caps(cfg, self._num_pes, shape, self._slack)[0]
+        plan = cfg.faults
+        ctrl = resilience.RetryController(
+            cfg.retry, slack=self._slack,
+            store_cap=self._store_cap or self._SPILL_STORE_CAP,
+            hop2_padded=True, history=self._rounds)
+        while True:
+            w.begin_batch()
+            fault = resilience.active_trace_fault(plan, ctrl.attempts)
+            fn = _spill_route_executable(cfg, self._mesh, self._axes, shape,
+                                         str(reads.dtype), ctrl.slack,
+                                         fault=fault)
+            copier = spill.AsyncHostCopier(cfg.spill_host_budget_bytes)
+            parts = []
+            for c in range(n_chunks):
+                lanes, st = fn(reads, jnp.int32(c))
+                parts.append(st)       # device scalars; int() deferred so
+                for host in copier.submit(lanes):  # D2H overlaps compute
+                    self._absorb_spill(host, mode)
+            for host in copier.drain():
+                self._absorb_spill(host, mode)
+            rs = [sum(int(p[i]) for p in parts)
+                  for i in range(STATS_FIELDS)]
+            if not ctrl.observe(route_dropped=rs[0], hop2_dropped=rs[6]):
+                w.commit()             # seal this batch into the manifest
+                break
+            w.abort_batch()            # pending segments die with the round
+        self._slack = ctrl.slack
+        self._rounds = ctrl.rounds
+        for cause, n in ctrl.counts.items():
+            self._retries[cause] += n
+        wire = (rs[3] << _WIRE_SHIFT) + rs[4]
+        self._n_updates += 1
+        self._raw += rs[5]
+        self._sent += rs[2]
+        self._wire_bytes += wire
+        stats = DAKCStats(
+            overflow=0, sent_words=rs[2], wire_bytes=np.int64(wire),
+            raw_kmers=rs[5], num_global_syncs=3, store_overflow=0,
+            hop2_dropped=rs[6], spilled_bins=w.spilled_bins,
+            spilled_bytes=w.spilled_bytes, bins_folded=self._bins_folded)
+        return _stamp_retries(stats, ctrl.counts)
+
+    def _drain_bins(self) -> Tuple[AccumResult, int]:
+        """Fold phase: count each bin independently -- read + checksum its
+        segments (-> `spill.SpillCorrupt`), decode super-k-mer slots back
+        to k-mers, route the records to their owner PEs through the
+        elastic fold path, and compact. Per-bin per-shard prefixes
+        concatenate (then sort per shard) into the standard AccumResult
+        layout -- bins partition k-mer space, so this IS the exact global
+        histogram. Runs on the CURRENT mesh: a spilled run restored onto
+        a different PE count drains elastically for free."""
+        cfg = self._cfg
+        w = self._spill
+        nsh = self._num_pes
+        sent = int(jnp.iinfo(self._dtype).max)
+        shard_u = [[] for _ in range(nsh)]
+        shard_c = [[] for _ in range(nsh)]
+        folded = 0
+        for b in range(w.n_bins):
+            keys_l, cnts_l = [], []
+            for kind, arrays in w.read_bin(b):
+                if kind == "pairs":
+                    keys_l.append(np.asarray(arrays["keys"],
+                                             dtype=self._dtype))
+                    cnts_l.append(np.asarray(arrays["counts"],
+                                             dtype=np.int32))
+                else:
+                    kk, cc = minimizer.superkmer_to_kmers(
+                        jnp.asarray(arrays["words"]),
+                        jnp.asarray(arrays["lengths"]), cfg.k,
+                        cfg.minimizer_len, cfg.bits_per_symbol,
+                        canonical=cfg.canonical,
+                        canonical_impl=cfg.canonical_impl)
+                    kk, cc = np.asarray(kk), np.asarray(cc)
+                    m = cc > 0
+                    keys_l.append(kk[m])
+                    cnts_l.append(cc[m].astype(np.int32))
+            if not keys_l:
+                continue
+            keys = np.concatenate(keys_l)
+            cnts = np.concatenate(cnts_l)
+            nk, nc, cap = self._fold_pairs(keys, cnts)
+            res = _finalize_executable(cfg, self._mesh, self._axes,
+                                       cap)(nk, nc)
+            u = np.asarray(res.unique).reshape(nsh, cap)
+            c = np.asarray(res.counts).reshape(nsh, cap)
+            nu = np.asarray(res.num_unique)
+            for s in range(nsh):
+                n = int(nu[s])
+                shard_u[s].append(u[s, :n])
+                shard_c[s].append(c[s, :n])
+            folded += 1
+        L = max([sum(x.size for x in shard_u[s]) for s in range(nsh)] + [1])
+        out_u = np.full((nsh * L,), sent, dtype=self._dtype)
+        out_c = np.zeros((nsh * L,), np.int32)
+        out_n = np.zeros((nsh,), np.int32)
+        for s in range(nsh):
+            if not shard_u[s]:
+                continue
+            uu = np.concatenate(shard_u[s])
+            cc = np.concatenate(shard_c[s])
+            order = np.argsort(uu, kind="stable")
+            uu, cc = uu[order], cc[order]
+            out_u[s * L:s * L + uu.size] = uu
+            out_c[s * L:s * L + cc.size] = cc
+            out_n[s] = uu.size
+        # jnp-backed like the in-core finalize, so callers can
+        # block_until_ready / device_put uniformly
+        return AccumResult(unique=jnp.asarray(out_u),
+                           counts=jnp.asarray(out_c),
+                           num_unique=jnp.asarray(out_n)), folded
+
     def finalize(self) -> Tuple[AccumResult, DAKCStats]:
         """Compact the store into the per-shard histogram (callable more
-        than once; the store keeps accepting updates in between)."""
+        than once; the store keeps accepting updates in between). With
+        the spill tier engaged this is the DRAIN: per-bin fold + compact
+        (`_drain_bins`), host-resident AccumResult, same layout."""
+        if self._spill is not None:
+            result, folded = self._drain_bins()
+            self._bins_folded = folded
+            stats = DAKCStats(
+                overflow=np.int64(0), sent_words=np.int64(self._sent),
+                wire_bytes=np.int64(self._wire_bytes),
+                raw_kmers=np.int64(self._raw), num_global_syncs=3,
+                store_overflow=np.int64(0),
+                spilled_bins=self._spill.spilled_bins,
+                spilled_bytes=self._spill.spilled_bytes,
+                bins_folded=folded)
+            return result, _stamp_retries(stats, self._retries)
         if self._skeys is None:
             raise RuntimeError("KmerCounter.finalize before any update")
         fn = _finalize_executable(self._cfg, self._mesh, self._axes,
@@ -1378,6 +1754,12 @@ class KmerCounter:
             "wire_bytes": self._wire_bytes,
             "n_updates": self._n_updates,
             "retries": dict(self._retries),
+            # bounded round history + the spill tier's manifest: a run
+            # killed mid-spill restores with the checkpoint's view of the
+            # committed bins (core/spill.py durability contract) and its
+            # retry history spanning the restore boundary
+            "rounds": resilience.rounds_to_json(self._rounds),
+            "spill": None if self._spill is None else self._spill.state(),
         }
         if saver is not None:
             saver.save(step, trees, extra=extra)
@@ -1430,6 +1812,22 @@ class KmerCounter:
                          for c in resilience.CAUSES}
         self._slack = float(extra["slack"])
         self._hop2_padded = bool(extra["hop2_padded"])
+        self._rounds = resilience.rounds_from_json(extra.get("rounds"))
+        sp = extra.get("spill")
+        if sp is not None:
+            if cfg.spill == "off" or cfg.spill_dir is None:
+                raise ValueError(
+                    "checkpoint has an engaged spill tier; restoring it "
+                    "needs a cfg with spill enabled and the spill_dir the "
+                    "bins live under")
+            if int(sp["n_bins"]) != cfg.spill_bins:
+                raise ValueError(
+                    f"checkpoint spilled into {sp['n_bins']} bins; "
+                    f"cfg.spill_bins={cfg.spill_bins} would repartition "
+                    f"k-mer space mid-run")
+            self._spill = spill.SpillWriter.attach(
+                cfg.spill_dir, sp, flush_bytes=cfg.spill_flush_bytes,
+                fault=self._spill_fault())
         keys_np = np.asarray(trees["store"]["keys"], dtype=dt)
         counts_np = np.asarray(trees["store"]["counts"], dtype=np.int32)
         if (self._num_pes == int(extra["num_pes"])
@@ -1443,23 +1841,29 @@ class KmerCounter:
             self._reshard_from(keys_np, counts_np)
         return self
 
-    def _reshard_from(self, keys: np.ndarray, counts: np.ndarray) -> None:
-        """Re-route saved (key, count) entries onto this mesh's ownership.
+    def _fold_pairs(self, keys: np.ndarray, counts: np.ndarray, *,
+                    store_cap: Optional[int] = None, sticky: bool = False):
+        """Route host (key, count) records to their owner PEs and fold
+        them into a fresh store -- the one fold engine behind elastic
+        restore (`_reshard_from`) and the spill drain (`_drain_bins`).
 
-        One `route_lanes` exchange moves every live entry to its new owner
-        PE, then `store_insert` folds the routed lanes into a fresh store;
-        overflow on either side retries through `cfg.retry` like any other
-        round (a fresh store per attempt -- no rehash needed, capacity is
-        just re-planned)."""
-        P = self._num_pes
+        One `route_lanes` exchange (the reshard executable) moves every
+        live record to its owner under THIS mesh's PE count; overflow on
+        either side retries through `cfg.retry` like any other round (a
+        fresh store per attempt -- no rehash needed, capacity is just
+        re-planned). Per-PE record counts and the store capacity are
+        pow2-quantized so every bin / batch shape reuses one cached
+        executable. `sticky=True` commits the controller's final slack to
+        the counter (the restore path); retries and round history are
+        recorded either way. Returns (keys, counts, store_cap)."""
+        n_pes = self._num_pes
         sent = int(np.iinfo(keys.dtype).max)
         live = int(((keys != sent) & (counts > 0)).sum())
-        if self._store_cap is None:
-            self._store_cap = _pow2ceil(plan_capacity(
-                max(live, 1), P, self._cfg.store_slack))
-        n_pad = ((keys.shape[0] + P - 1) // P) * P
-        if n_pad == 0:
-            n_pad = P
+        if store_cap is None:
+            store_cap = _pow2ceil(plan_capacity(
+                max(live, 1), n_pes, self._cfg.store_slack))
+        n_local = _pow2ceil(max(1, -(-keys.shape[0] // n_pes)))
+        n_pad = n_local * n_pes
         gk = np.full((n_pad,), sent, keys.dtype)
         gc = np.zeros((n_pad,), np.int32)
         gk[:keys.shape[0]] = keys
@@ -1467,19 +1871,35 @@ class KmerCounter:
         gk = jax.device_put(jnp.asarray(gk), self._sharding())
         gc = jax.device_put(jnp.asarray(gc), self._sharding())
         ctrl = resilience.RetryController(
-            self._cfg.retry, slack=self._slack, store_cap=self._store_cap,
-            hop2_padded=True)
+            self._cfg.retry, slack=self._slack, store_cap=store_cap,
+            hop2_padded=True, history=self._rounds)
         while True:
-            self._store_cap = ctrl.store_cap   # fresh store each attempt
-            route_cap = plan_capacity(n_pad // P, P, ctrl.slack)
+            store_cap = ctrl.store_cap   # fresh store each attempt
+            route_cap = plan_capacity(n_local, n_pes, ctrl.slack)
             fn = _reshard_executable(self._cfg, self._mesh, self._axes,
-                                     str(keys.dtype), n_pad // P, route_cap,
-                                     self._store_cap)
+                                     str(keys.dtype), n_local, route_cap,
+                                     store_cap)
             nk, nc, route_drop, store_drop = fn(gk, gc)
             if not ctrl.observe(route_dropped=int(route_drop),
                                 store_dropped=int(store_drop)):
-                self._skeys, self._scounts = nk, nc
                 break
-        self._slack = ctrl.slack
+        if sticky:
+            self._slack = ctrl.slack
+        self._rounds = ctrl.rounds
         for cause, n in ctrl.counts.items():
             self._retries[cause] += n
+        return nk, nc, store_cap
+
+    def _reshard_from(self, keys: np.ndarray, counts: np.ndarray) -> None:
+        """Re-route saved (key, count) entries onto this mesh's ownership
+        (see `_fold_pairs`) and commit the folded store."""
+        if self._store_cap is None:
+            sent = int(np.iinfo(keys.dtype).max)
+            live = int(((keys != sent) & (counts > 0)).sum())
+            self._store_cap = _pow2ceil(plan_capacity(
+                max(live, 1), self._num_pes, self._cfg.store_slack))
+        nk, nc, cap = self._fold_pairs(keys, counts,
+                                       store_cap=self._store_cap,
+                                       sticky=True)
+        self._skeys, self._scounts = nk, nc
+        self._store_cap = cap

@@ -237,3 +237,35 @@ def superkmer_to_kmers(words: jax.Array, lengths: jax.Array, k: int, m: int,
     out_kmers = jnp.where(pos_valid, kmers, sent).reshape(-1)
     out_counts = pos_valid.astype(jnp.int32).reshape(-1)
     return out_kmers, out_counts
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3),
+                   static_argnames=("k", "m", "bits_per_symbol", "canonical",
+                                    "canonical_impl"))
+def superkmer_minimizers(words: jax.Array, k: int, m: int,
+                         bits_per_symbol: int = 2, *, canonical: bool = False,
+                         canonical_impl: str = "fused") -> jax.Array:
+    """Receiver side: recover each slot's minimizer from its packed payload.
+
+    A super-k-mer is by construction a run whose k-mers all share one
+    minimizer value, and the run covers at least k bases, so the minimizer
+    of the slot's FIRST k-mer (bases [0, k)) IS the run's minimizer --
+    identical to the word the sender grouped on. This is what lets the
+    spill tier (core/spill.py) derive a bin key at the receiver without
+    shipping the minimizer on the wire: bin_of(recovered minimizer) equals
+    the sender-side grouping for every valid slot. Slots with length 0
+    (tile padding, sentinel payload) yield garbage words; callers filter
+    by the length header before using the result.
+    """
+    n_slots = words.shape[0]
+    lmax = max_bases(k, m)
+    bpw = bases_per_word(k, bits_per_symbol)
+    dt = words.dtype.type
+    cmask = dt((1 << bits_per_symbol) - 1)
+    codes = jnp.stack(
+        [((words[:, t // bpw] >> dt(bits_per_symbol * (t % bpw))) & cmask)
+         .astype(jnp.uint8) for t in range(lmax)], axis=1)
+    minz = window_minimizers(codes, k, m, bits_per_symbol,
+                             canonical=canonical,
+                             canonical_impl=canonical_impl)
+    return minz[:, 0]

@@ -43,6 +43,24 @@ Fault sites:
                     is left in the staging directory and `InjectedFault`
                     raised before the atomic rename (the stale-.tmp
                     crash-safety drill for train/checkpoint.py).
+- 'spill_write'  -- die mid-bin-write inside the spill tier
+                    (core/spill.py): a torn segment file is left on disk
+                    and `InjectedFault` raised before the manifest commit,
+                    so restore must discard it (`fail_after` = segment
+                    writes that succeed first).
+- 'bin_corrupt'  -- flip bytes inside a sealed (committed) bin segment of
+                    bin `bin`; the drain pass must detect the checksum
+                    mismatch and raise the typed `spill.SpillCorrupt`.
+
+Round history is bounded: `RetryPolicy.max_history` caps the rounds a
+controller keeps (the first round ever plus a ring of the most recent),
+so give-up payloads and checkpointed retry state stay O(max_history) no
+matter how long an incremental run replays. A controller can be seeded
+with prior rounds (`history=`), which is how a restored `KmerCounter`
+hands pre-checkpoint rounds to post-restore controllers -- a give-up
+after restore carries history spanning the restore boundary. Seeded
+rounds never count against `max_rounds` (only rounds this controller
+recorded itself do).
 
 Determinism: every in-trace mask is a pure function of (seed, site salt,
 element index, chunk index) through the avalanche mixer -- the same plan
@@ -51,8 +69,9 @@ produces the same drops on every run, process, and backend.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -67,7 +86,8 @@ CAUSES = (ROUTE_SLACK, STORE_REHASH, HOP2_FALLBACK)
 # Named fault sites. The first two are in-trace (seeded masks inside the
 # Phase-1 scan); the rest are host-side.
 TRACE_SITES = ("route_drop", "store_drop")
-SITES = TRACE_SITES + ("hop2_misfit", "update_fail", "ckpt_write")
+SITES = TRACE_SITES + ("hop2_misfit", "update_fail", "ckpt_write",
+                       "spill_write", "bin_corrupt")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,13 +102,16 @@ class RetryPolicy:
     at most once (there is no third capacity). `max_rounds` is a total
     replay budget across all causes -- a backstop against pathological
     cause ping-pong, set above any legitimate doubling ladder (a 1-slot
-    store reaching the ceiling is ~28 rehash rounds).
+    store reaching the ceiling is ~28 rehash rounds). `max_history` caps
+    the retained round history (first round + ring of the most recent
+    `max_history - 1`); it bounds payload size only, never the budget.
     """
     max_slack: float = 8.0
     slack_growth: float = 2.0
     store_cap_ceiling: int = 1 << 28
     store_growth: int = 2
     max_rounds: int = 40
+    max_history: int = 25
 
     def __post_init__(self):
         if self.max_slack <= 0 or self.slack_growth <= 1:
@@ -101,6 +124,10 @@ class RetryPolicy:
                 f"{self.store_cap_ceiling}/{self.store_growth}")
         if self.max_rounds < 1:
             raise ValueError(f"max_rounds must be >= 1, got {self.max_rounds}")
+        if self.max_history < 2:
+            raise ValueError(
+                f"max_history must be >= 2 (first + at least one recent "
+                f"round), got {self.max_history}")
 
 
 class RetryRound(NamedTuple):
@@ -116,19 +143,23 @@ class RetryRound(NamedTuple):
 
 
 class RetryError(RuntimeError):
-    """Base of the typed give-up errors; carries the full round history."""
+    """Base of the typed give-up errors; carries the (bounded) round
+    history plus the controller's own per-cause replay counts, so a
+    caller that escalates instead of dying (the fabsp spill tier) can
+    fold the doomed attempt's replays into its lifetime totals."""
 
-    def __init__(self, msg: str, rounds):
+    def __init__(self, msg: str, rounds, counts=None):
         super().__init__(msg)
         self.rounds: Tuple[RetryRound, ...] = tuple(rounds)
+        self.counts: Dict[str, int] = dict(counts or {})
 
 
 class CapacityExhausted(RetryError):
     """A per-cause cap was hit (slack past `max_slack` / store past
     `store_cap_ceiling`) while that cause was still dropping entries."""
 
-    def __init__(self, msg: str, cause: str, rounds):
-        super().__init__(msg, rounds)
+    def __init__(self, msg: str, cause: str, rounds, counts=None):
+        super().__init__(msg, rounds, counts)
         self.cause = cause
 
 
@@ -159,7 +190,11 @@ class FaultPlan:
                 recover bit-identically; a large value makes the fault
                 persistent, driving the typed give-up errors.
     update_n:   'update_fail' only -- which `KmerCounter.update` call dies.
-    fail_after: 'ckpt_write' only -- leaf files written before dying.
+    fail_after: 'ckpt_write' only -- leaf files written before dying;
+                'spill_write' -- bin segment writes that succeed before
+                the torn one.
+    bin:        'bin_corrupt' only -- which spill bin's sealed segment
+                gets its bytes flipped.
     """
     site: str
     seed: int = 0
@@ -169,6 +204,7 @@ class FaultPlan:
     rounds: int = 1
     update_n: int = 0
     fail_after: int = 0
+    bin: int = 0
 
     def __post_init__(self):
         if self.site not in SITES:
@@ -178,8 +214,10 @@ class FaultPlan:
             raise ValueError(f"frac must be in (0, 1], got {self.frac}")
         if not 0.0 <= self.fill < 1.0:
             raise ValueError(f"fill must be in [0, 1), got {self.fill}")
-        if self.rounds < 1 or self.update_n < 0 or self.fail_after < 0:
-            raise ValueError("rounds must be >= 1; update_n/fail_after >= 0")
+        if self.rounds < 1 or self.update_n < 0 or self.fail_after < 0 \
+                or self.bin < 0:
+            raise ValueError(
+                "rounds must be >= 1; update_n/fail_after/bin >= 0")
 
     def fires(self, attempt: int) -> bool:
         """Whether the fault is armed for the given 0-based attempt."""
@@ -233,19 +271,44 @@ class RetryController:
 
     `observe` returns the tuple of causes that fired (empty = clean),
     after growing the corresponding knobs and recording the round; it
-    raises `CapacityExhausted` / `RetryBudgetExceeded` -- with the full
-    history attached -- instead of growing past a cap.
+    raises `CapacityExhausted` / `RetryBudgetExceeded` -- with the
+    (bounded) history attached -- instead of growing past a cap.
+
+    History is a first-plus-ring structure: the first round ever recorded
+    (or seeded via `history=`) is pinned, and the most recent
+    `max_history - 1` rounds ride a ring buffer; middle rounds of a long
+    ladder age out. `rounds` materializes the retained rounds as a list.
+    Seeded history rides into error payloads but never counts against
+    `max_rounds` -- only `own_rounds` (rounds recorded by this
+    controller) can exhaust the budget.
     """
 
     def __init__(self, policy: RetryPolicy, *, slack: float, store_cap: int,
-                 hop2_padded: bool = True):
+                 hop2_padded: bool = True,
+                 history: Iterable[RetryRound] = ()):
         self.policy = policy
         self.slack = slack
         self.store_cap = store_cap
         self.hop2_padded = hop2_padded
         self.attempts = 0                      # completed attempts
-        self.rounds: List[RetryRound] = []     # replayed (dirty) rounds
+        self.own_rounds = 0                    # dirty rounds recorded here
         self.counts: Dict[str, int] = {c: 0 for c in CAUSES}
+        self._first: Optional[RetryRound] = None
+        self._tail = collections.deque(maxlen=policy.max_history - 1)
+        for r in history:
+            self._record(RetryRound(*r))
+
+    def _record(self, r: RetryRound) -> None:
+        if self._first is None:
+            self._first = r
+        else:
+            self._tail.append(r)   # ring: oldest non-first round ages out
+
+    @property
+    def rounds(self) -> List[RetryRound]:
+        """Retained round history (first + most recent), oldest first."""
+        head = [self._first] if self._first is not None else []
+        return head + list(self._tail)
 
     def observe(self, *, route_dropped: int = 0, store_dropped: int = 0,
                 hop2_dropped: int = 0) -> Tuple[str, ...]:
@@ -260,29 +323,31 @@ class RetryController:
         self.attempts += 1
         if not causes:
             return ()
-        self.rounds.append(RetryRound(
+        self._record(RetryRound(
             round=attempt, causes=tuple(causes), slack=self.slack,
             store_cap=self.store_cap, hop2_padded=self.hop2_padded,
             route_dropped=route_dropped, store_dropped=store_dropped,
             hop2_dropped=hop2_dropped))
+        self.own_rounds += 1
         if ROUTE_SLACK in causes and self.slack > self.policy.max_slack:
             raise CapacityExhausted(
                 f"routing overflow persists at slack {self.slack} "
                 f"(> max_slack {self.policy.max_slack}): {route_dropped} "
-                f"entries dropped after {len(self.rounds)} round(s)",
-                ROUTE_SLACK, self.rounds)
+                f"entries dropped after {self.own_rounds} round(s)",
+                ROUTE_SLACK, self.rounds, self.counts)
         if STORE_REHASH in causes \
                 and self.store_cap > self.policy.store_cap_ceiling:
             raise CapacityExhausted(
                 f"count store still overflows at {self.store_cap} slots "
                 f"(> ceiling {self.policy.store_cap_ceiling}): "
                 f"{store_dropped} inserts dropped after "
-                f"{len(self.rounds)} round(s)", STORE_REHASH, self.rounds)
-        if len(self.rounds) >= self.policy.max_rounds:
+                f"{self.own_rounds} round(s)", STORE_REHASH, self.rounds,
+                self.counts)
+        if self.own_rounds >= self.policy.max_rounds:
             raise RetryBudgetExceeded(
-                f"retry budget exhausted after {len(self.rounds)} replayed "
+                f"retry budget exhausted after {self.own_rounds} replayed "
                 f"rounds (max_rounds={self.policy.max_rounds}); last causes "
-                f"{tuple(causes)}", self.rounds)
+                f"{tuple(causes)}", self.rounds, self.counts)
         for c in causes:
             self.counts[c] += 1
         if STORE_REHASH in causes:
@@ -292,3 +357,17 @@ class RetryController:
         if HOP2_FALLBACK in causes:
             self.hop2_padded = True
         return tuple(causes)
+
+
+def rounds_to_json(rounds: Iterable[RetryRound]) -> List[list]:
+    """Round history as JSON-serializable lists (checkpoint `extra`)."""
+    return [list(r) for r in rounds]
+
+
+def rounds_from_json(data) -> List[RetryRound]:
+    """Inverse of `rounds_to_json` (tuple-ness of `causes` restored)."""
+    out = []
+    for row in data or []:
+        r = RetryRound(*row)
+        out.append(r._replace(causes=tuple(r.causes)))
+    return out

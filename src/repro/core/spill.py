@@ -1,0 +1,377 @@
+"""Disk-backed super-k-mer spill tier (KMC 3-style two-phase counting).
+
+The resident CountStore bounds genome size by aggregate device memory: when
+the store hits `RetryPolicy.store_cap_ceiling`, the retry engine's only
+in-core answer is `CapacityExhausted(store-rehash)`. This module is the
+principled backstop the ROADMAP calls for -- two-phase *external-memory*
+counting in the KMC 2/3 / MSPKmerCounter mold:
+
+- **Partition phase.** Received lanes are assigned a bin by a third
+  avalanche hash family (`bin_of`) -- independent of both the owner hash
+  (`owner.hash_kmers`) and the store slot hash (`owner.slot_hash`), so bins
+  split each PE's key space evenly and bin membership never correlates with
+  store slots. For the superkmer transport the bin key is the run's
+  minimizer, recovered from the packed payload at the receiver
+  (`minimizer.superkmer_minimizers`) -- zero extra wire bytes. Full tiles
+  stream device -> host through `AsyncHostCopier` (double-buffered
+  `copy_to_host_async` with a bounded host-byte budget for backpressure)
+  and land in per-bin segment files via `SpillWriter`.
+- **Fold phase.** Because a bin is a pure function of the (canonical) k-mer
+  content, bins partition k-mer space: each bin is counted independently at
+  a store capacity it can afford, and the per-bin histograms concatenate
+  into the exact global histogram. The drain pass (fabsp.KmerCounter)
+  re-routes each bin's records through the elastic reshard path, so a
+  spilled run restores onto any PE count.
+
+Durability contract (the part train/checkpoint.py rides):
+
+- A segment file is written tmp-then-rename and carries its CRC32 and byte
+  size in the manifest; `read_bin` verifies both and raises the typed
+  `SpillCorrupt` on mismatch (the 'bin_corrupt' fault site drill).
+- `manifest.json` lists only COMMITTED segments and is itself written
+  atomically. Batch writes stage as *pending* segments and enter the
+  manifest only on `commit()` -- an attempt aborted by the retry engine
+  (route overflow -> replay at doubled slack) or killed mid-write (the
+  'spill_write' fault site) leaves files the manifest never mentions, and
+  `attach()` (checkpoint restore) prunes them. Records are therefore
+  spilled exactly once no matter how many times a batch replays.
+- `state()` is the JSON-serializable manifest; it rides
+  `KmerCounter.save()`'s extra leaf, and `attach()` rebuilds the writer
+  from the CHECKPOINTED manifest (not whatever is on disk), so a run
+  killed between a spill commit and its checkpoint replays from the
+  checkpoint's view of the bins.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import math
+import os
+import zlib
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import owner, resilience
+
+# Salts of the third avalanche family (bin assignment). Independent of the
+# owner family (unsalted) and the slot family (golden-ratio salts in
+# core/owner.py): a bin correlated with the owner would starve (PE, bin)
+# cells, one correlated with slot_hash would cluster a bin's keys into a
+# slice of every drain store.
+_BIN_SALT32 = 0x27D4EB2F
+_BIN_SALT64 = 0x2545F4914F6CDD1D
+
+MANIFEST = "manifest.json"
+
+
+def bin_of(keys: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """(n,) key words -> (n,) int32 bin ids in [0, n_bins).
+
+    Keys are ownership words: the masked k-mer for the kmer transport, the
+    recovered run minimizer for the superkmer transport. Pure function of
+    the key, so every copy of a k-mer lands in the same bin on every PE --
+    bins partition k-mer space and per-bin histograms concatenate exactly.
+    """
+    if keys.dtype == jnp.uint64:
+        h = owner._mix64(owner._mix64(keys) ^ jnp.uint64(_BIN_SALT64))
+    else:
+        h = owner._mix32(owner._mix32(keys) ^ jnp.uint32(_BIN_SALT32))
+    return (h % h.dtype.type(n_bins)).astype(jnp.int32)
+
+
+class SpillCorrupt(RuntimeError):
+    """A sealed bin segment failed its checksum / size check on read."""
+
+    def __init__(self, msg: str, bin_id: int, file: str):
+        super().__init__(msg)
+        self.bin = bin_id
+        self.file = file
+
+
+class AsyncHostCopier:
+    """Double-buffered device->host staging with bounded host memory.
+
+    `submit(arrays)` starts non-blocking copies (`copy_to_host_async` where
+    the backend provides it) and returns the host tuples that must drain
+    NOW to respect the byte budget -- at most two batches stay in flight,
+    fewer once their bytes exceed `budget_bytes`, so device compute of
+    chunk c+1 overlaps the host materialization of chunk c while spilled
+    bytes on the host stay bounded (the backpressure half of the tier).
+    """
+
+    def __init__(self, budget_bytes: int = 1 << 27):
+        self.budget_bytes = budget_bytes
+        self._pending: List[Tuple[tuple, int]] = []
+        self._bytes = 0
+
+    def submit(self, arrays) -> List[tuple]:
+        arrays = tuple(arrays)
+        for a in arrays:
+            start = getattr(a, "copy_to_host_async", None)
+            if start is not None:
+                start()
+        nbytes = sum(int(np.dtype(a.dtype).itemsize) * math.prod(a.shape)
+                     for a in arrays)
+        self._pending.append((arrays, nbytes))
+        self._bytes += nbytes
+        done = []
+        while len(self._pending) > 2 or (
+                len(self._pending) > 1 and self._bytes > self.budget_bytes):
+            done.append(self._pop())
+        return done
+
+    def _pop(self) -> tuple:
+        arrays, nbytes = self._pending.pop(0)
+        self._bytes -= nbytes
+        return tuple(np.asarray(a) for a in arrays)
+
+    def drain(self) -> Iterator[tuple]:
+        while self._pending:
+            yield self._pop()
+
+
+class SpillWriter:
+    """Per-bin segment files + atomic manifest under one spill directory.
+
+    Two record kinds, both npz-serialized with CRC32 over the file bytes:
+
+    - 'pairs': {'keys', 'counts'} -- decoded (k-mer, count) records (kmer
+      transport receive tiles, store exports at spill engagement).
+    - 'sk': {'words', 'lengths'} -- packed super-k-mer slots in the exact
+      wire format (superkmer transport), decoded only at drain time.
+
+    Writes buffer in host memory per (bin, kind) and flush to one segment
+    per group once `flush_bytes` accumulate (or at commit). See the module
+    docstring for the pending/commit durability contract. A fresh writer
+    OWNS its directory and wipes leftover segments from dead runs.
+    """
+
+    def __init__(self, root: str, n_bins: int, *, meta: Optional[dict] = None,
+                 flush_bytes: int = 1 << 22,
+                 fault: Optional[resilience.FaultPlan] = None,
+                 fresh: bool = True):
+        if n_bins < 1:
+            raise ValueError(f"n_bins must be >= 1, got {n_bins}")
+        self.root = root
+        self.n_bins = n_bins
+        self.meta = dict(meta or {})
+        self.flush_bytes = flush_bytes
+        self.fault = fault if fault is not None \
+            and fault.site in ("spill_write", "bin_corrupt") else None
+        self._segments: List[dict] = []   # committed (manifest) segments
+        self._pending: List[dict] = []    # written files not yet committed
+        self._buf: Dict[Tuple[int, str], List[dict]] = {}
+        self._buf_bytes = 0
+        self._seq = 0
+        self._writes = 0                  # lifetime segment writes (faults)
+        self._corrupted = False           # 'bin_corrupt' fires once
+        os.makedirs(root, exist_ok=True)
+        if fresh:
+            self._wipe()
+
+    # -- ingest ------------------------------------------------------------
+
+    def add_pairs(self, bins: np.ndarray, keys: np.ndarray,
+                  counts: np.ndarray) -> None:
+        """Append decoded (k-mer, count) records grouped by bin id."""
+        self._add(bins, "pairs", keys=np.asarray(keys),
+                  counts=np.asarray(counts))
+
+    def add_superkmers(self, bins: np.ndarray, words: np.ndarray,
+                       lengths: np.ndarray) -> None:
+        """Append packed super-k-mer slots (wire format) grouped by bin."""
+        self._add(bins, "sk", words=np.asarray(words),
+                  lengths=np.asarray(lengths))
+
+    def _add(self, bins: np.ndarray, kind: str, **arrays) -> None:
+        bins = np.asarray(bins)
+        if bins.size == 0:
+            return
+        for b in np.unique(bins):
+            m = bins == b
+            group = {name: a[m] for name, a in arrays.items()}
+            self._buf.setdefault((int(b), kind), []).append(group)
+            self._buf_bytes += sum(a.nbytes for a in group.values())
+        if self._buf_bytes >= self.flush_bytes:
+            self._flush()
+
+    def _flush(self) -> None:
+        for (b, kind), groups in sorted(self._buf.items()):
+            arrays = {name: np.concatenate([g[name] for g in groups])
+                      for name in groups[0]}
+            self._write_segment(b, kind, arrays)
+        self._buf = {}
+        self._buf_bytes = 0
+
+    def _write_segment(self, b: int, kind: str, arrays: dict) -> None:
+        name = f"bin{b:04d}_seq{self._seq:06d}_{kind}.npz"
+        self._seq += 1
+        bio = io.BytesIO()
+        np.savez(bio, **arrays)
+        payload = bio.getvalue()
+        path = os.path.join(self.root, name)
+        fault = self.fault
+        if fault is not None and fault.site == "spill_write" \
+                and self._writes == fault.fail_after:
+            with open(path, "wb") as f:          # torn write: no rename, no
+                f.write(payload[:max(1, len(payload) // 2)])  # manifest entry
+            raise resilience.InjectedFault(
+                f"injected spill_write fault: died mid-write of {name} "
+                f"(after {self._writes} committed segment writes)")
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        self._writes += 1
+        n = int(next(iter(arrays.values())).shape[0])
+        self._pending.append({
+            "bin": int(b), "file": name, "kind": kind, "n": n,
+            "bytes": len(payload), "crc": zlib.crc32(payload) & 0xFFFFFFFF})
+
+    # -- batch lifecycle ---------------------------------------------------
+
+    def begin_batch(self) -> None:
+        """Drop leftovers of an aborted/killed attempt before a replay."""
+        self.abort_batch()
+
+    def abort_batch(self) -> None:
+        """Discard everything since the last commit (buffers + files)."""
+        for seg in self._pending:
+            try:
+                os.remove(os.path.join(self.root, seg["file"]))
+            except OSError:
+                pass
+        self._pending = []
+        self._buf = {}
+        self._buf_bytes = 0
+
+    def commit(self) -> None:
+        """Seal pending segments into the manifest (atomic)."""
+        self._flush()
+        if self._pending:
+            self._segments.extend(self._pending)
+            self._pending = []
+        self._write_manifest()
+        if self.fault is not None and self.fault.site == "bin_corrupt" \
+                and not self._corrupted:
+            if any(s["bin"] == self.fault.bin for s in self._segments):
+                self.corrupt_bin(self.fault.bin)
+                self._corrupted = True
+
+    def corrupt_bin(self, b: int) -> None:
+        """Flip bytes mid-file in a sealed segment of bin `b` (fault drill).
+
+        The manifest keeps the original CRC, so the next `read_bin(b)` must
+        detect the mismatch and raise `SpillCorrupt`.
+        """
+        segs = [s for s in self._segments if s["bin"] == b]
+        if not segs:
+            raise ValueError(f"bin {b} has no committed segments to corrupt")
+        path = os.path.join(self.root, segs[-1]["file"])
+        with open(path, "r+b") as f:
+            data = bytearray(f.read())
+            mid = len(data) // 2
+            for i in range(mid, min(mid + 8, len(data))):
+                data[i] ^= 0xFF
+            f.seek(0)
+            f.write(data)
+
+    # -- drain -------------------------------------------------------------
+
+    def read_bin(self, b: int) -> Iterator[Tuple[str, dict]]:
+        """Yield (kind, arrays) for every committed segment of bin `b`,
+        verifying size + CRC32 against the manifest (-> `SpillCorrupt`)."""
+        for seg in self._segments:
+            if seg["bin"] != b:
+                continue
+            path = os.path.join(self.root, seg["file"])
+            try:
+                with open(path, "rb") as f:
+                    payload = f.read()
+            except OSError as e:
+                raise SpillCorrupt(
+                    f"bin {b} segment {seg['file']} unreadable: {e}",
+                    b, seg["file"])
+            if len(payload) != seg["bytes"] \
+                    or (zlib.crc32(payload) & 0xFFFFFFFF) != seg["crc"]:
+                raise SpillCorrupt(
+                    f"bin {b} segment {seg['file']} failed its checksum "
+                    f"({len(payload)} bytes vs manifest {seg['bytes']})",
+                    b, seg["file"])
+            with np.load(io.BytesIO(payload)) as z:
+                yield seg["kind"], {name: z[name] for name in z.files}
+
+    # -- durability --------------------------------------------------------
+
+    def state(self) -> dict:
+        """JSON-serializable manifest (committed segments only); rides
+        `KmerCounter.save()` and feeds `attach()` on restore."""
+        return {"format": 1, "n_bins": self.n_bins, "seq": self._seq,
+                "meta": self.meta, "segments": list(self._segments),
+                "spilled_bytes": self.spilled_bytes}
+
+    @classmethod
+    def attach(cls, root: str, state: dict, *, flush_bytes: int = 1 << 22,
+               fault: Optional[resilience.FaultPlan] = None) -> "SpillWriter":
+        """Rebuild a writer from a CHECKPOINTED manifest and prune disk
+        files the manifest does not list (torn/uncommitted leftovers of the
+        run that died) -- the restore half of the durability contract."""
+        w = cls(root, int(state["n_bins"]), meta=state.get("meta"),
+                flush_bytes=flush_bytes, fault=fault, fresh=False)
+        w._segments = [dict(s) for s in state["segments"]]
+        w._seq = int(state["seq"])
+        listed = {s["file"] for s in w._segments}
+        for name in os.listdir(root):
+            if name == MANIFEST:
+                continue
+            if name not in listed and (name.endswith(".npz")
+                                       or name.endswith(".tmp")):
+                try:
+                    os.remove(os.path.join(root, name))
+                except OSError:
+                    pass
+        w._write_manifest()
+        return w
+
+    def _write_manifest(self) -> None:
+        path = os.path.join(self.root, MANIFEST)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.state(), f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def _wipe(self) -> None:
+        for name in os.listdir(self.root):
+            if name == MANIFEST or name.endswith(".npz") \
+                    or name.endswith(".tmp"):
+                try:
+                    os.remove(os.path.join(self.root, name))
+                except OSError:
+                    pass
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def spilled_bytes(self) -> int:
+        """Total committed segment bytes (DAKCStats.spilled_bytes)."""
+        return sum(s["bytes"] for s in self._segments)
+
+    @property
+    def spilled_bins(self) -> int:
+        """Distinct bins holding committed data (DAKCStats.spilled_bins)."""
+        return len({s["bin"] for s in self._segments})
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._segments)
+
+    def bin_records(self, b: int) -> int:
+        """Committed record count of bin `b` (slots for 'sk', pairs)."""
+        return sum(s["n"] for s in self._segments if s["bin"] == b)

@@ -28,6 +28,24 @@ atomicity is what makes the kill-mid-write fault class
 (`FaultPlan(site='ckpt_write')`, threaded through `save(fault=...)`)
 recoverable: the staged `<step>.tmp` never becomes visible to
 `latest_step`, so restore falls back to the last complete step.
+
+Spill-tier addendum (core/spill.py): when the tier-3 disk spill is
+engaged, the checkpoint's `extra` additionally carries the spill
+MANIFEST STATE -- the committed segment list (file name, bin, record
+count, CRC32) plus bin count and sequence cursor -- and the bounded
+retry-round history (`resilience.rounds_to_json`). The bin FILES
+themselves stay under `DAKCConfig.spill_dir`, outside the checkpoint;
+durability composes from two invariants: (1) segments are written
+tmp-then-fsync-then-rename and only enter the on-disk manifest after a
+cleanly routed batch commits, so the checkpointed segment list only ever
+names complete, checksummed files; (2) on restore,
+`SpillWriter.attach` prunes every *.npz/*.tmp under spill_dir NOT in
+the checkpoint's list -- a torn write from the crashed run (injected
+`FaultPlan(site='spill_write')`) or a segment committed after the
+checkpoint is discarded, and the killed batch replays exactly-once.
+The fold phase runs on the CURRENT mesh, so a spilled run restored
+onto a different PE count drains through the elastic reshard path
+described above.
 """
 
 from __future__ import annotations

@@ -10,12 +10,17 @@ runs the test once per drawn example (up to `settings(max_examples=...)`).
 No shrinking, no database, no adaptive search -- just reproducible randomized
 coverage. conftest.py installs this as `sys.modules['hypothesis']` only when
 the real package is missing, so environments with hypothesis keep the real
-engine.
+engine. The module itself also delegates: when the real package IS
+importable, the re-export block at the bottom replaces `given`, `settings`,
+and `strategies` with hypothesis's own -- so anything importing
+`_hypothesis_shim` directly (not via conftest's alias) widens to the real
+engine automatically the day the image gains it.
 """
 
 from __future__ import annotations
 
 import functools
+import importlib.util
 import inspect
 import itertools
 import random
@@ -140,3 +145,11 @@ def given(*pos_strategies, **kw_strategies):
         wrapper.hypothesis = marker
         return wrapper
     return deco
+
+
+# Transparent delegation: prefer the real property-testing engine whenever
+# the environment has it (shrinking, the example database, adaptive search
+# all come back for free); the deterministic sweep above stays as the
+# no-dependency fallback.
+if importlib.util.find_spec("hypothesis") is not None:  # pragma: no cover
+    from hypothesis import given, settings, strategies  # noqa: F401,F811

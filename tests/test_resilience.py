@@ -482,3 +482,108 @@ def test_save_kill_restore_reshard_superkmer(tmp_path):
     each stored k-mer's minimizer to find its new owner."""
     _run_reshard_drill(
         tmp_path, extra_cfg=", transport_impl='superkmer', minimizer_len=7")
+
+
+# --- bounded round history (first + ring of last N-1) ------------------------
+
+
+def test_controller_history_keeps_first_plus_ring():
+    """Unbounded fault streams must not grow the history without limit:
+    the first round (how the trouble started) is pinned, the ring keeps
+    the last max_history - 1 (how it ended)."""
+    pol = RetryPolicy(max_history=4, max_rounds=100, max_slack=1e9)
+    ctrl = RetryController(pol, slack=1.0, store_cap=64)
+    for _ in range(10):
+        ctrl.observe(route_dropped=1)
+    rounds = ctrl.rounds
+    assert len(rounds) == 4
+    assert rounds[0].round == 0                   # first round pinned
+    assert [r.round for r in rounds[1:]] == [7, 8, 9]
+    assert ctrl.own_rounds == 10                  # budget sees them all
+
+
+def test_policy_rejects_tiny_history():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_history=1)
+
+
+def test_seeded_history_rides_payloads_but_not_budget():
+    """History seeded from a previous controller (or a checkpoint) must
+    appear in give-up payloads yet never consume the replay budget."""
+    seed = resilience.RetryRound(
+        round=0, causes=(resilience.STORE_REHASH,), slack=1.5,
+        store_cap=64, hop2_padded=True, route_dropped=0,
+        store_dropped=7, hop2_dropped=0)
+    pol = RetryPolicy(max_rounds=3, max_slack=2.0)
+    ctrl = RetryController(pol, slack=1.0, store_cap=64,
+                           history=[seed])
+    assert ctrl.own_rounds == 0                   # seeding is free
+    ctrl.observe(route_dropped=1)                 # 1.0 -> 2.0
+    ctrl.observe(route_dropped=1)                 # 2.0 -> 4.0
+    with pytest.raises(CapacityExhausted) as ei:
+        ctrl.observe(route_dropped=1)
+    rounds = ei.value.rounds
+    assert rounds[0] == seed                      # the imported first round
+    assert len(rounds) == 4 and ctrl.own_rounds == 3
+
+
+def test_rounds_json_roundtrip():
+    seed = resilience.RetryRound(
+        round=2, causes=(resilience.ROUTE_SLACK, resilience.STORE_REHASH),
+        slack=3.0, store_cap=128, hop2_padded=False, route_dropped=4,
+        store_dropped=5, hop2_dropped=0)
+    back = resilience.rounds_from_json(resilience.rounds_to_json([seed]))
+    assert back == [seed]
+    assert isinstance(back[0].causes, tuple)
+    assert resilience.rounds_from_json(None) == []
+
+
+# --- retry-counter durability across save/restore ----------------------------
+
+
+def test_restored_counter_reports_lifetime_retry_totals(
+        mesh, reads, tmp_path):
+    """finalize() on a restored counter must include pre-checkpoint
+    replays in its lifetime retry_* totals."""
+    cfg_f = fabsp.DAKCConfig(
+        k=11, chunk_reads=16, store_capacity=256,
+        faults=FaultPlan(site="store_drop", seed=2, chunk=0, frac=0.25))
+    kc = fabsp.KmerCounter(mesh, cfg_f)
+    s0 = kc.update(reads[:32])
+    assert s0.retry_store_rehash >= 1
+    kc.save(str(tmp_path), step=0)
+    # restore WITHOUT the fault: the second batch is clean, so any retry
+    # totals on finalize can only come from the checkpointed counters
+    cfg = fabsp.DAKCConfig(k=11, chunk_reads=16, store_capacity=256)
+    kc2 = fabsp.KmerCounter.restore(str(tmp_path), mesh, cfg)
+    kc2.update(reads[32:])
+    _, fstats = kc2.finalize()
+    assert fstats.retry_store_rehash == s0.retry_store_rehash
+
+
+def test_post_restore_giveup_history_spans_restore_boundary(
+        mesh, reads, tmp_path):
+    """A CapacityExhausted raised after restore must carry round history
+    that includes the pre-checkpoint rounds (the first-round pin)."""
+    cfg_f = fabsp.DAKCConfig(
+        k=11, chunk_reads=16, store_capacity=256,
+        faults=FaultPlan(site="store_drop", seed=2, chunk=0, frac=0.25))
+    kc = fabsp.KmerCounter(mesh, cfg_f)
+    kc.update(reads[:32])
+    kc.save(str(tmp_path), step=0)
+    assert kc._rounds, "fault never recorded a round"
+    first = kc._rounds[0]
+    # restore with a PERSISTENT route fault and a tiny slack cap: the
+    # second batch must give up -- with the pre-checkpoint round pinned
+    # at the head of the payload
+    cfg_p = fabsp.DAKCConfig(
+        k=11, chunk_reads=16, store_capacity=256,
+        retry=RetryPolicy(max_slack=2.0),
+        faults=FaultPlan(site="route_drop", seed=1, chunk=-1, frac=0.5,
+                         rounds=99))
+    kc2 = fabsp.KmerCounter.restore(str(tmp_path), mesh, cfg_p)
+    with pytest.raises(CapacityExhausted) as ei:
+        kc2.update(reads[32:])
+    rounds = ei.value.rounds
+    assert rounds[0] == first                 # spans the restore boundary
+    assert any(resilience.ROUTE_SLACK in r.causes for r in rounds[1:])
