@@ -32,8 +32,12 @@ k = 13
 # replayed rounds the resilience engine recorded (route-slack doubling +
 # store rehash + hop-2 padded fallback) -- a silent 0 before this column
 # existed, even when a batch ran four times.
+# 'imbal' = DAKCStats.load_max_over_mean: hottest owner PE's hop-1 fill
+# over the mean (1.0 = perfectly balanced), read from the psum'd fill
+# histogram -- no extra collectives. p99 = owner_fill_p99.
 print(f"{'algorithm':24s} {'syncs':>6s} {'sent slots':>12s} "
-      f"{'wire bytes':>11s} {'overflow':>9s} {'retries':>8s}")
+      f"{'wire bytes':>11s} {'overflow':>9s} {'retries':>8s} "
+      f"{'imbal':>6s}")
 
 mesh = Mesh(devs, ("pe",))
 try:
@@ -48,7 +52,7 @@ except RuntimeError:
         reads, mesh, bsp.BSPConfig(k=k, batch_reads=64, slack=6.0))
 print(f"{'BSP (Alg. 2, slack 6)':24s} {st_b.num_global_syncs:6d} "
       f"{st_b.sent_words:12d} {int(st_b.wire_bytes):11d} {st_b.overflow:9d} "
-      f"{'-':>8s}")
+      f"{'-':>8s} {'-':>6s}")
 
 wire = {}
 for name, cfg, axes, m in [
@@ -80,7 +84,8 @@ for name, cfg, axes, m in [
     retries = (st.retry_route_slack + st.retry_store_rehash
                + st.retry_hop2_fallback)
     print(f"{name:24s} {st.num_global_syncs:6d} {int(st.sent_words):12d} "
-          f"{int(st.wire_bytes):11d} {int(st.overflow):9d} {retries:8d}")
+          f"{int(st.wire_bytes):11d} {int(st.overflow):9d} {retries:8d} "
+          f"{st.load_max_over_mean:6.2f}")
 
 print(f"\nsuper-k-mer transport moves "
       f"{wire['DAKC (Alg. 3+4)'] / wire['DAKC superkmer']:.2f}x fewer wire "
@@ -92,6 +97,27 @@ print(f"compact hop-2 (hop2_impl='compact') trims the 2D route to "
 print("\nEach shard owns a disjoint slice of k-mer space (owner-PE "
       "convention); per-shard distinct counts:")
 print(" ", np.asarray(res.num_unique))
+
+# --- load balance under skew (hashed minimizer order) -----------------------
+# The lexicographic minimizer order concentrates low-complexity runs onto
+# one owner PE: on a poly-A adversary every run window's minimizer is
+# m-mer word 0. DAKCConfig.minimizer_order='hashed' compares m-mers on a
+# fourth avalanche hash family instead -- same histogram, strictly lower
+# owner imbalance (DAKCStats.load_max_over_mean / owner_fill_p99).
+polya = jnp.asarray(genome.poly_a_reads(512, 48, seed=3))
+print("\npoly-A adversary (512 reads, 60% poly-A runs), superkmer "
+      "transport:")
+lb = {}
+for order in ("plain", "hashed"):
+    cfg_o = fabsp.DAKCConfig(k=k, chunk_reads=64,
+                             transport_impl="superkmer", minimizer_len=7,
+                             minimizer_order=order)
+    res_o, st_o = fabsp.count_kmers(polya, mesh, cfg_o)
+    lb[order] = np.asarray(res_o.num_unique).sum()
+    print(f"  minimizer_order={order:6s} "
+          f"load_max_over_mean={st_o.load_max_over_mean:.3f} "
+          f"owner_fill_p99={int(st_o.owner_fill_p99)}")
+assert lb["plain"] == lb["hashed"], "orders must not change the histogram"
 
 # --- graceful degradation under memory pressure (the tier-3 spill) ----------
 # Clamp the store's rehash ceiling below this dataset's distinct-k-mer

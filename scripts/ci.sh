@@ -62,6 +62,17 @@ python -m pytest -q tests/test_spill.py -k "pressure or kill or corrupt"
 python -m repro.launch.kc_dryrun --spill
 python -m pytest -q -m slow tests/test_spill.py -k "drill_8_to_4"
 
+echo "== skew-balance smoke gate =="
+# The skew-proof hot path (ISSUE 8): compaction bit-parity across the
+# {kmer,superkmer} x {1d,2d} grid plus the 8-PE poly-A drill
+# (tests/test_skew_balance.py; also tier-1 -- named gate), and the
+# load-balance benchmark's smoke asserts -- in smoke mode too -- that
+# pre-route compaction cuts routed-slot partition work >= 1.5x on the
+# skewed corpus and the hashed minimizer order lands strictly lower
+# load_max_over_mean than plain on poly-A, histograms identical.
+python -m pytest -q tests/test_skew_balance.py -k "parity or polya"
+python -m benchmarks.run --smoke load_balance
+
 echo "== benchmark smoke (superkmer + compact-hop-2 wire gates) =="
 # benchmarks/superkmer_transport.py asserts -- in smoke mode too -- that
 # the smoke-scale super-k-mer stream moves strictly fewer wire bytes than

@@ -44,6 +44,16 @@ property tests (tests/test_routing.py) and for `bucket_by_owner`, the
 two-lane wrapper kept for its external users (benchmarks/phase_breakdown
 and the partition-plan test surfaces).
 
+Pre-route compaction seam (`compact_lanes`): positional extraction layouts
+arrive mostly invalid (one slot per k-mer position, valid only at run
+starts / compression survivors), so callers may first shrink the lane set
+to its occupied prefix with a stable 2-bucket partition -- validity as a
+1-bit digit through the SAME PartitionPlan machinery -- and route the
+compacted lanes at a capacity re-derived from the measured valid density
+(fabsp.DAKCConfig.compact_impl='prefix'). The seam sits strictly BETWEEN
+extraction and `route_lanes`; owners are computed before it and ride
+through as an 'i32' lane, so routing semantics are untouched.
+
 2d topologies: the 'oneplan' route buckets ONCE by the two-digit
 (dest_col, dest_row) key so hop 2 is a plain transpose + all_to_all served
 by the same plan; the 'perhop' oracle re-derives owners from the received
@@ -97,6 +107,16 @@ class RouteResult(NamedTuple):
     overflow: jax.Array           # () int32 bucket-capacity drops
     hop2_dropped: jax.Array       # () int32 compact-hop-2 drops (0 unless
                                   # 2d 'oneplan' with hop2_capacity set)
+    fill: Optional[jax.Array] = None
+                                  # (num_pes,) int32 hop-1 per-destination
+                                  # valid counts (this PE's buckets; psum
+                                  # for the global histogram). Under the 2d
+                                  # 'oneplan' route the axis is the fixed
+                                  # (dest_col, dest_row) permutation of PE
+                                  # ids -- harmless for any permutation-
+                                  # invariant statistic (max/mean/p99). The
+                                  # 'perhop' oracle re-plans per hop and
+                                  # reports zeros.
 
 
 def lane_wire_bytes(lanes, kinds) -> int:
@@ -165,6 +185,62 @@ def route_tiles(lanes, kinds, owners, valid, num_pes: int, capacity: int, *,
                          .set(jnp.where(valid, lane.astype(jnp.int32), 0),
                               mode="drop").reshape(num_pes, capacity))
     return tuple(tiles), fill, overflow
+
+
+def compact_lanes(lanes, kinds, valid, capacity: int, *,
+                  impl: str = "radix"):
+    """Pre-route prefix compaction: shrink a per-position lane set to its
+    occupied prefix (the compaction seam between extraction and
+    `route_lanes`).
+
+    Positional extraction layouts (one slot per k-mer position) leave a
+    large invalid fraction in every lane -- ~(w-1)/(w+1) of super-k-mer
+    slots, the duplicate residue of the L3 compressors -- and the owner
+    partition would histogram, rank and scatter every dead slot anyway.
+    This pass is a stable 2-bucket partition (valid -> bucket 0, invalid ->
+    the trash bucket: validity IS a 1-bit partition digit) through the same
+    `PartitionPlan.tile_slots` machinery the router uses, so each lane
+    shrinks from n slots to `capacity` before any per-destination work.
+    Callers route the compacted lanes with a per-destination capacity
+    re-derived from the measured valid density (fabsp._resolve_compact) --
+    that re-derivation, not this pass, is where the wire bytes drop.
+
+    Owners must be computed BEFORE compaction and carried through as an
+    'i32' lane: the source positions die here.
+
+    lanes/kinds/impl: as `route_tiles`. capacity: static kept-slot count;
+    valid entries past it (stream order) are counted in the returned
+    overflow -- callers ride their usual overflow round (doubled slack
+    re-derives a larger capacity).
+
+    Returns (compacted lanes each (capacity,), new_valid (capacity,) bool,
+    overflow () int32). The kept prefix preserves stream order, so routing
+    compacted lanes is bit-identical to routing the originals (the dropped
+    slots were invalid and never routed).
+    """
+    if len(lanes) != len(kinds) or not lanes:
+        raise ValueError("lanes/kinds must be equal-length and non-empty")
+    key = jnp.where(valid, 0, 1)          # valid first; invalid -> trash
+    if impl == "radix":
+        plan = ops.make_partition_plan(key, 2)
+    elif impl == "argsort":
+        plan = ops.make_partition_plan_ref(key, 2)
+    else:
+        raise ValueError(f"unknown compact impl {impl!r}")
+    dst, fill, overflow = plan.tile_slots(key, valid, capacity)
+    out = []
+    for lane, kind in zip(lanes, kinds):
+        if kind == "word":
+            sent = jnp.array(jnp.iinfo(lane.dtype).max, lane.dtype)
+            out.append(jnp.full((capacity,), sent, lane.dtype).at[dst].set(
+                jnp.where(valid, lane, sent), mode="drop"))
+        elif kind == "i32":
+            out.append(jnp.zeros((capacity,), jnp.int32).at[dst].set(
+                jnp.where(valid, lane.astype(jnp.int32), 0), mode="drop"))
+        else:
+            raise ValueError(f"unknown lane kind {kind!r}")
+    new_valid = jnp.arange(capacity, dtype=jnp.int32) < fill[0]
+    return tuple(out), new_valid, overflow
 
 
 def oneplan_bucket_key(owners, rows: int, cols: int):
@@ -242,7 +318,7 @@ def route_lanes(lanes, kinds, owners, valid, *, num_pes: int, capacity: int,
         return RouteResult(
             lanes=out, sent_valid=fill.sum().astype(jnp.int32),
             wire_bytes=jnp.int32(num_pes * capacity * slot_bytes),
-            overflow=ovf, hop2_dropped=zero)
+            overflow=ovf, hop2_dropped=zero, fill=fill.astype(jnp.int32))
 
     rows, cols = grid
     if route2d == "oneplan":
@@ -266,7 +342,8 @@ def route_lanes(lanes, kinds, owners, valid, *, num_pes: int, capacity: int,
             sent_valid=(fill.sum() + fwd.sum()).astype(jnp.int32),
             wire_bytes=jnp.int32(num_pes * (capacity + cap2) * slot_bytes),
             overflow=ovf,
-            hop2_dropped=(fill - fwd).sum().astype(jnp.int32))
+            hop2_dropped=(fill - fwd).sum().astype(jnp.int32),
+            fill=fill.astype(jnp.int32))
 
     if route2d != "perhop":
         raise ValueError(f"unknown route2d {route2d!r}")
@@ -293,7 +370,8 @@ def route_lanes(lanes, kinds, owners, valid, *, num_pes: int, capacity: int,
     return RouteResult(
         lanes=out, sent_valid=(fill1.sum() + fill2.sum()).astype(jnp.int32),
         wire_bytes=jnp.int32((cols * cap1 + rows * cap2) * slot_bytes),
-        overflow=ovf1 + ovf2, hop2_dropped=zero)
+        overflow=ovf1 + ovf2, hop2_dropped=zero,
+        fill=jnp.zeros((rows * cols,), jnp.int32))
 
 
 def plan_capacity(num_items: int, num_pes: int, slack: float = 1.5,

@@ -211,6 +211,32 @@ class DAKCConfig:
     # Minimizer length m for 'superkmer' transport; the window is
     # w = k - m + 1 m-mers per k-mer.
     minimizer_len: int = 7
+    # Minimizer comparison order ('superkmer' transport): 'plain' compares
+    # m-mer words lexicographically (the KMC 2 signature order and this
+    # repo's bit-parity oracle -- pathological on low-complexity sequence:
+    # poly-A packs to word 0 and wins every window, concentrating runs and
+    # owner load); 'hashed' compares on the fourth avalanche hash family
+    # (owner.order_key, decorrelated from the owner/slot/bin families), so
+    # minimizer-owner load spreads uniformly regardless of content. The
+    # selected minimizer is the m-mer VALUE under either order, ownership
+    # stays owner_pe(value), and histograms are identical as sorted
+    # (kmer, count) sets; only run-length/owner-load statistics differ.
+    # Part of the checkpoint ownership tag: sender and receiver (and a
+    # restore) must agree on the order.
+    minimizer_order: str = "plain"
+    # Pre-route valid-slot compaction ('prefix'): between extraction and
+    # the owner partition, each chunk's per-position lane set shrinks to
+    # its occupied prefix via a 2-bucket Pallas prefix-compact
+    # (aggregation.compact_lanes -- valid/invalid is a 1-bit partition
+    # digit), and the per-destination route capacity re-derives from the
+    # measured post-compaction density instead of the positional shape
+    # bound. The superkmer transport leaves ~(w+1)/2 of every positional
+    # tile invalid and 'packed'/'dual' leave their compression residue, so
+    # partition/scatter work and hop-1 tile bytes drop by the same factor.
+    # A compact-capacity misfit is counted into the route overflow and
+    # replays at doubled slack (the usual round). 'off' (default) is the
+    # bit-parity oracle: identical histograms, full positional tiles.
+    compact_impl: str = "off"
     # Count-store sizing ('stream' only): capacity = store_capacity slots
     # per PE when set. Otherwise 'sample' (default) runs the two-pass
     # estimate -- count distinct on one sample chunk, extrapolate via the
@@ -246,8 +272,12 @@ class DAKCConfig:
     # How many disk bins k-mer space partitions into (bin = third
     # avalanche hash family of the ownership key, spill.bin_of); the
     # drain pass counts one bin at a time, so more bins = smaller per-bin
-    # stores.
-    spill_bins: int = 16
+    # stores. None (default) sizes the bin count when the tier engages
+    # from the sample-based distinct-count estimate (the
+    # store_sizing='sample' machinery) and the store capacity the rehash
+    # ladder stopped at -- spill.auto_bins -- so each bin's fold lands
+    # near the store's sweet spot; an int pins it.
+    spill_bins: Optional[int] = None
     # Directory the tier OWNS: segment files + manifest.json live here
     # (a fresh run wipes leftovers; restore prunes uncommitted files).
     spill_dir: Optional[str] = None
@@ -266,6 +296,8 @@ class DAKCConfig:
                 ("hop2_impl", ("padded", "compact")),
                 ("receiver_impl", ("stream", "stacked")),
                 ("transport_impl", ("kmer", "superkmer")),
+                ("minimizer_order", ("plain", "hashed")),
+                ("compact_impl", ("prefix", "off")),
                 ("store_sizing", ("sample", "bound"))):
             v = getattr(self, knob)
             if v not in allowed:
@@ -298,7 +330,7 @@ class DAKCConfig:
             raise ValueError(
                 f"spill must be one of ('off', 'auto', 'always'), "
                 f"got {self.spill!r}")
-        if self.spill_bins < 1:
+        if self.spill_bins is not None and self.spill_bins < 1:
             raise ValueError(f"spill_bins must be >= 1, got {self.spill_bins}")
         if self.spill != "off":
             if self.spill_dir is None:
@@ -343,6 +375,16 @@ class DAKCStats(NamedTuple):
                                    # capacity (hop2_impl='compact' only; a
                                    # nonzero value triggers the padded
                                    # fallback round)
+    # Load-imbalance observability, computed host-side from the hop-1
+    # per-destination fill histogram the routing engine already psums
+    # (RouteResult.fill -- no extra collectives): max / mean of the
+    # per-destination valid-slot totals (1.0 = perfectly even; 0.0 when
+    # nothing routed or the topology reports no fill, e.g. the 'perhop'
+    # 2d oracle), and the 99th-percentile per-destination fill. Under the
+    # 2d 'oneplan' route the histogram is a fixed permutation of the
+    # destination axis, which max/mean/percentile cannot see.
+    load_max_over_mean: float = 0.0
+    owner_fill_p99: int = 0
     # Per-cause replayed-round counts for this call (host-side Python
     # ints, zero-cost in-trace): how many rounds doubled the routing
     # slack, rehashed the store, or fell back to the padded hop-2 tile
@@ -363,8 +405,19 @@ class DAKCStats(NamedTuple):
 
 # Flat per-call stats tuple threaded out of the shard_map body, in order:
 # (route_overflow, store_overflow, sent_words, wire_hi, wire_lo, raw_kmers,
-#  hop2_dropped).
-STATS_FIELDS = 7
+#  hop2_dropped, fill). All scalars except `fill`, the (num_pes,) int32
+# hop-1 per-destination fill histogram (psum'd like the rest; consumers
+# that index the tuple numerically must special-case index 7).
+STATS_FIELDS = 8
+
+
+def _imbalance(fill) -> Tuple[float, int]:
+    """(load_max_over_mean, owner_fill_p99) of one psum'd fill histogram."""
+    fill = np.asarray(fill, dtype=np.float64)
+    if fill.size == 0 or fill.sum() <= 0:
+        return 0.0, 0
+    return (float(fill.max() / fill.mean()),
+            int(np.percentile(fill, 99)))
 
 # Wire volume is carried as an int32 (hi, lo) pair in base 2**20: lo stays
 # exact per PE, psum(hi)/psum(lo) stay inside int32 for any realistic mesh,
@@ -434,7 +487,7 @@ def _l3_split_dual(words: jax.Array, valid: jax.Array, k: int, bps: int,
 
 def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
                  cap_h: int, mode: str, axis_names, grid, hop2_caps=None,
-                 chunk_idx=None, fault=None):
+                 compact_caps=None, chunk_idx=None, fault=None):
     """One scan step: parse -> L3 / super-k-mer segmentation -> one
     `aggregation.route_lanes` exchange per lane set.
 
@@ -450,16 +503,30 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
     revcomp sweep over the packed words. `hop2_caps` is the optional
     (normal, heavy) compact hop-2 capacity pair (hop2_impl='compact').
 
+    `compact_caps` is the optional pre-route compaction plan
+    (compact_impl='prefix', resolved by `_resolve_compact`): a
+    (compact_n, compact_h, route_cap_n, route_cap_h) tuple. Each lane
+    set's owners are computed on the full positional layout, then the
+    lanes (owners riding as an 'i32' lane) shrink to their occupied
+    prefix via `aggregation.compact_lanes` and route at the re-derived
+    measured-density capacity instead of the positional `cap_n`/`cap_h`.
+    Valid entries past the compact capacity are counted into the
+    overflow stat -- the round replays at doubled slack, which re-derives
+    larger capacities, exactly like a tile overflow.
+
     `chunk_idx` is the traced scan counter and `fault` an armed
     'route_drop' FaultPlan (resilience.active_trace_fault): the seeded
     drop mask invalidates a deterministic subset of the primary lane's
     entries BEFORE routing, and the drop count rides the overflow stat so
     the round replays at doubled slack exactly like a real tile overflow.
 
-    Returns (recv, (raw, sent_valid, wire_bytes, overflow, hop2_dropped)).
+    Returns (recv, (raw, sent_valid, wire_bytes, overflow, hop2_dropped,
+    fill)), `fill` the (num_pes,) hop-1 per-destination valid histogram.
     """
     k, bps = cfg.k, cfg.bits_per_symbol
     h2n, h2h = (None, None) if hop2_caps is None else hop2_caps
+    cc_n, cc_h, rc_n, rc_h = ((None,) * 4 if compact_caps is None
+                              else compact_caps)
 
     def inject_drop(pvalid):
         if fault is None or fault.site != "route_drop":
@@ -472,21 +539,28 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
         # k-mers. Extraction moves to the receiver (_recv_pairs).
         sk = minimizer.segment_superkmers(
             chunk, k, cfg.minimizer_len, bps, canonical=cfg.canonical,
-            canonical_impl=cfg.canonical_impl)
+            canonical_impl=cfg.canonical_impl, order=cfg.minimizer_order)
         raw = jnp.int32(sk.lengths.shape[0])   # one slot per k-mer instance
         n_lanes = sk.words.shape[1]
         sk_valid, injected = inject_drop(sk.lengths > 0)
+        lanes = tuple(sk.words[:, s] for s in range(n_lanes)) + (sk.lengths,)
+        kinds = ("word",) * n_lanes + ("i32",)
+        owners = owner_pe(sk.minimizers, num_pes)
+        cap, covf = cap_n, jnp.int32(0)
+        if cc_n is not None and cc_n < sk.lengths.shape[0]:
+            out, sk_valid, covf = aggregation.compact_lanes(
+                lanes + (owners,), kinds + ("i32",), sk_valid, cc_n,
+                impl=cfg.partition_impl)
+            lanes, owners, cap = out[:-1], out[-1], rc_n
         rr = aggregation.route_lanes(
-            tuple(sk.words[:, s] for s in range(n_lanes)) + (sk.lengths,),
-            ("word",) * n_lanes + ("i32",),
-            owner_pe(sk.minimizers, num_pes), sk_valid,
-            num_pes=num_pes, capacity=cap_n, axis_names=axis_names,
+            lanes, kinds, owners, sk_valid,
+            num_pes=num_pes, capacity=cap, axis_names=axis_names,
             grid=grid, impl=cfg.partition_impl, route2d="oneplan",
             hop2_capacity=h2n)
         rw = jnp.stack(rr.lanes[:-1], axis=1)
         return (rw, rr.lanes[-1], None), (raw, rr.sent_valid, rr.wire_bytes,
-                                          rr.overflow + injected,
-                                          rr.hop2_dropped)
+                                          rr.overflow + covf + injected,
+                                          rr.hop2_dropped, rr.fill)
 
     words = encoding.extract_kmers(chunk, k, bps, canonical=cfg.canonical,
                                    canonical_impl=cfg.canonical_impl)
@@ -494,43 +568,51 @@ def _phase1_step(chunk, *, cfg: DAKCConfig, num_pes: int, cap_n: int,
     valid = jnp.ones(words.shape, bool)
     mask = encoding.kmer_mask(k, bps)
 
-    def route(payload, counts, pvalid, capacity, hop2):
+    def route(payload, counts, pvalid, capacity, hop2, ccap, rcap):
         lanes = (payload,) if counts is None else (payload, counts)
         kinds = ("word",) if counts is None else ("word", "i32")
-        return aggregation.route_lanes(
-            lanes, kinds, owner_pe(payload & mask, num_pes), pvalid,
+        owners = owner_pe(payload & mask, num_pes)
+        covf = jnp.int32(0)
+        if ccap is not None and ccap < payload.shape[0]:
+            out, pvalid, covf = aggregation.compact_lanes(
+                lanes + (owners,), kinds + ("i32",), pvalid, ccap,
+                impl=cfg.partition_impl)
+            lanes, owners, capacity = out[:-1], out[-1], rcap
+        rr = aggregation.route_lanes(
+            lanes, kinds, owners, pvalid,
             num_pes=num_pes, capacity=capacity, axis_names=axis_names,
             grid=grid, impl=cfg.partition_impl, route2d=cfg.route2d_impl,
             hop2_capacity=hop2,
             rederive_owners=lambda w: owner_pe(w & mask, num_pes))
+        return rr, covf
 
     if mode == "packed":
         from repro.core.aggregation import l3_compress
         payload, pvalid = l3_compress(words, k, bps, impl=cfg.phase2_impl)
         pvalid, injected = inject_drop(pvalid)
-        rr = route(payload, None, pvalid, cap_n, h2n)
+        rr, covf = route(payload, None, pvalid, cap_n, h2n, cc_n, rc_n)
         return (rr.lanes[0], None, None), (raw, rr.sent_valid, rr.wire_bytes,
-                                           rr.overflow + injected,
-                                           rr.hop2_dropped)
+                                           rr.overflow + covf + injected,
+                                           rr.hop2_dropped, rr.fill)
 
     if mode == "dual":
         nw, nv, hw, hc, hv = _l3_split_dual(words, valid, k, bps,
                                             impl=cfg.phase2_impl)
         nv, injected = inject_drop(nv)
-        rn = route(nw, None, nv, cap_n, h2n)
-        rh = route(hw, hc, hv, cap_h, h2h)
+        rn, covn = route(nw, None, nv, cap_n, h2n, cc_n, rc_n)
+        rh, covh = route(hw, hc, hv, cap_h, h2h, cc_h, rc_h)
         return (rn.lanes[0], rh.lanes[0], rh.lanes[1]), \
             (raw, rn.sent_valid + rh.sent_valid,
              rn.wire_bytes + rh.wire_bytes,
-             rn.overflow + rh.overflow + injected,
-             rn.hop2_dropped + rh.hop2_dropped)
+             rn.overflow + rh.overflow + covn + covh + injected,
+             rn.hop2_dropped + rh.hop2_dropped, rn.fill + rh.fill)
 
     # mode == 'none': BSP-style raw words, single lane, no compression.
     valid, injected = inject_drop(valid)
-    rr = route(words, None, valid, cap_n, h2n)
+    rr, covf = route(words, None, valid, cap_n, h2n, cc_n, rc_n)
     return (rr.lanes[0], None, None), (raw, rr.sent_valid, rr.wire_bytes,
-                                       rr.overflow + injected,
-                                       rr.hop2_dropped)
+                                       rr.overflow + covf + injected,
+                                       rr.hop2_dropped, rr.fill)
 
 
 def _recv_pairs(recv, *, cfg: DAKCConfig, mode: str):
@@ -610,7 +692,7 @@ def _phase2(recv_normal, recv_heavy, recv_heavy_counts, *, cfg: DAKCConfig,
 
 def _stream_fold(chunks, store: countstore.CountStore, *, cfg: DAKCConfig,
                  num_pes: int, cap_n: int, cap_h: int, mode: str, axis_names,
-                 grid, hop2_caps=None, fault=None):
+                 grid, hop2_caps=None, compact_caps=None, fault=None):
     """Phase-1 scan with the streaming receiver: route each chunk, then fold
     its decompressed receive tiles into the carry-resident count store.
 
@@ -622,17 +704,18 @@ def _stream_fold(chunks, store: countstore.CountStore, *, cfg: DAKCConfig,
     full table.
 
     Returns (store, (raw, sent_words, wire_hi, wire_lo, route_overflow,
-    hop2_dropped)). The scan emits NO per-chunk outputs -- receive memory is
-    the store plus one in-flight tile, independent of the chunk count.
+    hop2_dropped, fill)). The scan emits NO per-chunk outputs -- receive
+    memory is the store plus one in-flight tile, independent of the chunk
+    count.
     """
 
     def step(carry, xs):
         chunk, cidx = xs
-        raw_t, sent_t, whi, wlo, ovf_t, h2_t, st = carry
-        recv, (raw, sent_w, wire, ovf, h2) = _phase1_step(
+        raw_t, sent_t, whi, wlo, ovf_t, h2_t, fill_t, st = carry
+        recv, (raw, sent_w, wire, ovf, h2, fl) = _phase1_step(
             chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
             mode=mode, axis_names=axis_names, grid=grid, hop2_caps=hop2_caps,
-            chunk_idx=cidx, fault=fault)
+            compact_caps=compact_caps, chunk_idx=cidx, fault=fault)
         kmers, cnts = _recv_pairs(recv, cfg=cfg, mode=mode)
         if fault is not None and fault.site == "store_drop":
             hit = resilience.fault_mask(kmers.shape[0], fault, cidx)
@@ -654,14 +737,16 @@ def _stream_fold(chunks, store: countstore.CountStore, *, cfg: DAKCConfig,
         return (raw_t + raw.astype(jnp.int32),
                 sent_t + sent_w.astype(jnp.int32), whi, wlo,
                 ovf_t + ovf.astype(jnp.int32),
-                h2_t + h2.astype(jnp.int32), st), None
+                h2_t + h2.astype(jnp.int32),
+                fill_t + fl.astype(jnp.int32), st), None
 
     zero = jnp.int32(0)
+    zfill = jnp.zeros((num_pes,), jnp.int32)
     chunk_ids = jnp.arange(chunks.shape[0], dtype=jnp.int32)
-    (raw, sent_w, whi, wlo, ovf, h2, store), _ = jax.lax.scan(
-        step, (zero, zero, zero, zero, zero, zero, store),
+    (raw, sent_w, whi, wlo, ovf, h2, fill, store), _ = jax.lax.scan(
+        step, (zero, zero, zero, zero, zero, zero, zfill, store),
         (chunks, chunk_ids))
-    return store, (raw, sent_w, whi, wlo, ovf, h2)
+    return store, (raw, sent_w, whi, wlo, ovf, h2, fill)
 
 
 def _chunked(reads_local: jax.Array, chunk_reads: int) -> jax.Array:
@@ -675,16 +760,16 @@ def _chunked(reads_local: jax.Array, chunk_reads: int) -> jax.Array:
 
 def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
                  cap_n: int, cap_h: int, store_cap: int, mode: str,
-                 axis_names, grid, hop2_caps=None, fault=None
-                 ) -> Tuple[AccumResult, tuple]:
+                 axis_names, grid, hop2_caps=None, compact_caps=None,
+                 fault=None) -> Tuple[AccumResult, tuple]:
     chunks = _chunked(reads_local, cfg.chunk_reads)
     if cfg.receiver_impl == "stream":
         dt = encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol)
         store = countstore.empty_store(store_cap, dt)
-        store, (raw, sent_w, whi, wlo, ovf, h2) = _stream_fold(
+        store, (raw, sent_w, whi, wlo, ovf, h2, fill) = _stream_fold(
             chunks, store, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
             cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid,
-            hop2_caps=hop2_caps, fault=fault)
+            hop2_caps=hop2_caps, compact_caps=compact_caps, fault=fault)
         result = countstore.store_histogram(
             store, total_bits=encoding.kmer_bits(cfg.k, cfg.bits_per_symbol),
             impl=cfg.phase2_impl)
@@ -692,20 +777,23 @@ def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
     else:
         def step(carry, xs):
             chunk, cidx = xs
-            recv, (raw, sent_w, wire, ovf, h2) = _phase1_step(
+            recv, (raw, sent_w, wire, ovf, h2, fl) = _phase1_step(
                 chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
                 mode=mode, axis_names=axis_names, grid=grid,
-                hop2_caps=hop2_caps, chunk_idx=cidx, fault=fault)
-            raw_t, sent_t, whi, wlo, ovf_t, h2_t = carry
+                hop2_caps=hop2_caps, compact_caps=compact_caps,
+                chunk_idx=cidx, fault=fault)
+            raw_t, sent_t, whi, wlo, ovf_t, h2_t, fill_t = carry
             whi, wlo = _wire_add(whi, wlo, wire)
             return (raw_t + raw.astype(jnp.int32),
                     sent_t + sent_w.astype(jnp.int32), whi, wlo,
                     ovf_t + ovf.astype(jnp.int32),
-                    h2_t + h2.astype(jnp.int32)), recv
+                    h2_t + h2.astype(jnp.int32),
+                    fill_t + fl.astype(jnp.int32)), recv
 
         zero = jnp.int32(0)
-        (raw, sent_w, whi, wlo, ovf, h2), recvs = jax.lax.scan(
-            step, (zero, zero, zero, zero, zero, zero),
+        zfill = jnp.zeros((num_pes,), jnp.int32)
+        (raw, sent_w, whi, wlo, ovf, h2, fill), recvs = jax.lax.scan(
+            step, (zero, zero, zero, zero, zero, zero, zfill),
             (chunks, jnp.arange(chunks.shape[0], dtype=jnp.int32)))
         recv_n, recv_h, recv_hc = recvs
         result = _phase2(recv_n, recv_h, recv_hc, cfg=cfg, mode=mode)
@@ -713,7 +801,7 @@ def _local_count(reads_local: jax.Array, *, cfg: DAKCConfig, num_pes: int,
 
     ax = tuple(axis_names)
     stats = tuple(jax.lax.psum(x, ax)
-                  for x in (ovf, store_ovf, sent_w, whi, wlo, raw, h2))
+                  for x in (ovf, store_ovf, sent_w, whi, wlo, raw, h2, fill))
     return AccumResult(unique=result.unique, counts=result.counts,
                        num_unique=result.num_unique.reshape(1)), stats
 
@@ -760,27 +848,24 @@ def _default_store_capacity(cfg: DAKCConfig, shape, num_pes: int) -> int:
     return plan_capacity(distinct_bound, num_pes, cfg.store_slack)
 
 
-def _sampled_store_capacity(reads, cfg: DAKCConfig, num_pes: int) -> int:
-    """Two-pass default sizing: distinct-count one sample chunk, then
-    extrapolate to the full read set (`store_sizing='sample'`).
+def _sampled_distinct_estimate(reads, cfg: DAKCConfig,
+                               num_pes: int) -> Optional[int]:
+    """Two-pass GLOBAL distinct-count estimate: distinct-count one sample
+    chunk, then extrapolate to the full read set.
 
     The sample's (instances s, distinct d) pair is inverted under the
     uniform-pool model -- find the pool size U with
     E[distinct | s draws from U] = U * (1 - (1 - 1/U)^s) = d -- and the
     same curve evaluated at the full instance count gives the estimate.
     When the workload's distinct set saturates (deep coverage of a finite
-    genome), U is finite and the store stops scaling with input size --
-    the receive memory becomes distinct-count-proportional, which the
-    instance-count bound never was. A fully-distinct sample (d == s)
-    carries no saturation information and falls back to the bound; an
-    under-estimate (skewed frequencies, unlucky sample) costs one rehash
-    round, the same discipline as every other static capacity here.
+    genome), U is finite and the estimate stops scaling with input size.
+    A fully-distinct sample (d == s) carries no saturation information:
+    returns None (callers fall back to the instance-count bound).
 
-    The returned capacity is rounded UP to a power of two: the estimate is
-    data-dependent, and without quantization every same-shape batch with
-    slightly different content would miss the executable cache (capacity
-    is part of the trace key) and pay a full recompile -- at most 2x slots
-    buys back cache hits across a serving stream.
+    Two consumers: the `store_sizing='sample'` store capacity
+    (`_sampled_store_capacity`) and -- via `KmerCounter._distinct_est` --
+    the spill tier's automatic bin count (`spill.auto_bins`), so one
+    sampling pass prices both the resident store and the disk partition.
     """
     n_reads, m = reads.shape
     k, bps = cfg.k, cfg.bits_per_symbol
@@ -793,7 +878,7 @@ def _sampled_store_capacity(reads, cfg: DAKCConfig, num_pes: int) -> int:
     total = n_reads * (m - k + 1)
     bound = min(total, 1 << encoding.kmer_bits(k, bps))
     if d >= s:
-        return _default_store_capacity(cfg, tuple(reads.shape), num_pes)
+        return None
 
     def exp_distinct(u: float, n: int) -> float:
         return u * -math.expm1(n * math.log1p(-1.0 / u))
@@ -809,7 +894,23 @@ def _sampled_store_capacity(reads, cfg: DAKCConfig, num_pes: int) -> int:
             else:
                 hi = mid
         u = hi
-    est = min(max(int(math.ceil(exp_distinct(u, total))), d), bound)
+    return min(max(int(math.ceil(exp_distinct(u, total))), d), bound)
+
+
+def _sampled_store_capacity(reads, cfg: DAKCConfig, num_pes: int) -> int:
+    """Per-PE store slots from the sample estimate (`store_sizing='sample'`;
+    an under-estimate costs one rehash round, the same discipline as every
+    other static capacity here).
+
+    The capacity is rounded UP to a power of two: the estimate is
+    data-dependent, and without quantization every same-shape batch with
+    slightly different content would miss the executable cache (capacity
+    is part of the trace key) and pay a full recompile -- at most 2x slots
+    buys back cache hits across a serving stream.
+    """
+    est = _sampled_distinct_estimate(reads, cfg, num_pes)
+    if est is None:
+        return _default_store_capacity(cfg, tuple(reads.shape), num_pes)
     cap = plan_capacity(est, num_pes, cfg.store_slack)
     return 1 << (cap - 1).bit_length()
 
@@ -904,7 +1005,8 @@ def _chunk_valid_estimate(reads, cfg: DAKCConfig, mode: str,
         if mode == "superkmer":
             sk = minimizer.segment_superkmers(
                 sample, cfg.k, cfg.minimizer_len, cfg.bits_per_symbol,
-                canonical=cfg.canonical, canonical_impl=cfg.canonical_impl)
+                canonical=cfg.canonical, canonical_impl=cfg.canonical_impl,
+                order=cfg.minimizer_order)
             est_n = max(est_n, scale * int((np.asarray(sk.lengths) > 0)
                                            .sum()))
             continue
@@ -960,6 +1062,60 @@ def _resolve_hop2_caps(reads, cfg: DAKCConfig, num_pes: int, shape,
     return cap2(cap_n, est_n), cap2(cap_h, est_h) if cap_h else 0
 
 
+def _compact_engaged(cfg: DAKCConfig) -> bool:
+    """Whether the pre-route prefix compaction applies to this config."""
+    return cfg.compact_impl == "prefix"
+
+
+def _resolve_compact(reads, cfg: DAKCConfig, num_pes: int, shape,
+                     slack: float,
+                     est: Optional[Tuple[int, int]] = None
+                     ) -> Optional[Tuple[int, int, int, int]]:
+    """(compact_n, compact_h, route_cap_n, route_cap_h) for the pre-route
+    prefix compaction, or None when the seam cannot pay (compact_impl=
+    'off', the 'none' wire format -- every positional slot ships -- or a
+    chunk the measured density shows is already dense).
+
+    compact_* is the kept-prefix length each lane set shrinks to: the
+    measured per-chunk VALID estimate (`_chunk_valid_estimate` -- the same
+    sample the compact hop 2 plans from, shared via `est`) with the
+    routing slack, rounded UP to a power of two for executable-cache
+    stability and floored at 64 (Poisson tails at tiny estimates cost
+    nothing). route_cap_* is the re-derived per-destination capacity the
+    compacted lanes route at -- the measured-density plan instead of the
+    positional shape bound, the same two-capacity formula as the compact
+    hop 2 and where the hop-1 wire bytes actually drop; clamped to the
+    positional capacity, where compaction degenerates to the plain tile.
+    A mis-estimate costs one doubled-slack round (both capacities
+    re-derive from the controller's slack), the usual discipline.
+    """
+    if not _compact_engaged(cfg):
+        return None
+    mode, cap_n, cap_h = _plan_caps(cfg, num_pes, shape, slack)
+    if mode == "none":
+        return None
+    est_n, est_h = (_chunk_valid_estimate(reads, cfg, mode, shape)
+                    if est is None else est)
+    n_reads, m = shape
+    chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
+    n_n = chunk_kmers * (2 if mode == "dual" else 1)
+
+    def caps(n_slots, est_lane, cap_lane):
+        cc = max(64, _pow2ceil(int(math.ceil(max(est_lane, 1) * slack))))
+        if cc >= n_slots:
+            return n_slots, cap_lane     # already dense: seam is a no-op
+        rc = min(cap_lane, max(64, _pow2ceil(
+            plan_capacity(max(est_lane, 1), num_pes, slack))))
+        return cc, rc
+
+    cc_n, rc_n = caps(n_n, est_n, cap_n)
+    cc_h, rc_h = (caps(chunk_kmers, est_h, cap_h) if mode == "dual"
+                  else (0, 0))
+    if cc_n >= n_n and (mode != "dual" or cc_h >= chunk_kmers):
+        return None
+    return cc_n, cc_h, rc_n, rc_h
+
+
 def _data_spec(axis_names):
     return P(axis_names if len(axis_names) > 1 else axis_names[0])
 
@@ -968,6 +1124,8 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
                          dtype_name: str, slack: float,
                          store_cap: Optional[int] = None,
                          hop2_caps: Optional[Tuple[int, int]] = None,
+                         compact_caps: Optional[Tuple[int, int, int,
+                                                      int]] = None,
                          fault=None):
     num_pes = _mesh_pes(mesh, axis_names)
     if store_cap is None:
@@ -976,7 +1134,7 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
     # a faulted round and its clean retry are distinct executables, both
     # cached.
     key = (cfg, mesh, axis_names, shape, dtype_name, slack, store_cap,
-           hop2_caps, fault)
+           hop2_caps, compact_caps, fault)
     fn = _EXEC_CACHE.get(key)
     if fn is not None:
         return fn
@@ -988,7 +1146,8 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
         functools.partial(_local_count, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
                           cap_h=cap_h, store_cap=store_cap, mode=mode,
                           axis_names=axis_names, grid=grid,
-                          hop2_caps=hop2_caps, fault=fault),
+                          hop2_caps=hop2_caps, compact_caps=compact_caps,
+                          fault=fault),
         mesh=mesh, in_specs=(spec,),
         out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
                    (P(),) * STATS_FIELDS)))
@@ -997,13 +1156,16 @@ def _counting_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
 
 
 def _host_stats(cfg: DAKCConfig, raw_stats) -> DAKCStats:
-    route_ovf, store_ovf, sent_w, whi, wlo, raw, hop2_dropped = raw_stats
+    (route_ovf, store_ovf, sent_w, whi, wlo, raw, hop2_dropped,
+     fill) = raw_stats
     # the traced accumulator already counts bytes (see _wire_add)
     wire_bytes = (int(whi) << _WIRE_SHIFT) + int(wlo)
+    lmm, p99 = _imbalance(fill)
     return DAKCStats(overflow=route_ovf, sent_words=sent_w,
                      wire_bytes=np.int64(wire_bytes),
                      raw_kmers=raw, num_global_syncs=3,
-                     store_overflow=store_ovf, hop2_dropped=hop2_dropped)
+                     store_overflow=store_ovf, hop2_dropped=hop2_dropped,
+                     load_max_over_mean=lmm, owner_fill_p99=p99)
 
 
 def _retry_hop2_caps(reads, cfg: DAKCConfig, num_pes: int, shape,
@@ -1076,7 +1238,9 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
     store_cap = (_store_cap_override if _store_cap_override is not None
                  else _resolve_store_capacity(reads, cfg, num_pes))
     engaged = _hop2_engaged(cfg) and not _hop2_padded
-    if engaged and _hop2_est is None:   # sample once; retries re-plan on it
+    if ((engaged or _compact_engaged(cfg)) and _hop2_est is None):
+        # sample once; retries re-plan on it (shared by the compact hop-2
+        # tile and the pre-route compaction -- one measured estimate)
         mode = _plan_caps(cfg, num_pes, shape, slack)[0]
         _hop2_est = _chunk_valid_estimate(reads, cfg, mode, shape)
     ctrl = resilience.RetryController(cfg.retry, slack=slack,
@@ -1085,11 +1249,14 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
     while True:
         hop2_caps = _retry_hop2_caps(reads, cfg, num_pes, shape, ctrl,
                                      _hop2_est)
+        compact_caps = _resolve_compact(reads, cfg, num_pes, shape,
+                                        ctrl.slack, est=_hop2_est)
         fault = resilience.active_trace_fault(cfg.faults, ctrl.attempts)
         fn = _counting_executable(cfg, mesh, axis_names, shape,
                                   str(reads.dtype), ctrl.slack,
                                   store_cap=ctrl.store_cap,
-                                  hop2_caps=hop2_caps, fault=fault)
+                                  hop2_caps=hop2_caps,
+                                  compact_caps=compact_caps, fault=fault)
         result, raw_stats = fn(reads)
         stats = _host_stats(cfg, raw_stats)
         if not ctrl.observe(route_dropped=int(stats.overflow),
@@ -1106,9 +1273,11 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
 def _update_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
                        dtype_name: str, slack: float, store_cap: int,
                        hop2_caps: Optional[Tuple[int, int]] = None,
+                       compact_caps: Optional[Tuple[int, int, int,
+                                                    int]] = None,
                        fault=None):
     key = ("update", cfg, mesh, axis_names, shape, dtype_name, slack,
-           store_cap, hop2_caps, fault)
+           store_cap, hop2_caps, compact_caps, fault)
     fn = _EXEC_CACHE.get(key)
     if fn is not None:
         return fn
@@ -1121,14 +1290,14 @@ def _update_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
         chunks = _chunked(reads_local, cfg.chunk_reads)
         store = countstore.CountStore(keys=skeys, counts=scounts,
                                       dropped=jnp.int32(0))
-        store, (raw, sent_w, whi, wlo, ovf, h2) = _stream_fold(
+        store, (raw, sent_w, whi, wlo, ovf, h2, fill) = _stream_fold(
             chunks, store, cfg=cfg, num_pes=num_pes, cap_n=cap_n,
             cap_h=cap_h, mode=mode, axis_names=axis_names, grid=grid,
-            hop2_caps=hop2_caps, fault=fault)
+            hop2_caps=hop2_caps, compact_caps=compact_caps, fault=fault)
         ax = tuple(axis_names)
         stats = tuple(jax.lax.psum(x, ax)
                       for x in (ovf, store.dropped, sent_w, whi, wlo, raw,
-                                h2))
+                                h2, fill))
         return store.keys, store.counts, stats
 
     fn = jax.jit(compat.shard_map(
@@ -1206,7 +1375,7 @@ def _ownership_keys(words: jax.Array, cfg: DAKCConfig) -> jax.Array:
              & words.dtype.type((1 << bps) - 1)).astype(jnp.uint8)
     return minimizer.window_minimizers(
         codes, k, cfg.minimizer_len, bps, canonical=cfg.canonical,
-        canonical_impl=cfg.canonical_impl)[:, 0]
+        canonical_impl=cfg.canonical_impl, order=cfg.minimizer_order)[:, 0]
 
 
 def _reshard_executable(cfg: DAKCConfig, mesh: Mesh, axis_names,
@@ -1250,7 +1419,8 @@ def _reshard_executable(cfg: DAKCConfig, mesh: Mesh, axis_names,
 
 
 def _spill_route_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
-                            dtype_name: str, slack: float, fault=None):
+                            dtype_name: str, slack: float, n_bins: int,
+                            fault=None):
     """One spill-tier chunk step: route chunk `cidx`'s lanes to owner PEs
     (the unchanged `_phase1_step` exchange -- zero extra wire bytes), then
     derive each received record's BIN in-trace: the recovered run minimizer
@@ -1258,10 +1428,13 @@ def _spill_route_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
     masked k-mer word otherwise, through the third hash family
     (`spill.bin_of`). Returns ((payload..., bins), psum'd stats); the host
     loop streams the lanes to `spill.SpillWriter` through the async
-    double buffer. Hop 2 always runs padded here (the compact scheme's
-    fallback round would interleave badly with the per-chunk host loop).
+    double buffer. Hop 2 always runs padded and the route uncompacted here
+    (the compact schemes' fallback rounds would interleave badly with the
+    per-chunk host loop). `n_bins` is the resolved bin count (cfg.spill_bins
+    or the engage-time spill.auto_bins sizing).
     """
-    key = ("spill", cfg, mesh, axis_names, shape, dtype_name, slack, fault)
+    key = ("spill", cfg, mesh, axis_names, shape, dtype_name, slack, n_bins,
+           fault)
     fn = _EXEC_CACHE.get(key)
     if fn is not None:
         return fn
@@ -1275,7 +1448,7 @@ def _spill_route_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
         chunks = _chunked(reads_local, cfg.chunk_reads)
         chunk = jax.lax.dynamic_index_in_dim(chunks, cidx, axis=0,
                                              keepdims=False)
-        recv, (raw, sent_w, wire, ovf, h2) = _phase1_step(
+        recv, (raw, sent_w, wire, ovf, h2, fl) = _phase1_step(
             chunk, cfg=cfg, num_pes=num_pes, cap_n=cap_n, cap_h=cap_h,
             mode=mode, axis_names=axis_names, grid=grid, hop2_caps=None,
             chunk_idx=cidx, fault=fault)
@@ -1283,19 +1456,21 @@ def _spill_route_executable(cfg: DAKCConfig, mesh: Mesh, axis_names, shape,
             words, lengths, _ = recv
             minz = minimizer.superkmer_minimizers(
                 words, cfg.k, cfg.minimizer_len, cfg.bits_per_symbol,
-                canonical=cfg.canonical, canonical_impl=cfg.canonical_impl)
+                canonical=cfg.canonical, canonical_impl=cfg.canonical_impl,
+                order=cfg.minimizer_order)
             lanes = (words, lengths.astype(jnp.int32),
-                     spill.bin_of(minz, cfg.spill_bins))
+                     spill.bin_of(minz, n_bins))
         else:
             kmers, cnts = _recv_pairs(recv, cfg=cfg, mode=mode)
             lanes = (kmers, cnts.astype(jnp.int32),
-                     spill.bin_of(kmers & mask, cfg.spill_bins))
+                     spill.bin_of(kmers & mask, n_bins))
         whi, wlo = _wire_add(jnp.int32(0), jnp.int32(0), wire)
         ax = tuple(axis_names)
         stats = tuple(jax.lax.psum(x, ax)
                       for x in (ovf.astype(jnp.int32), jnp.int32(0),
                                 sent_w.astype(jnp.int32), whi, wlo,
-                                raw.astype(jnp.int32), h2.astype(jnp.int32)))
+                                raw.astype(jnp.int32), h2.astype(jnp.int32),
+                                fl.astype(jnp.int32)))
         return lanes, stats
 
     fn = jax.jit(compat.shard_map(
@@ -1317,9 +1492,13 @@ def _cfg_fingerprint(cfg: DAKCConfig) -> dict:
 
 
 def _ownership_tag(cfg: DAKCConfig) -> dict:
+    sk = cfg.transport_impl == "superkmer"
     return {"transport_impl": cfg.transport_impl,
-            "minimizer_len": (cfg.minimizer_len
-                              if cfg.transport_impl == "superkmer" else None)}
+            "minimizer_len": cfg.minimizer_len if sk else None,
+            # which m-mer wins a window decides the owning minimizer, so
+            # the comparison order is part of the ownership family: a
+            # restore across orders reshards (counts re-route exactly)
+            "minimizer_order": cfg.minimizer_order if sk else None}
 
 
 class KmerCounter:
@@ -1370,11 +1549,19 @@ class KmerCounter:
         self._hop2_padded = False
         self._skeys = None
         self._scounts = None
+        # the first batch's sampled global distinct-count estimate
+        # (None before any update, or when the sample was uninformative);
+        # consumed by the spill tier's auto bin sizing and persisted by
+        # save/restore
+        self._distinct_est: Optional[int] = None
         # host-side running totals across updates (Python ints: an
         # unbounded stream overruns int32 long before the store fills)
         self._raw = 0
         self._sent = 0
         self._wire_bytes = 0
+        # lifetime per-destination hop-1 fill histogram (np.int64 once the
+        # first batch lands; finalize() reports its imbalance)
+        self._fill = None
         # cumulative per-cause replayed-round counts across the stream's
         # lifetime (finalize() reports them; save() persists them)
         self._retries = {c: 0 for c in resilience.CAUSES}
@@ -1396,9 +1583,18 @@ class KmerCounter:
         return NamedSharding(self._mesh, _data_spec(self._axes))
 
     def _alloc(self, reads) -> None:
+        cfg = self._cfg
+        if self._distinct_est is None and cfg.store_sizing == "sample":
+            self._distinct_est = _sampled_distinct_estimate(reads, cfg,
+                                                            self._num_pes)
         if self._store_cap is None:
-            self._store_cap = _resolve_store_capacity(reads, self._cfg,
-                                                      self._num_pes)
+            if cfg.store_capacity is None and self._distinct_est is not None:
+                cap = plan_capacity(self._distinct_est, self._num_pes,
+                                    cfg.store_slack)
+                self._store_cap = 1 << (cap - 1).bit_length()
+            else:
+                self._store_cap = _resolve_store_capacity(reads, cfg,
+                                                          self._num_pes)
         self._alloc_store()
 
     def _alloc_store(self) -> None:
@@ -1468,7 +1664,7 @@ class KmerCounter:
         shape = tuple(reads.shape)
         engaged = _hop2_engaged(self._cfg) and not self._hop2_padded
         hop2_est = None
-        if engaged:
+        if engaged or _compact_engaged(self._cfg):
             mode = _plan_caps(self._cfg, self._num_pes, shape,
                               self._slack)[0]
             hop2_est = _chunk_valid_estimate(reads, self._cfg, mode, shape)
@@ -1480,11 +1676,13 @@ class KmerCounter:
                 self._grow(ctrl.store_cap)   # rehash round; then replay
             hop2_caps = _retry_hop2_caps(reads, self._cfg, self._num_pes,
                                          shape, ctrl, hop2_est)
+            compact_caps = _resolve_compact(reads, self._cfg, self._num_pes,
+                                            shape, ctrl.slack, est=hop2_est)
             fault = resilience.active_trace_fault(plan, ctrl.attempts)
             fn = _update_executable(self._cfg, self._mesh, self._axes,
                                     shape, str(reads.dtype), ctrl.slack,
                                     self._store_cap, hop2_caps=hop2_caps,
-                                    fault=fault)
+                                    compact_caps=compact_caps, fault=fault)
             nk, nc, raw_stats = fn(reads, self._skeys, self._scounts)
             stats = _host_stats(self._cfg, raw_stats)
             if not ctrl.observe(route_dropped=int(stats.overflow),
@@ -1505,6 +1703,9 @@ class KmerCounter:
         self._raw += int(stats.raw_kmers)
         self._sent += int(stats.sent_words)
         self._wire_bytes += int(stats.wire_bytes)
+        batch_fill = np.asarray(raw_stats[7], dtype=np.int64)
+        self._fill = (batch_fill if self._fill is None
+                      else self._fill + batch_fill)
         return _stamp_retries(stats, ctrl.counts)
 
     # --- the spill tier (core/spill.py) --------------------------------------
@@ -1525,12 +1726,19 @@ class KmerCounter:
         its live (key, count) entries into their bins and shrink it --
         from here on batches spill and `finalize()` drains bins."""
         cfg = self._cfg
+        n_bins = cfg.spill_bins
+        if n_bins is None:
+            # size the disk partition so each bin's drain-time fold lands
+            # near the store capacity the rehash ladder could afford
+            n_bins = spill.auto_bins(self._distinct_est, self._num_pes,
+                                     self._store_cap, cfg.store_slack)
         meta = {"transport": cfg.transport_impl, "k": cfg.k,
                 "bits_per_symbol": cfg.bits_per_symbol,
                 "canonical": cfg.canonical,
-                "minimizer_len": cfg.minimizer_len}
+                "minimizer_len": cfg.minimizer_len,
+                "minimizer_order": cfg.minimizer_order}
         self._spill = spill.SpillWriter(
-            cfg.spill_dir, cfg.spill_bins, meta=meta,
+            cfg.spill_dir, n_bins, meta=meta,
             flush_bytes=cfg.spill_flush_bytes, fault=self._spill_fault())
         if self._skeys is not None:
             keys = np.asarray(self._skeys)
@@ -1540,7 +1748,7 @@ class KmerCounter:
             if live.any():
                 k_live = keys[live]
                 okeys = _ownership_keys(jnp.asarray(k_live), cfg)
-                bins = np.asarray(spill.bin_of(okeys, cfg.spill_bins))
+                bins = np.asarray(spill.bin_of(okeys, n_bins))
                 self._spill.add_pairs(bins, k_live, counts[live])
             self._spill.commit()
             # release the pressured store: the tier owns the counts now
@@ -1587,7 +1795,7 @@ class KmerCounter:
             fault = resilience.active_trace_fault(plan, ctrl.attempts)
             fn = _spill_route_executable(cfg, self._mesh, self._axes, shape,
                                          str(reads.dtype), ctrl.slack,
-                                         fault=fault)
+                                         w.n_bins, fault=fault)
             copier = spill.AsyncHostCopier(cfg.spill_host_budget_bytes)
             parts = []
             for c in range(n_chunks):
@@ -1597,8 +1805,8 @@ class KmerCounter:
                     self._absorb_spill(host, mode)
             for host in copier.drain():
                 self._absorb_spill(host, mode)
-            rs = [sum(int(p[i]) for p in parts)
-                  for i in range(STATS_FIELDS)]
+            rs = [sum(int(p[i]) for p in parts) for i in range(7)]
+            fill = np.sum([np.asarray(p[7]) for p in parts], axis=0)
             if not ctrl.observe(route_dropped=rs[0], hop2_dropped=rs[6]):
                 w.commit()             # seal this batch into the manifest
                 break
@@ -1612,11 +1820,15 @@ class KmerCounter:
         self._raw += rs[5]
         self._sent += rs[2]
         self._wire_bytes += wire
+        fill = fill.astype(np.int64)
+        self._fill = fill if self._fill is None else self._fill + fill
+        lmm, p99 = _imbalance(fill)
         stats = DAKCStats(
             overflow=0, sent_words=rs[2], wire_bytes=np.int64(wire),
             raw_kmers=rs[5], num_global_syncs=3, store_overflow=0,
-            hop2_dropped=rs[6], spilled_bins=w.spilled_bins,
-            spilled_bytes=w.spilled_bytes, bins_folded=self._bins_folded)
+            hop2_dropped=rs[6], load_max_over_mean=lmm, owner_fill_p99=p99,
+            spilled_bins=w.spilled_bins, spilled_bytes=w.spilled_bytes,
+            bins_folded=self._bins_folded)
         return _stamp_retries(stats, ctrl.counts)
 
     def _drain_bins(self) -> Tuple[AccumResult, int]:
@@ -1694,6 +1906,8 @@ class KmerCounter:
         than once; the store keeps accepting updates in between). With
         the spill tier engaged this is the DRAIN: per-bin fold + compact
         (`_drain_bins`), host-resident AccumResult, same layout."""
+        lmm, p99 = (_imbalance(self._fill) if self._fill is not None
+                    else (0.0, 0))
         if self._spill is not None:
             result, folded = self._drain_bins()
             self._bins_folded = folded
@@ -1702,6 +1916,7 @@ class KmerCounter:
                 wire_bytes=np.int64(self._wire_bytes),
                 raw_kmers=np.int64(self._raw), num_global_syncs=3,
                 store_overflow=np.int64(0),
+                load_max_over_mean=lmm, owner_fill_p99=p99,
                 spilled_bins=self._spill.spilled_bins,
                 spilled_bytes=self._spill.spilled_bytes,
                 bins_folded=folded)
@@ -1719,7 +1934,8 @@ class KmerCounter:
             overflow=np.int64(0), sent_words=np.int64(self._sent),
             wire_bytes=np.int64(self._wire_bytes),
             raw_kmers=np.int64(self._raw), num_global_syncs=3,
-            store_overflow=np.int64(0))
+            store_overflow=np.int64(0),
+            load_max_over_mean=lmm, owner_fill_p99=p99)
         return result, _stamp_retries(stats, self._retries)
 
     # --- durability ----------------------------------------------------------
@@ -1753,6 +1969,7 @@ class KmerCounter:
             "sent": self._sent,
             "wire_bytes": self._wire_bytes,
             "n_updates": self._n_updates,
+            "distinct_est": self._distinct_est,
             "retries": dict(self._retries),
             # bounded round history + the spill tier's manifest: a run
             # killed mid-spill restores with the checkpoint's view of the
@@ -1807,6 +2024,8 @@ class KmerCounter:
         self._sent = int(extra["sent"])
         self._wire_bytes = int(extra["wire_bytes"])
         self._n_updates = int(extra["n_updates"])
+        de = extra.get("distinct_est")
+        self._distinct_est = None if de is None else int(de)
         saved_retries = extra.get("retries", {})
         self._retries = {c: int(saved_retries.get(c, 0))
                          for c in resilience.CAUSES}
@@ -1820,7 +2039,10 @@ class KmerCounter:
                     "checkpoint has an engaged spill tier; restoring it "
                     "needs a cfg with spill enabled and the spill_dir the "
                     "bins live under")
-            if int(sp["n_bins"]) != cfg.spill_bins:
+            # spill_bins=None adopts the checkpoint's partition as-is;
+            # an explicit pin must match it (bins partition k-mer space)
+            if (cfg.spill_bins is not None
+                    and int(sp["n_bins"]) != cfg.spill_bins):
                 raise ValueError(
                     f"checkpoint spilled into {sp['n_bins']} bins; "
                     f"cfg.spill_bins={cfg.spill_bins} would repartition "

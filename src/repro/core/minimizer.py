@@ -13,13 +13,14 @@ count store, so counts stay exact while wire volume drops by roughly
 
 Definitions (m = minimizer length, w = k - m + 1 m-mers per k-mer window):
 
-- The minimizer of a k-mer is the minimum of the w m-mer words it contains
-  (canonical m-mers -- min(fwd, revcomp) -- when the pipeline counts
-  canonical k-mers, so a read and its reverse complement select the same
-  minimizer values). Ties break to the value: runs are cut only when the
-  minimizer VALUE changes, so equal-value ties never split a run. The
-  minimum itself comes from the Pallas sliding-window kernel
-  (kernels/minimizer.py) with a jnp oracle in kernels/ref.py.
+- The minimizer of a k-mer is the m-mer word, among the w m-mer words the
+  k-mer contains (canonical m-mers -- min(fwd, revcomp) -- when the
+  pipeline counts canonical k-mers, so a read and its reverse complement
+  select the same minimizer values), that is minimal under the configured
+  **comparison order** (below). Ties break to the value: runs are cut only
+  when the minimizer VALUE changes, so equal-value ties never split a run.
+  The minimum itself comes from the Pallas sliding-window kernels
+  (kernels/minimizer.py) with jnp oracles in kernels/ref.py.
 - A super-k-mer is a maximal run of consecutive k-mer positions within one
   read whose minimizer values are equal: between k and k + w - 1 bases.
   Every k-mer of the read belongs to exactly one super-k-mer (the runs
@@ -30,6 +31,29 @@ Definitions (m = minimizer length, w = k - m + 1 m-mers per k-mer window):
   just under a different (minimizer-keyed) hash family than the 'kmer'
   transport. Global histograms are identical; the per-PE partition of
   k-mer space differs.
+
+The order-family contract (`order='plain' | 'hashed'`):
+
+- 'plain' compares m-mer words lexicographically -- the classic KMC 2 /
+  MSPKmerCounter signature order, and this repo's bit-parity oracle. Its
+  known pathology (KMC 3, Kokot et al.): low-complexity words sort first
+  (poly-A packs to word 0), so they win every window they touch, runs
+  stretch to the w-cap, and a handful of minimizer values -- hence a
+  handful of owner PEs -- absorb most of the wire traffic.
+- 'hashed' compares on `owner.order_key(m-mer)`, a fourth avalanche hash
+  family decorrelated from the owner/slot/bin families, so the "smallest"
+  m-mer of each window is uniform over m-mer space regardless of sequence
+  content. The hash is bijective (a salted splitmix/murmur finalizer
+  composition), so key equality is value equality: the run-segmentation
+  structure (cut on value change, w-cap) is untouched -- only WHICH m-mer
+  wins each window changes, evening out run lengths and owner load.
+- Under BOTH orders the selected minimizer is still the m-mer VALUE (the
+  hashed key never leaves the comparison), and ownership stays a pure
+  function of the canonical k-mer content: `owner_pe(minimizer value)`.
+  Sender and receiver must simply agree on `order` (it is part of the
+  ownership fingerprint fabsp checkpoints carry). Histograms are identical
+  across orders as sorted (kmer, count) sets; per-PE partition and run
+  statistics differ.
 
 Wire format (fixed-word tiles + length headers): a super-k-mer slot is
 `superkmer_words(k, m)` payload words of the k-mer dtype plus one int32
@@ -57,7 +81,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import encoding
+from repro.core import encoding, owner
 from repro.kernels import ops
 
 
@@ -114,30 +138,40 @@ class SuperKmers(NamedTuple):
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3),
                    static_argnames=("k", "m", "bits_per_symbol", "canonical",
-                                    "canonical_impl"))
+                                    "canonical_impl", "order"))
 def window_minimizers(codes: jax.Array, k: int, m: int,
                       bits_per_symbol: int = 2, *, canonical: bool = False,
-                      canonical_impl: str = "fused") -> jax.Array:
+                      canonical_impl: str = "fused",
+                      order: str = "plain") -> jax.Array:
     """(n_reads, mlen) codes -> (n_reads, mlen - k + 1) minimizer words.
 
-    Entry p is the minimum (canonical) m-mer word of the k-mer starting at
-    base p. The sliding minimum runs on the Pallas kernel
-    (kernels/minimizer.py); m-mer packing is the same fused shift-or loop
-    k-mer extraction uses.
+    Entry p is the (canonical) m-mer word of the k-mer starting at base p
+    that is minimal under `order` ('plain' = lexicographic word comparison,
+    'hashed' = comparison on `owner.order_key`; module docstring has the
+    full contract). Either way the returned array holds m-mer VALUES. The
+    sliding minimum runs on the Pallas kernels (kernels/minimizer.py);
+    m-mer packing is the same fused shift-or loop k-mer extraction uses.
     """
     w = window_size(k, m)
     mmers = encoding.pack_kmers(codes, m, bits_per_symbol,
                                 canonical=canonical,
                                 canonical_impl=canonical_impl)
+    if order == "hashed":
+        # Min-by-key with the m-mer value riding along: the key lane decides,
+        # the value lane is what segmentation/ownership consume.
+        return ops.sliding_min_pair(owner.order_key(mmers), mmers, w)[1]
+    if order != "plain":
+        raise ValueError(f"unknown minimizer order {order!r}")
     return ops.sliding_min(mmers, w)
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3),
                    static_argnames=("k", "m", "bits_per_symbol", "canonical",
-                                    "canonical_impl"))
+                                    "canonical_impl", "order"))
 def segment_superkmers(codes: jax.Array, k: int, m: int,
                        bits_per_symbol: int = 2, *, canonical: bool = False,
-                       canonical_impl: str = "fused") -> SuperKmers:
+                       canonical_impl: str = "fused",
+                       order: str = "plain") -> SuperKmers:
     """Segment reads into super-k-mers and pack them for the wire.
 
     codes: (n_reads, mlen) symbol codes. Returns `SuperKmers` with
@@ -158,7 +192,7 @@ def segment_superkmers(codes: jax.Array, k: int, m: int,
 
     minz = window_minimizers(codes, k, m, bits_per_symbol,
                              canonical=canonical,
-                             canonical_impl=canonical_impl)
+                             canonical_impl=canonical_impl, order=order)
     # Run starts: position 0, plus every minimizer-VALUE change. A repeated
     # minimizer value (poly-A, planted repeats) can hold the windowed min
     # constant for arbitrarily many positions, so value runs are additionally
@@ -241,10 +275,11 @@ def superkmer_to_kmers(words: jax.Array, lengths: jax.Array, k: int, m: int,
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3),
                    static_argnames=("k", "m", "bits_per_symbol", "canonical",
-                                    "canonical_impl"))
+                                    "canonical_impl", "order"))
 def superkmer_minimizers(words: jax.Array, k: int, m: int,
                          bits_per_symbol: int = 2, *, canonical: bool = False,
-                         canonical_impl: str = "fused") -> jax.Array:
+                         canonical_impl: str = "fused",
+                         order: str = "plain") -> jax.Array:
     """Receiver side: recover each slot's minimizer from its packed payload.
 
     A super-k-mer is by construction a run whose k-mers all share one
@@ -267,5 +302,5 @@ def superkmer_minimizers(words: jax.Array, k: int, m: int,
          .astype(jnp.uint8) for t in range(lmax)], axis=1)
     minz = window_minimizers(codes, k, m, bits_per_symbol,
                              canonical=canonical,
-                             canonical_impl=canonical_impl)
+                             canonical_impl=canonical_impl, order=order)
     return minz[:, 0]

@@ -50,6 +50,10 @@ def hash_kmers(kmers: jax.Array) -> jax.Array:
 _SLOT_SALT32 = 0x9E3779B9           # 2**32 / golden ratio
 _SLOT_SALT64 = 0x9E3779B97F4A7C15   # 2**64 / golden ratio
 
+# Salts for the fourth family (hashed minimizer comparison order).
+_ORDER_SALT32 = 0x165667B1          # splitmix32 increment fragment
+_ORDER_SALT64 = 0x165667B19E3779F9  # xxh64 PRIME64_5-style constant
+
 
 def slot_hash(kmers: jax.Array) -> jax.Array:
     """Second avalanche hash, independent of `hash_kmers`/`owner_pe`.
@@ -63,6 +67,30 @@ def slot_hash(kmers: jax.Array) -> jax.Array:
     if kmers.dtype == jnp.uint64:
         return _mix64(_mix64(kmers) ^ jnp.uint64(_SLOT_SALT64))
     return _mix32(_mix32(kmers) ^ jnp.uint32(_SLOT_SALT32))
+
+
+def order_key(mmers: jax.Array) -> jax.Array:
+    """Fourth avalanche family: the *comparison key* of the hashed minimizer
+    order (minimizer_order='hashed').
+
+    The plain minimizer order compares m-mer words lexicographically, which
+    makes low-complexity words (poly-A packs to 0) win every window they
+    touch -- long super-k-mer runs collapse onto a handful of hot minimizer
+    values and hence hot owner PEs. Comparing on `order_key(m-mer)` instead
+    spreads the "smallest word" role uniformly over m-mer space.
+
+    The mixers are bijective, so key equality <=> m-mer equality: run
+    segmentation (cut on value change) keeps exactly the same structure,
+    only WHICH m-mer wins each window changes. Ownership still hashes the
+    winning m-mer VALUE through `owner_pe` -- the key never leaves the
+    comparison -- so a distinct salt decorrelates this family from
+    `hash_kmers`/`owner_pe` (family 1, unsalted), `slot_hash` (family 2,
+    golden-ratio salt) and spill.bin_of (family 3): correlated families
+    would re-concentrate the very load this order exists to spread.
+    """
+    if mmers.dtype == jnp.uint64:
+        return _mix64(_mix64(mmers) ^ jnp.uint64(_ORDER_SALT64))
+    return _mix32(_mix32(mmers) ^ jnp.uint32(_ORDER_SALT32))
 
 
 @functools.partial(jax.jit, static_argnums=(1,))

@@ -82,6 +82,28 @@ def bin_of(keys: jnp.ndarray, n_bins: int) -> jnp.ndarray:
     return (h % h.dtype.type(n_bins)).astype(jnp.int32)
 
 
+def auto_bins(distinct_est: Optional[int], num_pes: int,
+              per_pe_cap: Optional[int], store_slack: float = 1.5, *,
+              floor: int = 4, ceiling: int = 4096) -> int:
+    """Bin count sized from the sample-based global distinct estimate
+    (fabsp's `store_sizing='sample'` machinery) so each bin's drain-time
+    fold fits the per-PE store capacity the rehash ladder stopped at:
+    smallest power of two B with distinct_est * store_slack / (P * B)
+    <= per_pe_cap. Power of two for executable-cache stability (the drain
+    store capacity derives from per-bin record counts), clamped to
+    [floor, ceiling] -- too few bins defeats the tier (one bin == the
+    store that just overflowed), too many drowns the manifest in tiny
+    segments. Falls back to 16 bins (the historical pinned default) when
+    no estimate or capacity is in hand (spill='always' before any in-core
+    batch, store_sizing='bound', an uninformative sample).
+    """
+    if distinct_est is None or not per_pe_cap:
+        return 16
+    need = math.ceil(distinct_est * store_slack / (num_pes * per_pe_cap))
+    b = 1 << max(0, int(need) - 1).bit_length()
+    return max(floor, min(ceiling, b))
+
+
 class SpillCorrupt(RuntimeError):
     """A sealed bin segment failed its checksum / size check on read."""
 

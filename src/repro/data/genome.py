@@ -85,6 +85,69 @@ def pad_reads_for_mesh(reads: np.ndarray, num_pes: int, chunk_reads: int,
 
 
 # ---------------------------------------------------------------------------
+# Adversarial-skew generators (the minimizer-order / load-balance drills:
+# benchmarks/load_balance.py, the skew tests, kc_dryrun --skew)
+# ---------------------------------------------------------------------------
+
+
+def poly_a_reads(n_reads: int, read_len: int, *, run_frac: float = 0.6,
+                 seed: int = 0) -> np.ndarray:
+    """Low-complexity adversary: random background with a planted poly-A
+    run covering `run_frac` of every read (random offset).
+
+    The lexicographic ('plain') minimizer order is pathological here:
+    AAAA... packs to m-mer word 0, so it wins every window it appears in
+    and the run's whole k-mer traffic routes to the single PE owning
+    minimizer 0. The hashed order picks an avalanche-uniform m-mer per
+    window instead, spreading the same k-mers across owners. Deliberately
+    NOT pure poly-A -- with only one distinct m-mer in a window both
+    orders must select it, and no order can spread a single-key load.
+    """
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(0, 4, size=(n_reads, read_len), dtype=np.uint8)
+    run_len = max(1, min(read_len, int(read_len * run_frac)))
+    starts = rng.integers(0, read_len - run_len + 1, size=n_reads)
+    idx = starts[:, None] + np.arange(run_len)[None, :]
+    reads[np.arange(n_reads)[:, None], idx] = BASE_TO_CODE["A"]
+    return reads
+
+
+def power_law_minimizer_reads(n_reads: int, read_len: int, m: int, *,
+                              alpha: float = 1.5, pool: int = 64,
+                              seed: int = 0) -> np.ndarray:
+    """Zipf-skew adversary: plant m-mer motifs from the `pool`
+    lexicographically SMALLEST m-mers (words 0..pool-1) into random
+    background, motif i drawn with probability ~ (i+1)^-alpha.
+
+    Small m-mer words dominate plain-order windows (each planted motif
+    beats the random background around it with high probability), so the
+    per-owner minimizer load inherits the Zipf tail -- the popular-motif
+    owners see power-law traffic. Under the hashed order the planted
+    motifs hold no special rank and load re-spreads. Roughly one motif
+    site per 2m bases per read.
+    """
+    if not 1 <= m <= 15:
+        raise ValueError(f"m={m} outside the sane motif range [1, 15]")
+    if read_len < m:
+        raise ValueError(f"read_len {read_len} shorter than m {m}")
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(0, 4, size=(n_reads, read_len), dtype=np.uint8)
+    pool = min(pool, 4 ** m)
+    probs = np.arange(1, pool + 1, dtype=np.float64) ** -alpha
+    probs /= probs.sum()
+    shifts = 2 * np.arange(m - 1, -1, -1)
+    motifs = ((np.arange(pool)[:, None] >> shifts[None, :]) & 3) \
+        .astype(np.uint8)
+    n_sites = max(1, read_len // (2 * m))
+    sites = rng.integers(0, read_len - m + 1, size=(n_reads, n_sites))
+    choices = rng.choice(pool, size=(n_reads, n_sites), p=probs)
+    idx = sites[:, :, None] + np.arange(m)[None, None, :]
+    rows = np.broadcast_to(np.arange(n_reads)[:, None, None], idx.shape)
+    reads[rows, idx] = motifs[choices]
+    return reads
+
+
+# ---------------------------------------------------------------------------
 # FASTA/Q codecs (host-side; the paper excludes I/O from timing, as do we)
 # ---------------------------------------------------------------------------
 

@@ -21,6 +21,14 @@ the tile, so one lookahead block always suffices.
 
 The rows axis (reads) is blocked like kmer_extract: each instance owns a
 (block_rows, tile) slab in VMEM.
+
+`sliding_min_pair_pallas` is the keyed variant for the hashed minimizer
+order (core/owner.py family 4): the minimum is taken over a KEY lane while
+the m-mer VALUE lane rides along, so the kernel returns the value whose key
+won each window (min-by-key). Strict `<` keeps the earliest position on key
+ties; the keys are a bijective hash of the values, so tied keys imply tied
+values and the choice is unobservable. Key padding uses the key dtype's max,
+which is never strictly less than any in-window key, so padding never wins.
 """
 
 from __future__ import annotations
@@ -79,3 +87,67 @@ def sliding_min_pallas(vals: jax.Array, window: int, block_rows: int = 8,
         interpret=interpret,
     )(padded, padded)
     return out[:, :n_out]
+
+
+def _sliding_min_pair_kernel(kcur_ref, knxt_ref, vcur_ref, vnxt_ref,
+                             kout_ref, vout_ref, *, window: int):
+    kcur = kcur_ref[...]                     # (rows, tile) comparison keys
+    vcur = vcur_ref[...]                     # (rows, tile) carried values
+    tile = kcur.shape[-1]
+    kext = jnp.concatenate([kcur, knxt_ref[...]], axis=-1)
+    vext = jnp.concatenate([vcur, vnxt_ref[...]], axis=-1)
+    ak = jax.lax.slice_in_dim(kext, 0, tile, axis=-1)
+    av = jax.lax.slice_in_dim(vext, 0, tile, axis=-1)
+    for j in range(1, window):               # window static: unrolled min-by-key
+        nk = jax.lax.slice_in_dim(kext, j, j + tile, axis=-1)
+        nv = jax.lax.slice_in_dim(vext, j, j + tile, axis=-1)
+        take = nk < ak                       # strict: earliest wins key ties
+        ak = jnp.minimum(ak, nk)
+        av = jnp.where(take, nv, av)
+    kout_ref[...] = ak
+    vout_ref[...] = av
+
+
+def sliding_min_pair_pallas(keys: jax.Array, vals: jax.Array, window: int,
+                            block_rows: int = 8, tile: int = 512,
+                            interpret: bool = False):
+    """Min-by-key sliding window: (keys, vals) (n_rows, n_pos) each ->
+    ((n_rows, n_out) keys, (n_rows, n_out) vals) where out position p holds
+    the key/value pair with the minimum KEY over [p, p + window). Earliest
+    position wins key ties (strict `<`); key padding is the key dtype's max,
+    so trailing partial windows never select padding.
+    """
+    if keys.shape != vals.shape:
+        raise ValueError(f"keys {keys.shape} != vals {vals.shape}")
+    n_rows, n_pos = keys.shape
+    if window < 1 or window > n_pos:
+        raise ValueError(f"window {window} outside [1, {n_pos}]")
+    n_out = n_pos - window + 1
+    if n_rows % block_rows != 0:
+        raise ValueError(
+            f"n_rows {n_rows} % block_rows {block_rows} != 0")
+    tile = max(window, min(tile, n_out))
+    n_tiles = -(-n_out // tile)
+    pad = (n_tiles + 1) * tile - n_pos
+    kpad = jnp.concatenate(
+        [keys, jnp.full((n_rows, pad), jnp.iinfo(keys.dtype).max,
+                        keys.dtype)], axis=-1)
+    vpad = jnp.concatenate(
+        [vals, jnp.zeros((n_rows, pad), vals.dtype)], axis=-1)
+    grid = (n_rows // block_rows, n_tiles)
+    cur = lambda i, j: (i, j)
+    nxt = lambda i, j: (i, j + 1)
+    kout, vout = pl.pallas_call(
+        functools.partial(_sliding_min_pair_kernel, window=window),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, tile), cur),
+                  pl.BlockSpec((block_rows, tile), nxt),
+                  pl.BlockSpec((block_rows, tile), cur),
+                  pl.BlockSpec((block_rows, tile), nxt)],
+        out_specs=(pl.BlockSpec((block_rows, tile), cur),
+                   pl.BlockSpec((block_rows, tile), cur)),
+        out_shape=(jax.ShapeDtypeStruct((n_rows, n_tiles * tile), keys.dtype),
+                   jax.ShapeDtypeStruct((n_rows, n_tiles * tile), vals.dtype)),
+        interpret=interpret,
+    )(kpad, kpad, vpad, vpad)
+    return kout[:, :n_out], vout[:, :n_out]

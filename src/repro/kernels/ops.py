@@ -20,7 +20,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.hash_table import hash_insert_pallas
 from repro.kernels.kmer_extract import kmer_extract_pallas
-from repro.kernels.minimizer import sliding_min_pallas
+from repro.kernels.minimizer import (sliding_min_pallas,
+                                     sliding_min_pair_pallas)
 from repro.kernels.radix_hist import radix_hist_pallas
 from repro.kernels.radix_partition import (PartitionPlan, bucket_hist_pallas,
                                            bucket_positions_pallas,
@@ -56,6 +57,19 @@ def sliding_min(vals: jax.Array, window: int, block_rows: int = 8,
         block_rows = 1
     return sliding_min_pallas(vals, window, block_rows=block_rows, tile=tile,
                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def sliding_min_pair(keys: jax.Array, vals: jax.Array, window: int,
+                     block_rows: int = 8, tile: int = 512):
+    """Min-by-KEY sliding window carrying a value lane: ((n_rows, n_out)
+    keys, (n_rows, n_out) vals) -- the hashed minimizer order's selection
+    primitive (kernels/minimizer.py)."""
+    n_rows = keys.shape[0]
+    if n_rows % block_rows != 0:
+        block_rows = 1
+    return sliding_min_pair_pallas(keys, vals, window, block_rows=block_rows,
+                                   tile=tile, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3))

@@ -48,6 +48,24 @@ def sliding_min_ref(vals: jax.Array, window: int) -> jax.Array:
     return acc
 
 
+def sliding_min_pair_ref(keys: jax.Array, vals: jax.Array, window: int):
+    """Min-by-key oracle of `sliding_min_pair_pallas`: out position p holds
+    the (key, value) whose KEY is minimal over [p, p + window), earliest
+    position winning key ties (strict `<` take rule -- bit-identical to the
+    kernel; with bijective hash keys, tied keys imply tied values anyway).
+    """
+    n_out = keys.shape[-1] - window + 1
+    ak = jax.lax.slice_in_dim(keys, 0, n_out, axis=-1)
+    av = jax.lax.slice_in_dim(vals, 0, n_out, axis=-1)
+    for j in range(1, window):
+        nk = jax.lax.slice_in_dim(keys, j, j + n_out, axis=-1)
+        nv = jax.lax.slice_in_dim(vals, j, j + n_out, axis=-1)
+        take = nk < ak
+        ak = jnp.minimum(ak, nk)
+        av = jnp.where(take, nv, av)
+    return ak, av
+
+
 # --- radix_hist -------------------------------------------------------------
 
 def radix_hist_ref(keys: jax.Array, shift: int, digit_bits: int,

@@ -50,8 +50,9 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
              chunk_reads: int, slack: float = 1.5,
              receiver: str = "stream", transport: str = "kmer",
              minimizer_len: int = 15, topology: str = "1d",
-             hop2: str = "padded",
-             hop2_occupancy: float = None) -> dict:
+             hop2: str = "padded", hop2_occupancy: float = None,
+             minimizer_order: str = "plain",
+             compact: str = "off") -> dict:
     num_pes = mesh.size
     if topology == "2d":
         # near-square (row, col) factorization of the chip count: largest
@@ -70,7 +71,8 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
     cfg = DAKCConfig(k=k, chunk_reads=chunk_reads, slack=slack,
                      receiver_impl=receiver, transport_impl=transport,
                      minimizer_len=minimizer_len, topology=topology,
-                     hop2_impl=hop2)
+                     hop2_impl=hop2, minimizer_order=minimizer_order,
+                     compact_impl=compact)
     mode, cap_n, cap_h = _plan_caps(cfg, num_pes, (n_reads, read_len), slack)
     store_cap = fabsp._default_store_capacity(cfg, (n_reads, read_len),
                                               num_pes)
@@ -87,12 +89,18 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
         else:
             hop2_caps = fabsp._resolve_hop2_caps(
                 None, cfg, num_pes, (n_reads, read_len), slack)
+    # Pre-route compaction: shape-only lowering has no reads to sample, so
+    # the density estimate degrades to the instance bound and the seam
+    # degenerates to a no-op (compact_caps=None) -- same discipline as the
+    # compact hop 2 above.
+    compact_caps = fabsp._resolve_compact(None, cfg, num_pes,
+                                          (n_reads, read_len), slack)
 
     fn = jax.jit(compat.shard_map(
         functools.partial(_local_count, cfg=cfg, num_pes=num_pes,
                           cap_n=cap_n, cap_h=cap_h, store_cap=store_cap,
                           mode=mode, axis_names=axis_names, grid=grid,
-                          hop2_caps=hop2_caps),
+                          hop2_caps=hop2_caps, compact_caps=compact_caps),
         mesh=flat_mesh, in_specs=(spec,),
         out_specs=(AccumResult(unique=spec, counts=spec, num_unique=spec),
                    (P(),) * fabsp.STATS_FIELDS)))
@@ -110,6 +118,9 @@ def lower_kc(n_reads: int, read_len: int, k: int, mesh, *,
         "transport_impl": transport, "topology": topology,
         "hop2_impl": hop2 if topology == "2d" else "n/a",
         "hop2_caps": list(hop2_caps) if hop2_caps else None,
+        "minimizer_order": minimizer_order,
+        "compact_impl": compact,
+        "compact_caps": list(compact_caps) if compact_caps else None,
         "store_capacity_per_pe": store_cap if receiver == "stream" else 0,
         "mesh": dict(mesh.shape),
         "compile_seconds": round(time.time() - t0, 2),
@@ -293,6 +304,47 @@ def run_spill(spill_dir: str = None) -> None:
     print("spill demo OK")
 
 
+def run_skew(skew: str, order: str, compact: str) -> None:
+    """Skew demo on a small real workload (4 devices): count an
+    adversarial corpus under the selected minimizer order(s) and print the
+    per-PE imbalance stats (`DAKCStats.load_max_over_mean` /
+    `owner_fill_p99`, from the psum'd hop-1 fill histogram). Every run is
+    checked against the serial oracle -- the orders move LOAD, never
+    counts."""
+    from repro.core import serial
+    from repro.data import genome
+
+    k, m, rl, n = 13, 7, 48, 256
+    if skew == "polya":
+        reads_np = genome.poly_a_reads(n, rl, seed=3)
+    elif skew == "powerlaw":
+        reads_np = genome.power_law_minimizer_reads(n, rl, m, alpha=1.5,
+                                                    seed=4)
+    else:
+        reads_np = genome.sample_reads(genome.ReadSetSpec(
+            genome_bases=1 << 14, n_reads=n, read_len=rl, seed=7))
+    reads = jnp.asarray(reads_np)
+    oracle = serial.count_kmers_python(reads_np, k)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:4]), ("pe",))
+    orders = ("plain", "hashed") if order == "both" else (order,)
+    print(f"skew demo: corpus={skew} compact={compact} "
+          f"(4 PEs, k={k}, m={m}, {n} reads x {rl}bp, superkmer)")
+    for o in orders:
+        cfg = DAKCConfig(k=k, chunk_reads=64, transport_impl="superkmer",
+                         minimizer_len=m, minimizer_order=o,
+                         compact_impl=compact)
+        res, stats = fabsp.count_kmers(reads, mesh, cfg)
+        if _merged_hist(res) != oracle:
+            raise SystemExit(f"FAIL: order={o} histogram diverged from "
+                             f"the serial oracle")
+        print(f"  order={o:6s} load_max_over_mean="
+              f"{stats.load_max_over_mean:.3f} "
+              f"owner_fill_p99={stats.owner_fill_p99} "
+              f"wire_bytes={stats.wire_bytes} "
+              f"retries(route-slack)={stats.retry_route_slack}")
+    print("skew demo OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     # Synthetic 30 (paper Table V): 357,913,900 reads x 150nt. Default here
@@ -339,6 +391,21 @@ def main() -> None:
                          "instead of the lowering dry-run")
     ap.add_argument("--spill-dir", default=None,
                     help="bin directory for --spill (default: a temp dir)")
+    ap.add_argument("--skew", choices=["none", "polya", "powerlaw"],
+                    default=None,
+                    help="run the skew/load-balance demo on a small real "
+                         "workload (adversarial corpus -> per-PE imbalance "
+                         "stats) instead of the lowering dry-run")
+    ap.add_argument("--minimizer-order", choices=["plain", "hashed", "both"],
+                    default="both",
+                    help="minimizer comparison order (DAKCConfig."
+                         "minimizer_order); 'both' runs plain AND hashed "
+                         "in the --skew demo (lowering uses 'plain')")
+    ap.add_argument("--compact", choices=["off", "prefix"], default="off",
+                    help="pre-route slot compaction "
+                         "(DAKCConfig.compact_impl); in the lowering "
+                         "dry-run the shape-only density estimate "
+                         "degenerates 'prefix' to a no-op")
     ap.add_argument("--out", default="experiments/dryrun_kc.json")
     args = ap.parse_args()
     if args.inject:
@@ -347,6 +414,9 @@ def main() -> None:
     if args.spill:
         run_spill(args.spill_dir)
         return
+    if args.skew is not None:
+        run_skew(args.skew, args.minimizer_order, args.compact)
+        return
     n_reads = 357_913_900 if args.full else args.reads
     # pad to a mesh/chunk quantum
     mesh = make_production_mesh(multi_pod=args.multi_pod)
@@ -354,12 +424,15 @@ def main() -> None:
     n_reads = (n_reads // quantum) * quantum
     receivers = (["stream", "stacked"] if args.receiver == "both"
                  else [args.receiver])
+    order = ("plain" if args.minimizer_order == "both"
+             else args.minimizer_order)
     recs = {r: lower_kc(n_reads, args.read_len, args.k, mesh,
                         chunk_reads=args.chunk_reads, receiver=r,
                         transport=args.transport,
                         minimizer_len=args.minimizer_len,
                         topology=args.topology, hop2=args.hop2,
-                        hop2_occupancy=args.hop2_occupancy)
+                        hop2_occupancy=args.hop2_occupancy,
+                        minimizer_order=order, compact=args.compact)
             for r in receivers}
     rec = recs[receivers[0]]
     if len(recs) > 1:
