@@ -1,0 +1,138 @@
+"""Query-service load benchmark: QPS and latency tails per shape bucket.
+
+The serving claim of the query path (core/query.py) is that a request
+stream of arbitrary batch sizes amortizes to one compiled executable per
+pow2 shape bucket, each served in a single deterministic routed exchange
+(no retries, no rehash). This load generator measures that claim:
+
+- **batch-size sweep**: for each batch-size bucket, fire a stream of
+  randomized mixed hit/miss requests and record throughput (queries/s)
+  with p50/p99 per-request latency (np.percentile over the request wall
+  times, compile excluded -- the bucket is warmed first, as a server
+  would be after its first request).
+- **miss-rate sweep**: fixed batch size, miss fraction 0 -> 1. Misses
+  probe shorter walks on average (an empty slot ends the walk), so this
+  sweep bounds how much the workload mix moves the numbers.
+
+Every rep asserts exact counts against the finalize() histogram --
+correctness rides the benchmark, as everywhere in this suite.
+
+CPU caveat as everywhere: absolute QPS is not TPU-representative; the
+record tracks structure -- tail/median ratios, bucket scaling, and the
+probe-depth/miss-rate interaction -- and stamps the backend.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks.common import SCALE, SMOKE, report, write_record
+from repro.core import fabsp
+from repro.data import genome
+
+K = 13
+CHUNK_READS = 32
+BATCH_SIZES = [64, 256, 1024] if SMOKE else [64, 256, 1024, 4096]
+MISS_RATES = [0.0, 0.5, 1.0]
+N_REQUESTS = 5 if SMOKE else max(20, int(20 * SCALE))
+
+
+def _oracle(kc) -> dict:
+    res, _ = kc.finalize()
+    nsh = res.num_unique.shape[0]
+    L = res.unique.shape[0] // nsh
+    u = np.asarray(res.unique).reshape(nsh, L)
+    c = np.asarray(res.counts).reshape(nsh, L)
+    return {int(u[s, i]): int(c[s, i])
+            for s in range(nsh) for i in range(int(res.num_unique[s]))}
+
+
+def _request(rng, uniq, batch, miss_rate):
+    n_miss = int(round(batch * miss_rate))
+    q = np.concatenate([
+        rng.choice(uniq, batch - n_miss) if batch > n_miss
+        else np.zeros(0, uniq.dtype),
+        rng.integers(1 << 27, 1 << 28, n_miss).astype(uniq.dtype),
+    ])
+    rng.shuffle(q)
+    return q
+
+
+def _serve_stream(kc, oracle, uniq, batch, miss_rate, seed=0):
+    """N_REQUESTS randomized requests of one bucket; returns the stat row.
+    Warm the bucket first (a server compiles once per bucket, then serves
+    from the cache), assert every response exact."""
+    rng = np.random.default_rng(seed)
+    kc.count(_request(rng, uniq, batch, miss_rate))     # compile warmup
+    lat = []
+    probe_avg = []
+    for _ in range(N_REQUESTS):
+        q = _request(rng, uniq, batch, miss_rate)
+        t0 = time.perf_counter()
+        got = kc.count(q)
+        lat.append(time.perf_counter() - t0)
+        want = np.asarray([oracle.get(int(x), 0) for x in q], np.int32)
+        assert np.array_equal(got, want), \
+            f"query stream diverged (batch={batch}, miss={miss_rate})"
+        probe_avg.append(kc.last_query_stats.probe_avg)
+    lat_arr = np.asarray(lat)
+    st = kc.last_query_stats
+    return {
+        "batch": batch, "miss_rate": miss_rate,
+        "n_requests": N_REQUESTS,
+        "qps": batch * N_REQUESTS / lat_arr.sum(),
+        "p50_ms": float(np.percentile(lat_arr, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat_arr, 99) * 1e3),
+        "n_local": st.n_local, "batch_fill": st.batch_fill,
+        "probe_avg": float(np.mean(probe_avg)),
+        "wire_bytes_per_batch": st.wire_bytes,
+    }
+
+
+def run() -> None:
+    n_reads = max(CHUNK_READS * 8,
+                  int(512 * SCALE) // CHUNK_READS * CHUNK_READS)
+    spec = genome.ReadSetSpec(genome_bases=4 * n_reads, n_reads=n_reads,
+                              read_len=100, heavy_hitter_frac=0.3, seed=4)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+    kc = fabsp.KmerCounter(mesh, fabsp.DAKCConfig(k=K,
+                                                  chunk_reads=CHUNK_READS))
+    kc.update(reads)
+    oracle = _oracle(kc)
+    uniq = np.asarray(sorted(oracle), np.uint32)
+
+    record: dict = {"schema": 1,
+                    "workload": {"k": K, "n_reads": n_reads,
+                                 "distinct_kmers": len(oracle),
+                                 "n_requests_per_cell": N_REQUESTS},
+                    "batch_sweep": [], "miss_sweep": []}
+
+    for batch in BATCH_SIZES:
+        row = _serve_stream(kc, oracle, uniq, batch, 0.5, seed=batch)
+        record["batch_sweep"].append(row)
+        report(f"query_service.batch{batch}",
+               row["p50_ms"] / 1e3 / batch,
+               f"qps={row['qps']:.0f} p50={row['p50_ms']:.2f}ms "
+               f"p99={row['p99_ms']:.2f}ms n_local={row['n_local']}")
+
+    for miss in MISS_RATES:
+        row = _serve_stream(kc, oracle, uniq, BATCH_SIZES[1], miss,
+                            seed=int(miss * 100))
+        record["miss_sweep"].append(row)
+        report(f"query_service.miss{int(miss * 100):03d}",
+               row["p50_ms"] / 1e3 / BATCH_SIZES[1],
+               f"qps={row['qps']:.0f} p99={row['p99_ms']:.2f}ms "
+               f"probe_avg={row['probe_avg']:.2f}")
+
+    if not SMOKE:
+        write_record("BENCH_query_service.json", record)
+
+
+if __name__ == "__main__":
+    run()

@@ -30,6 +30,7 @@ MODULES = [
     ("perf.superkmer_transport", "benchmarks.superkmer_transport"),
     ("perf.route_lanes", "benchmarks.route_lanes"),
     ("perf.spill_tier", "benchmarks.spill_tier"),
+    ("perf.query_service", "benchmarks.query_service"),
     ("perf.load_balance", "benchmarks.load_balance"),
     ("fig13.tuning", "benchmarks.tuning"),
     ("tab3+fig2.memory_overhead", "benchmarks.memory_overhead"),

@@ -142,3 +142,43 @@ with tempfile.TemporaryDirectory() as spill_dir:
           f"spilled_bytes={int(st_sp.spilled_bytes)} "
           f"bins_folded={int(st_sp.bins_folded)} "
           f"rehash rounds before engage={int(st_sp.retry_store_rehash)}")
+
+# --- online query service (the counting protocol in reverse) ----------------
+# The committed sharded store is a serving index: KmerCounter.count()
+# routes query words to their owner PEs, probes each shard in place with
+# the read-only lookup kernel, and ships counts back in request order --
+# overflow-free by construction (both hops route at capacity n_local), so
+# a query never retries and never rehashes.
+import time
+
+kc = fabsp.KmerCounter(mesh, fabsp.DAKCConfig(k=k, chunk_reads=64))
+kc.update(reads)
+res_q, _ = kc.finalize()
+nsh = mesh.size
+L = res_q.unique.shape[0] // nsh
+u_q = np.asarray(res_q.unique).reshape(nsh, L)
+c_q = np.asarray(res_q.counts).reshape(nsh, L)
+nu_q = np.asarray(res_q.num_unique)
+oracle = {int(u_q[s, i]): int(c_q[s, i])
+          for s in range(nsh) for i in range(int(nu_q[s]))}
+rng = np.random.default_rng(5)
+hits_q = rng.choice(np.asarray(sorted(oracle), dtype=u_q.dtype), 900)
+miss_q = rng.integers(0, 1 << 26, 124).astype(u_q.dtype)
+batch = np.concatenate([hits_q, miss_q])
+rng.shuffle(batch)
+got_q = kc.count(batch)                     # compiles the shape bucket
+assert np.array_equal(
+    got_q, np.asarray([oracle.get(int(x), 0) for x in batch], np.int32)
+), "query path diverged from finalize() histogram"
+t0 = time.perf_counter()
+n_rounds = 20
+for _ in range(n_rounds):
+    kc.count(batch)                         # served from the cached bucket
+dt_q = time.perf_counter() - t0
+st_q = kc.last_query_stats
+print(f"\nonline query service: {batch.size}-query batch exact vs "
+      f"finalize(); {n_rounds * batch.size / dt_q:,.0f} queries/s steady "
+      f"state")
+print(f"  shape bucket n_local={st_q.n_local} fill={st_q.batch_fill:.2f} "
+      f"probe_avg={st_q.probe_avg:.2f} probe_max={st_q.probe_max} "
+      f"wire_bytes/batch={st_q.wire_bytes}")

@@ -73,6 +73,17 @@ echo "== skew-balance smoke gate =="
 python -m pytest -q tests/test_skew_balance.py -k "parity or polya"
 python -m benchmarks.run --smoke load_balance
 
+echo "== query-service smoke gate =="
+# The online query path (ISSUE 9): batched lookup parity across the
+# {kmer,superkmer} x {1d,2d} grid plus request-order preservation
+# (tests/test_query.py; also tier-1 -- named gate), then the kc_serve
+# one-shot demo on a real 4-device mesh: count -> checkpoint -> restore
+# into the multi-tenant registry -> serve coalesced batches -> assert
+# exact counts vs finalize(), with the typed refusals (UnknownStore,
+# QueryUnavailable on an engaged spill tier) exercised on the way.
+python -m pytest -q tests/test_query.py -k "parity or order or lookup"
+python -m repro.launch.kc_serve --demo
+
 echo "== benchmark smoke (superkmer + compact-hop-2 wire gates) =="
 # benchmarks/superkmer_transport.py asserts -- in smoke mode too -- that
 # the smoke-scale super-k-mer stream moves strictly fewer wire bytes than

@@ -43,6 +43,18 @@ Backend note: `impl='auto'` runs the Pallas kernel on TPU and the
 bit-identical jnp oracle elsewhere (ops.hash_insert -- interpret-mode
 emulation of the scalar probe loop costs O(capacity) per store, so it is
 reserved for the kernel parity tests).
+
+Query/serving contract (`store_lookup`, core/query.py): the committed
+store doubles as a random-access serving index. `store_lookup` is the
+read-only reverse of `store_insert` -- the same home-slot hash and the
+same linear probe walk, but a match reads the slot's count and nothing is
+written, so lookups are safe to run concurrently against a live store and
+bit-stable across repeats. A probe that reaches an empty slot (or
+exhausts the sweep) is a definitive miss: the insert path guarantees
+every stored key is reachable from its home slot without crossing an
+empty slot, so count 0 means "never counted", never "maybe". Distributed
+queries route through `query.query_counts` (the aggregation protocol in
+reverse) and probe each PE's shard in place with this function.
 """
 
 from __future__ import annotations
@@ -92,6 +104,22 @@ def store_insert(store: CountStore, words: jax.Array,
         store_slots(words, capacity), sentinel_val=int(sent), impl=impl)
     return CountStore(keys=keys, counts=cnts,
                       dropped=store.dropped + dropped)
+
+
+def store_lookup(store: CountStore, words: jax.Array, *,
+                 impl: str = "auto"):
+    """Batched read-only probe: per-word counts out of the committed store.
+
+    Returns (counts, probes), both (n,) int32: counts[i] is the stored
+    count of words[i] (0 = miss, including sentinel padding), probes[i]
+    the probe-walk length (serving probe-depth stat). Never writes --
+    the store is unchanged, so lookups compose with a live receiver.
+    """
+    sent = jnp.iinfo(store.keys.dtype).max
+    capacity = store.keys.shape[0]
+    return ops.hash_lookup(store.keys, store.counts, words,
+                           store_slots(words, capacity),
+                           sentinel_val=int(sent), impl=impl)
 
 
 def store_grow(store: CountStore, new_capacity: int, *,

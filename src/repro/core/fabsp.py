@@ -134,6 +134,20 @@ overflow rounds), `finalize()` compacts the store into the usual
 unbounded workloads pay receive memory proportional to the DISTINCT k-mer
 count, never the instance count.
 
+Query/serving contract: the committed store doubles as a random-access
+serving index -- `KmerCounter.count(kmers)` / `contains(kmers)` run the
+aggregation protocol in REVERSE (core/query.py): query words route to
+their owner PEs through one `route_lanes` call with a query-id lane
+riding beside them, each shard is probed in place by the read-only
+lookup kernel, and answers route back and scatter into request order.
+Both hops run at capacity = per-PE batch size, so overflow is
+structurally impossible and a query never retries or rehashes; batch
+shapes bucket to pow2 so steady-state serving never retraces. Queries
+are exact against the committed store for any key set (misses included)
+but refuse, with the typed `query.QueryUnavailable`, while the spill
+tier holds counts in unfolded disk bins. `launch/kc_serve.py` is the
+multi-tenant harness over restored counters.
+
 Executable cache: `count_kmers` memoizes the jitted shard_map executable on
 (cfg, mesh, axis names, reads shape/dtype, slack, store capacity), so
 repeated same-shape calls -- including both overflow-retry rounds,
@@ -1574,6 +1588,9 @@ class KmerCounter:
         # the spill tier (core/spill.py), None until it engages
         self._spill: Optional[spill.SpillWriter] = None
         self._bins_folded = 0
+        # stats of the most recent count()/contains() batch
+        # (core/query.py QueryStats; None before any query)
+        self.last_query_stats = None
 
     @property
     def store_capacity(self) -> Optional[int]:
@@ -1611,8 +1628,11 @@ class KmerCounter:
         fn = _grow_executable(self._cfg, self._mesh, self._axes, new_cap,
                               self._store_cap)
         nk, nc, dropped = fn(self._skeys, self._scounts)
-        if int(dropped) != 0:
-            raise RuntimeError("rehash dropped live entries")  # unreachable
+        if int(dropped) != 0:   # unreachable unless store state corrupted
+            raise resilience.RehashInvariantBroken(
+                f"rehash into {new_cap} slots/PE dropped {int(dropped)} "
+                f"live entries",
+                self._rounds, dict(self._retries), dropped=int(dropped))
         self._skeys, self._scounts = nk, nc
         self._store_cap = new_cap
 
@@ -1937,6 +1957,43 @@ class KmerCounter:
             store_overflow=np.int64(0),
             load_max_over_mean=lmm, owner_fill_p99=p99)
         return result, _stamp_retries(stats, self._retries)
+
+    # --- the query path (core/query.py) --------------------------------------
+
+    def count(self, kmers) -> np.ndarray:
+        """Batched lookup: per-query occurrence counts from the committed
+        sharded store, in request order (0 = never counted).
+
+        `kmers` is (n,) packed words or (n, k) base codes; packing and
+        canonicalization match the counting path exactly, so the returned
+        counts equal lookups against the `finalize()` histogram for ANY
+        query set (misses and duplicates included). Read-only -- the
+        store is untouched and updates may continue afterwards. Each
+        call's `query.QueryStats` lands in `self.last_query_stats`.
+
+        Executable reuse: batch sizes are bucketed by the pow2 per-PE
+        slot count, so a serving stream retraces once per bucket and
+        store generation, never per request. Raises the typed
+        `query.QueryUnavailable` while the spill tier is engaged (the
+        in-core store is vestigial then; probing it would undercount).
+        """
+        from repro.core import query as query_lib
+        if self._spill is not None:
+            raise query_lib.QueryUnavailable(
+                "counter has an engaged spill tier: counts live in disk "
+                "bins, and the in-core store would undercount; the "
+                "spilled-bin query tier is a recorded follow-up")
+        if self._skeys is None:
+            raise RuntimeError("KmerCounter.count before any update")
+        counts, stats = query_lib.query_counts(
+            kmers, self._mesh, self._cfg, self._skeys, self._scounts,
+            axis_names=self._axes)
+        self.last_query_stats = stats
+        return counts
+
+    def contains(self, kmers) -> np.ndarray:
+        """Batched membership: `count(kmers) > 0`, request order."""
+        return self.count(kmers) > 0
 
     # --- durability ----------------------------------------------------------
 

@@ -1,0 +1,216 @@
+"""Online k-mer query path: the aggregation protocol run in reverse.
+
+The sharded CountStore that `fabsp.KmerCounter` builds is a serving index
+the moment counting stops: every PE holds the committed (key, count) table
+for its disjoint slice of k-mer space, so answering "how many times did
+this k-mer occur" is a routed batched probe --
+
+1. **Pack.** Query k-mers are packed/canonicalized with the SAME encoding
+   the counting path used (`encoding.pack_kmers` / `encoding.canonical`),
+   so a query word is bit-identical to the stored word it asks about.
+2. **Forward hop.** One `aggregation.route_lanes` call sends each query
+   word to its owner PE -- the identical ownership function counting used
+   (`fabsp._ownership_keys` + `owner.owner_pe`, minimizer-keyed under the
+   superkmer transport). A 1-based query-id `'i32'` lane rides beside the
+   word lane; id 0 is indistinguishable from the zero-padded tile slots,
+   so ids start at 1 and padding never aliases a live query.
+3. **Probe.** Each PE probes its committed store shard in place with the
+   read-only lookup kernel (`ops.hash_lookup`, kernels/hash_table.py) --
+   same home-slot hash, same linear probe walk as the insert path, count
+   0 is a definitive miss. Nothing is written: queries compose with a
+   live counter.
+4. **Return hop.** A second `route_lanes` call ships (qid, count) pairs
+   back to the PE that asked (owner = (qid-1) // n_local, the inverse of
+   the id assignment), and each PE scatters its answers into request
+   order via (qid-1) % n_local. The concatenated per-PE outputs ARE the
+   request-ordered count vector.
+
+Overflow cannot happen, by construction rather than by retry: both hops
+route with per-destination capacity = n_local (the per-PE padded query
+slot count). A sender only HAS n_local items in total, so no forward
+bucket can exceed n_local; and the return hop's bucket for source PE s
+holds only queries s itself sent here, again <= n_local. Any query
+distribution -- including every query hitting one owner -- routes cleanly
+in a single deterministic execution, with no RetryController in the loop.
+That is what makes the path servable: a query never rehashes, never
+doubles slack, never retraces once its shape bucket is compiled.
+
+Shape bucketing: the per-PE slot count n_local is the pow2 ceiling of
+nq / P, and the jitted shard_map executable is memoized in
+`fabsp._EXEC_CACHE` keyed on (cfg, mesh, n_local, store capacity) -- a
+serving stream of arbitrary batch sizes compiles one executable per pow2
+bucket and store generation, then reuses it forever. `KmerCounter.count /
+contains` is the user-facing wrapper; `launch/kc_serve.py` is the
+multi-tenant harness on top.
+
+Spill tier: a counter whose spill tier is engaged keeps most of its
+counts in disk bins, not in the in-core store; probing the vestigial
+store would silently undercount. `KmerCounter.count` raises the typed
+`QueryUnavailable` instead (the spilled-bin query tier is a recorded
+ROADMAP follow-up).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import aggregation, compat, countstore, encoding, fabsp
+from repro.core.owner import owner_pe
+from repro.kernels import ops
+
+
+class QueryUnavailable(RuntimeError):
+    """The counter cannot serve exact answers from its in-core store --
+    its spill tier is engaged and the disk bins are not folded in. Typed
+    so a serving harness can 503 the tenant instead of undercounting."""
+
+
+class QueryStats(NamedTuple):
+    """Host-side stats of one `query_counts` batch."""
+    n_queries: int      # live queries in the batch (pre-padding)
+    n_hits: int         # queries with count > 0
+    wire_bytes: int     # exact padded bytes both hops moved (global)
+    probe_sum: int      # total probe steps across all live queries
+    probe_max: int      # deepest single probe walk
+    n_local: int        # per-PE padded slot count (the shape bucket)
+    batch_fill: float   # n_queries / (n_local * P) -- padding waste
+
+    @property
+    def probe_avg(self) -> float:
+        return self.probe_sum / max(1, self.n_queries)
+
+
+def pack_queries(kmers, cfg) -> jax.Array:
+    """Normalize query k-mers to the counting path's packed-word form.
+
+    Accepts (n, k) base-code arrays (packed via `encoding.pack_kmers`,
+    canonicalized iff cfg.canonical -- strand invariance for free) or
+    already-packed (n,) word arrays (masked to k-mer width, canonicalized
+    iff cfg.canonical, so forward-strand words query correctly against a
+    canonical store).
+    """
+    k, bps = cfg.k, cfg.bits_per_symbol
+    dt = encoding.kmer_dtype(k, bps)
+    arr = jnp.asarray(kmers)
+    if arr.ndim == 2:
+        if arr.shape[1] != k:
+            raise ValueError(
+                f"code-array queries must be (n, k={k}), got {arr.shape}")
+        return encoding.pack_kmers(
+            arr, k, bps, canonical=cfg.canonical,
+            canonical_impl=cfg.canonical_impl).reshape(-1)
+    if arr.ndim != 1:
+        raise ValueError(f"queries must be (n,) words or (n, k) codes, "
+                         f"got shape {arr.shape}")
+    w = arr.astype(dt) & encoding.kmer_mask(k, bps)
+    if cfg.canonical:
+        w = encoding.canonical(w, k)
+    return w
+
+
+def _query_executable(cfg, mesh: Mesh, axis_names, dtype_name: str,
+                      n_local: int, store_cap: int):
+    """The jitted shard_map query executable for one shape bucket.
+
+    in: (P * n_local,) sentinel-padded query words, sharded store keys,
+    sharded store counts. out: (P * n_local,) request-ordered counts plus
+    5 psum'd stat scalars (hits, wire hi/lo, probe sum, probe max).
+    """
+    key = ("query", cfg, mesh, tuple(axis_names), dtype_name, n_local,
+           store_cap)
+    fn = fabsp._EXEC_CACHE.get(key)
+    if fn is not None:
+        return fn
+    axes = tuple(axis_names)
+    num_pes = fabsp._mesh_pes(mesh, axes)
+    grid = fabsp._topology_grid(cfg, mesh, axes)
+    spec = fabsp._data_spec(axes)
+
+    def local_query(qwords, skeys, scounts):
+        sent = jnp.array(jnp.iinfo(qwords.dtype).max, qwords.dtype)
+        valid = qwords != sent
+        # flat PE id under the (row-major) axis fold -- the same index the
+        # 2d 'oneplan' route decomposes owners into, so qid round-trips
+        # across both topologies
+        pe = jnp.int32(0)
+        for ax in axes:
+            pe = pe * mesh.shape[ax] + jax.lax.axis_index(ax)
+        qid = (pe * n_local + jnp.arange(n_local, dtype=jnp.int32)
+               + jnp.int32(1))           # 1-based: 0 marks tile padding
+        owners = owner_pe(fabsp._ownership_keys(qwords, cfg), num_pes)
+        rr = aggregation.route_lanes(
+            (qwords, qid), ("word", "i32"), owners, valid,
+            num_pes=num_pes, capacity=n_local, axis_names=axes, grid=grid,
+            impl=cfg.partition_impl, route2d="oneplan")
+        rwords, rqid = rr.lanes
+        rvalid = rwords != sent
+        counts, probes = ops.hash_lookup(
+            skeys, scounts, rwords, countstore.store_slots(rwords, store_cap),
+            sentinel_val=int(jnp.iinfo(qwords.dtype).max))
+        back = (rqid - jnp.int32(1)) // jnp.int32(n_local)
+        rr2 = aggregation.route_lanes(
+            (rqid, counts), ("i32", "i32"), back, rvalid,
+            num_pes=num_pes, capacity=n_local, axis_names=axes, grid=grid,
+            impl=cfg.partition_impl, route2d="oneplan")
+        bqid, bcounts = rr2.lanes
+        # qids are globally unique, so each live answer owns its slot; the
+        # padding slots (bqid == 0) scatter off the end and drop
+        dst = jnp.where(bqid > jnp.int32(0),
+                        (bqid - jnp.int32(1)) % jnp.int32(n_local),
+                        jnp.int32(n_local))
+        out = jnp.zeros((n_local,), jnp.int32).at[dst].add(bcounts,
+                                                           mode="drop")
+        hits = ((counts > 0) & rvalid).sum().astype(jnp.int32)
+        prb = jnp.where(rvalid, probes, 0)
+        whi, wlo = fabsp._wire_add(jnp.int32(0), jnp.int32(0),
+                                   rr.wire_bytes + rr2.wire_bytes)
+        return out, (jax.lax.psum(hits, axes),
+                     jax.lax.psum(whi, axes), jax.lax.psum(wlo, axes),
+                     jax.lax.psum(prb.sum().astype(jnp.int32), axes),
+                     jax.lax.pmax(prb.max().astype(jnp.int32), axes))
+
+    fn = jax.jit(compat.shard_map(
+        local_query, mesh=mesh, in_specs=(spec, spec, spec),
+        out_specs=(spec, (P(),) * 5)))
+    fabsp._EXEC_CACHE[key] = fn
+    return fn
+
+
+def query_counts(kmers, mesh: Mesh, cfg, skeys: jax.Array,
+                 scounts: jax.Array,
+                 axis_names: Sequence[str] = ("pe",)):
+    """Batched lookup of `kmers` against a committed sharded store.
+
+    kmers: (n,) packed words or (n, k) base codes (see `pack_queries`).
+    skeys/scounts: the counter's sharded store arrays (P * store_cap,).
+    Returns (counts, QueryStats): counts is an (n,) int32 np.ndarray in
+    REQUEST order (0 = never counted), exact for any query set including
+    duplicates and misses.
+    """
+    axes = tuple(axis_names)
+    num_pes = fabsp._mesh_pes(mesh, axes)
+    store_cap = skeys.shape[0] // num_pes
+    words = pack_queries(kmers, cfg)
+    nq = int(words.shape[0])
+    n_local = fabsp._pow2ceil(max(1, -(-nq // num_pes)))
+    dt = words.dtype
+    sent = int(jnp.iinfo(dt).max)
+    padded = np.full((num_pes * n_local,), sent, dtype=dt)
+    padded[:nq] = np.asarray(words)
+    sharding = NamedSharding(mesh, fabsp._data_spec(axes))
+    qdev = jax.device_put(jnp.asarray(padded), sharding)
+    fn = _query_executable(cfg, mesh, axes, str(np.dtype(dt)), n_local,
+                           store_cap)
+    out, (hits, whi, wlo, psum, pmax) = fn(qdev, skeys, scounts)
+    counts = np.asarray(out)[:nq]
+    stats = QueryStats(
+        n_queries=nq, n_hits=int(hits),
+        wire_bytes=(int(whi) << fabsp._WIRE_SHIFT) + int(wlo),
+        probe_sum=int(psum), probe_max=int(pmax), n_local=n_local,
+        batch_fill=nq / (n_local * num_pes))
+    return counts, stats

@@ -167,6 +167,20 @@ class RetryBudgetExceeded(RetryError):
     """The total replay budget (`RetryPolicy.max_rounds`) ran out."""
 
 
+class RehashInvariantBroken(RetryError):
+    """A rehash round dropped live entries -- impossible by construction
+    (the grown table is strictly larger than the live-entry count), so
+    reaching this means store state corruption, not capacity pressure.
+    Raised with the stream's round history and lifetime replay counts
+    attached (the same forensic payload as the give-up errors), because
+    the history of WHICH rounds grew the store is exactly what debugging
+    a broken rehash needs."""
+
+    def __init__(self, msg: str, rounds, counts=None, dropped: int = 0):
+        super().__init__(msg, rounds, counts)
+        self.dropped = int(dropped)
+
+
 class InjectedFault(RuntimeError):
     """Raised by host-side fault sites ('update_fail', 'ckpt_write')."""
 

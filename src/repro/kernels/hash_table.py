@@ -154,3 +154,82 @@ def hash_insert_pallas(table_keys: jax.Array, table_counts: jax.Array,
       slots.astype(jnp.int32))
     new_keys, new_counts, ovf = out
     return new_keys, new_counts, ovf[0]
+
+
+def _hash_lookup_kernel(tkeys_ref, tcounts_ref, keys_ref, slots_ref,
+                        counts_ref, probes_ref, *, sentinel_val: int):
+    cap = tkeys_ref.shape[0]
+    tile = keys_ref.shape[0]
+    dt = keys_ref.dtype.type
+    sent = dt(sentinel_val)
+
+    def probe_one(i, _):
+        key = _get(keys_ref, i)
+        slot0 = _get(slots_ref, i)
+        valid = key != sent
+
+        def probing(state):
+            j, _, st = state
+            return valid & (st == _PENDING) & (j < cap)
+
+        def probe(state):
+            j, slot, _ = state
+            cur = _get(tkeys_ref, slot)
+            st = jnp.where(cur == sent, _INSERT,
+                           jnp.where(cur == key, _ADD, _PENDING))
+            nxt = jnp.where(slot + 1 == cap, 0, slot + 1)
+            return (j + jnp.int32(1),
+                    jnp.where(st == _PENDING, nxt, slot),
+                    st.astype(jnp.int32))
+
+        j, slot, st = jax.lax.while_loop(
+            probing, probe, (jnp.int32(0), slot0, jnp.int32(_PENDING)))
+        cnt = jnp.where(st == _ADD, _get(tcounts_ref, slot), jnp.int32(0))
+        _put(counts_ref, i, jnp.where(valid, cnt, jnp.int32(0)))
+        _put(probes_ref, i, jnp.where(valid, j, jnp.int32(0)))
+        return 0
+
+    jax.lax.fori_loop(0, tile, probe_one, 0)
+
+
+def hash_lookup_pallas(table_keys: jax.Array, table_counts: jax.Array,
+                       keys: jax.Array, slots: jax.Array, sentinel_val: int,
+                       tile: int = 1024, interpret: bool = False):
+    """Read-only batched probe: per-key counts out of the committed table.
+
+    The serving-side twin of `hash_insert_pallas` -- identical probe walk
+    (linear from the caller-supplied home slot, wrap modulo capacity, stop
+    at empty or match), but the table is never written: a match reads the
+    slot's count, an empty slot or an exhausted sweep is a miss (count 0).
+    Sentinel keys (query-batch padding) are skipped with count 0.
+
+    table_keys:   (cap,) word table, empty slots == sentinel_val
+    table_counts: (cap,) int32
+    keys:  (n,) query words; sentinel entries skipped
+    slots: (n,) int32 home slots -- hash(key) % cap, computed by the caller
+
+    Returns (counts, probes), both (n,) int32: counts[i] is the stored
+    count (0 = miss), probes[i] the number of probe steps the walk took
+    (0 for skipped sentinels) -- the serving stats' probe-depth source.
+    n must divide by `tile`. Bit-identical to `ref.hash_lookup_ref`.
+    """
+    n = keys.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"n {n} % tile {tile} != 0")
+    cap = table_keys.shape[0]
+    grid = (n // tile,)
+    counts, probes = pl.pallas_call(
+        functools.partial(_hash_lookup_kernel, sentinel_val=sentinel_val),
+        grid=grid,
+        in_specs=[pl.BlockSpec((cap,), lambda i: (0,)),
+                  pl.BlockSpec((cap,), lambda i: (0,)),
+                  pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((tile,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(table_keys, table_counts.astype(jnp.int32), keys,
+      slots.astype(jnp.int32))
+    return counts, probes

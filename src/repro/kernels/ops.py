@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.hash_table import hash_insert_pallas
+from repro.kernels.hash_table import hash_insert_pallas, hash_lookup_pallas
 from repro.kernels.kmer_extract import kmer_extract_pallas
 from repro.kernels.minimizer import (sliding_min_pallas,
                                      sliding_min_pair_pallas)
@@ -129,6 +129,43 @@ def hash_insert(table_keys: jax.Array, table_counts: jax.Array,
     return hash_insert_pallas(table_keys, table_counts, keys, weights, slots,
                               sentinel_val, tile=tile,
                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("sentinel_val", "tile", "impl"))
+def hash_lookup(table_keys: jax.Array, table_counts: jax.Array,
+                keys: jax.Array, slots: jax.Array, *,
+                sentinel_val: int, tile: int = 1024, impl: str = "auto"):
+    """Read-only batched probe of the open-addressing count table; returns
+    (counts, probes), both (n,) int32 -- counts[i] is the stored count of
+    keys[i] (0 = miss), probes[i] the probe-walk length (the serving
+    probe-depth stat). Sentinel keys skip with count 0. Pads the batch to a
+    tile multiple with skipped sentinel entries.
+
+    impl follows the `hash_insert` discipline: 'auto' = the Pallas kernel
+    on TPU, the bit-identical jnp oracle elsewhere (interpret-mode scalar
+    probing costs O(capacity) per lookup, so emulation is opt-in via
+    'pallas' -- what the parity tests run).
+    """
+    n = keys.shape[0]
+    tile = min(tile, max(8, n))
+    pad = (-n) % tile
+    if pad:
+        keys = jnp.concatenate(
+            [keys, jnp.full((pad,), sentinel_val, keys.dtype)])
+        slots = jnp.concatenate([slots.astype(jnp.int32),
+                                 jnp.zeros((pad,), jnp.int32)])
+    if impl == "auto":
+        impl = "ref" if _interpret() else "pallas"
+    if impl == "ref":
+        counts, probes = ref.hash_lookup_ref(table_keys, table_counts, keys,
+                                             slots, sentinel_val)
+    elif impl == "pallas":
+        counts, probes = hash_lookup_pallas(table_keys, table_counts, keys,
+                                            slots, sentinel_val, tile=tile,
+                                            interpret=_interpret())
+    else:
+        raise ValueError(f"unknown hash_lookup impl {impl!r}")
+    return counts[:n], probes[:n]
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2))

@@ -226,6 +226,49 @@ def hash_insert_ref(table_keys: jax.Array, table_counts: jax.Array,
     return tk, tc, dropped
 
 
+def hash_lookup_ref(table_keys: jax.Array, table_counts: jax.Array,
+                    keys: jax.Array, slots: jax.Array, sentinel_val: int):
+    """Read-only probe oracle: per-key counts from the committed table.
+
+    The same probe walk as `hash_insert_ref` (linear from `slots[i]`, wrap
+    modulo capacity, stop at empty or match) but never writing: a match
+    reads the slot's count, an empty slot or an exhausted sweep is a miss
+    (count 0); sentinel keys (batch padding) skip with count 0. Semantic
+    ground truth for `hash_lookup_pallas` -- (counts, probes) must match
+    bit-for-bit, probe step counts included.
+    Returns (counts, probes), both (n,) int32.
+    """
+    cap = table_keys.shape[0]
+    sent = table_keys.dtype.type(sentinel_val)
+    tc = table_counts.astype(jnp.int32)
+
+    def probe_one(_, x):
+        key, slot0 = x
+        valid = key != sent
+
+        def probing(state):
+            j, _, st = state
+            return valid & (st == 0) & (j < cap)
+
+        def probe(state):
+            j, slot, _ = state
+            cur = table_keys[slot]
+            st = jnp.where(cur == sent, 1, jnp.where(cur == key, 2, 0))
+            nxt = jnp.where(slot + 1 == cap, 0, slot + 1)
+            return (j + jnp.int32(1), jnp.where(st == 0, nxt, slot),
+                    st.astype(jnp.int32))
+
+        j, slot, st = jax.lax.while_loop(
+            probing, probe, (jnp.int32(0), slot0, jnp.int32(0)))
+        cnt = jnp.where((st == 2) & valid, tc[slot], jnp.int32(0))
+        prb = jnp.where(valid, j, jnp.int32(0))
+        return 0, (cnt, prb)
+
+    _, (counts, probes) = jax.lax.scan(
+        probe_one, 0, (keys, slots.astype(jnp.int32)))
+    return counts, probes
+
+
 # --- flash_attention --------------------------------------------------------
 
 def flash_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

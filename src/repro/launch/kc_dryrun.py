@@ -191,6 +191,91 @@ def lower_kc_incremental(batch_reads: int, read_len: int, k: int, mesh, *,
     }
 
 
+def lower_kc_query(n_queries: int, n_reads: int, read_len: int, k: int,
+                   mesh, *, chunk_reads: int) -> dict:
+    """Lower the query-service executable (core/query.py) at production
+    scale: one batched lookup of `n_queries` k-mers against the store the
+    counting dry-run sizes for this workload -- forward route, in-place
+    probe, return route, all in one shard_map program."""
+    from repro.core import query as query_lib
+
+    axis_names = ("pe",)
+    flat_mesh = _flat_mesh(mesh, axis_names)
+    num_pes = mesh.size
+    cfg = DAKCConfig(k=k, chunk_reads=chunk_reads)
+    store_cap = fabsp._default_store_capacity(cfg, (n_reads, read_len),
+                                              num_pes)
+    n_local = fabsp._pow2ceil(max(1, -(-n_queries // num_pes)))
+    dt = encoding.kmer_dtype(k, cfg.bits_per_symbol)
+    fn = query_lib._query_executable(cfg, flat_mesh, axis_names,
+                                     str(np.dtype(dt)), n_local, store_cap)
+    spec = P(axis_names[0])
+
+    def arg(n, dtype):
+        return jax.ShapeDtypeStruct(
+            (n,), dtype, sharding=NamedSharding(flat_mesh, spec))
+
+    t0 = time.time()
+    compiled = fn.lower(arg(num_pes * n_local, dt),
+                        arg(num_pes * store_cap, dt),
+                        arg(num_pes * store_cap, jnp.int32)).compile()
+    mem = compiled.memory_analysis()
+    wb = jnp.iinfo(dt).bits // 8
+    # exact per-batch route bytes (lane model): forward word+qid lanes,
+    # return qid+count lanes, both hops at capacity n_local
+    wire = num_pes * num_pes * n_local * ((wb + 4) + (4 + 4))
+    return {
+        "workload": "dakc-kc-query", "k": k, "n_queries": n_queries,
+        "n_local": n_local, "num_pes": num_pes,
+        "store_capacity_per_pe": store_cap,
+        "compile_seconds": round(time.time() - t0, 2),
+        "memory": {"temp_gb": mem.temp_size_in_bytes / 1e9,
+                   "args_gb": mem.argument_size_in_bytes / 1e9},
+        "route_wire_bytes_per_batch": wire,
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+
+
+def run_query(n_queries: int, n_reads: int, read_len: int, k: int,
+              chunk_reads: int) -> None:
+    """The --query demo: lower the query executable on the production mesh
+    and print its footprint, then serve a REAL mixed hit/miss batch on a
+    small mesh and print the live probe stats (core/query.QueryStats)."""
+    mesh = make_production_mesh()
+    rec = lower_kc_query(n_queries, n_reads, read_len, k, mesh,
+                         chunk_reads=chunk_reads)
+    print(f"query executable @ {rec['num_pes']} PEs: "
+          f"n_queries={rec['n_queries']} shape bucket n_local="
+          f"{rec['n_local']}, store={rec['store_capacity_per_pe']} "
+          f"slots/PE, compile={rec['compile_seconds']}s")
+    print(f"  temp={rec['memory']['temp_gb']:.3f} GB "
+          f"args={rec['memory']['args_gb']:.3f} GB "
+          f"route_wire_bytes/batch={rec['route_wire_bytes_per_batch']:,} "
+          f"collective_bytes={rec['collectives']['total_bytes']:,}")
+
+    from repro.data import genome
+    spec = genome.ReadSetSpec(genome_bases=2048, n_reads=128, read_len=52,
+                              heavy_hitter_frac=0.3, seed=7)
+    reads = jnp.asarray(genome.sample_reads(spec))
+    small = jax.sharding.Mesh(np.asarray(jax.devices()[:4]), ("pe",))
+    kc = fabsp.KmerCounter(small, DAKCConfig(k=13, chunk_reads=32))
+    kc.update(reads)
+    hist = _merged_hist(kc.finalize()[0])
+    rng = np.random.default_rng(0)
+    uniq = np.asarray(sorted(hist), dtype=np.uint32)
+    q = np.concatenate([uniq, rng.integers(0, 1 << 26, 64,
+                                           dtype=np.uint32)])
+    got = kc.count(q)
+    want = np.asarray([hist.get(int(x), 0) for x in q], np.int32)
+    if not np.array_equal(got, want):
+        raise SystemExit("FAIL: live query batch diverged from finalize()")
+    st = kc.last_query_stats
+    print(f"  live 4-PE batch: n={st.n_queries} hits={st.n_hits} "
+          f"fill={st.batch_fill:.2f} probe_avg={st.probe_avg:.2f} "
+          f"probe_max={st.probe_max} wire_bytes={st.wire_bytes}")
+    print("query dry-run OK")
+
+
 def _merged_hist(res) -> dict:
     out = {}
     nsh = res.num_unique.shape[0]
@@ -406,8 +491,17 @@ def main() -> None:
                          "(DAKCConfig.compact_impl); in the lowering "
                          "dry-run the shape-only density estimate "
                          "degenerates 'prefix' to a no-op")
+    ap.add_argument("--query", type=int, default=0, metavar="N",
+                    help="lower the query-service executable for an "
+                         "N-query batch on the production mesh, then serve "
+                         "a real mixed hit/miss batch on a small mesh and "
+                         "print live probe stats")
     ap.add_argument("--out", default="experiments/dryrun_kc.json")
     args = ap.parse_args()
+    if args.query > 0:
+        run_query(args.query, args.full and 357_913_900 or args.reads,
+                  args.read_len, args.k, args.chunk_reads)
+        return
     if args.inject:
         run_inject()
         return

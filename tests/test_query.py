@@ -1,0 +1,335 @@
+"""The online query path (core/query.py + kernels hash_lookup).
+
+Single-device parity grid + hypothesis properties here; the 8-PE routed
+drill and the elastic 8->4 restore-then-serve check run as subprocesses
+(the no-global-XLA_FLAGS rule keeps the main pytest process on 1 device).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh
+
+from repro.core import countstore, encoding, fabsp, query, serial
+from repro.data import genome
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("pe",))
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("row", "col"))
+
+
+@pytest.fixture(scope="module")
+def reads():
+    spec = genome.ReadSetSpec(genome_bases=4096, n_reads=256, read_len=80,
+                              heavy_hitter_frac=0.3, seed=11)
+    return genome.sample_reads(spec)
+
+
+# --- the lookup kernel triple (pallas vs jnp oracle) ------------------------
+
+def _built_store(capacity=512, n=200, seed=0):
+    dt = jnp.uint32
+    rng = np.random.default_rng(seed)
+    words = jnp.asarray(rng.integers(0, 1000, n).astype(np.uint32))
+    return countstore.store_insert(countstore.empty_store(capacity, dt),
+                                   words), words
+
+
+def test_hash_lookup_pallas_matches_ref():
+    """Interpret-mode pallas lookup is bit-identical to the jnp oracle --
+    counts AND probe depths -- on a store with real collision chains."""
+    store, words = _built_store()
+    assert int(store.dropped) == 0
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(np.concatenate([
+        np.asarray(words)[:64],
+        rng.integers(2000, 4000, 64).astype(np.uint32),   # guaranteed miss
+        np.full(8, np.iinfo(np.uint32).max, np.uint32),   # sentinel pad
+    ]))
+    c_ref, p_ref = countstore.store_lookup(store, q, impl="ref")
+    c_pal, p_pal = countstore.store_lookup(store, q, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_pal))
+    assert (np.asarray(c_ref)[64:] == 0).all()            # misses + padding
+    assert (np.asarray(p_ref)[-8:] == 0).all()            # padding never probes
+
+
+def test_hash_lookup_counts_match_insert_history():
+    store, words = _built_store()
+    hist = {}
+    for w in np.asarray(words):
+        hist[int(w)] = hist.get(int(w), 0) + 1
+    uniq = np.asarray(sorted(hist), np.uint32)
+    counts, _ = countstore.store_lookup(store, jnp.asarray(uniq))
+    assert {int(u): int(c) for u, c in zip(uniq, counts)} == hist
+
+
+def test_hash_lookup_rejects_unknown_impl():
+    store, words = _built_store()
+    with pytest.raises(ValueError, match="hash_lookup impl"):
+        ops.hash_lookup(store.keys, store.counts, words,
+                        countstore.store_slots(words, store.keys.shape[0]),
+                        sentinel_val=int(np.iinfo(np.uint32).max),
+                        impl="vector")
+
+
+# --- end-to-end parity grid: {kmer, superkmer} x {1d, 2d} -------------------
+
+def _counter(reads, mesh, axes, cfg):
+    kc = fabsp.KmerCounter(mesh, cfg, axes)
+    kc.update(jnp.asarray(reads))
+    kc.finalize()
+    return kc
+
+
+def _mixed_queries(oracle, dtype, n_miss=77, seed=3):
+    rng = np.random.default_rng(seed)
+    q = np.concatenate([np.asarray(sorted(oracle), dtype=dtype),
+                        rng.integers(0, 1 << 26, n_miss).astype(dtype)])
+    rng.shuffle(q)
+    return q
+
+
+@pytest.mark.parametrize("transport,topo", [
+    ("kmer", "1d"), ("kmer", "2d"),
+    ("superkmer", "1d"), ("superkmer", "2d"),
+])
+def test_query_parity_grid(reads, mesh, mesh2d, transport, topo):
+    """count() is exact vs the Python oracle for mixed hit/miss batches on
+    every transport x topology cell (queries route by the SAME ownership
+    function counting used, minimizer-keyed under superkmer)."""
+    k = 13
+    cfg = fabsp.DAKCConfig(
+        k=k, chunk_reads=64, topology=topo,
+        transport_impl=transport,
+        **({"minimizer_len": 7} if transport == "superkmer" else {}))
+    m, axes = ((mesh2d, ("row", "col")) if topo == "2d"
+               else (mesh, ("pe",)))
+    kc = _counter(reads, m, axes, cfg)
+    oracle = serial.count_kmers_python(reads, k)
+    q = _mixed_queries(oracle, np.uint32)
+    got = kc.count(q)
+    want = np.asarray([oracle.get(int(x), 0) for x in q], np.int32)
+    np.testing.assert_array_equal(got, want)
+    st_q = kc.last_query_stats
+    assert st_q.n_queries == q.size
+    assert st_q.n_hits == int((want > 0).sum())
+    assert st_q.wire_bytes > 0
+    assert kc.contains(q).tolist() == (want > 0).tolist()
+
+
+# --- hypothesis properties --------------------------------------------------
+
+@given(n_hits=st.integers(0, 40), n_miss=st.integers(0, 40),
+       seed=st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_query_matches_dict_oracle(mesh, reads, n_hits, n_miss, seed):
+    """Any mix of present/absent/duplicate keys returns exactly the
+    finalize() histogram's answer, in request order, including the empty
+    batch."""
+    k = 13
+    kc = _counter(reads, mesh, ("pe",),
+                  fabsp.DAKCConfig(k=k, chunk_reads=64))
+    oracle = serial.count_kmers_python(reads, k)
+    rng = np.random.default_rng(seed)
+    uniq = np.asarray(sorted(oracle), np.uint32)
+    q = np.concatenate([
+        rng.choice(uniq, n_hits) if n_hits else np.zeros(0, np.uint32),
+        rng.integers(0, 1 << 26, n_miss).astype(np.uint32),
+    ])
+    rng.shuffle(q)
+    got = kc.count(q)
+    want = np.asarray([oracle.get(int(x), 0) for x in q], np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(seed=st.integers(0, 7))
+@settings(max_examples=8, deadline=None)
+def test_query_order_preserved_under_permutation(mesh, reads, seed):
+    """Permuting a batch permutes the answers identically: the query-id
+    lane pins every answer to its request slot."""
+    kc = _counter(reads, mesh, ("pe",),
+                  fabsp.DAKCConfig(k=13, chunk_reads=64))
+    oracle = serial.count_kmers_python(reads, 13)
+    q = _mixed_queries(oracle, np.uint32, seed=seed)
+    base = kc.count(q)
+    perm = np.random.default_rng(seed).permutation(q.size)
+    np.testing.assert_array_equal(kc.count(q[perm]), base[perm])
+
+
+@given(seed=st.integers(0, 5), n=st.integers(1, 48))
+@settings(max_examples=10, deadline=None)
+def test_query_canonical_strand_invariance(mesh, reads, seed, n):
+    """Under cfg.canonical, a k-mer and its reverse complement are the
+    same key: querying either strand's base codes returns equal counts."""
+    k = 13
+    kc = _counter(reads, mesh, ("pe",),
+                  fabsp.DAKCConfig(k=k, chunk_reads=64, canonical=True))
+    rng = np.random.default_rng(seed)
+    r = np.asarray(reads)
+    rows = rng.integers(0, r.shape[0], n)
+    cols = rng.integers(0, r.shape[1] - k + 1, n)
+    fwd = np.stack([r[i, j:j + k] for i, j in zip(rows, cols)]) \
+        .astype(np.int32)                    # real windows: guaranteed hits
+    rc = (3 - fwd)[:, ::-1]
+    fc = kc.count(fwd)
+    np.testing.assert_array_equal(fc, kc.count(rc))
+    assert (fc > 0).all()                    # every window was counted
+
+
+# --- shape bucketing / executable reuse -------------------------------------
+
+def test_query_shape_bucket_reuses_executable(mesh, reads):
+    # chunk_reads=16 keeps this cfg's cache keys disjoint from every other
+    # test in the module (cfg is part of the executable key)
+    kc = _counter(reads, mesh, ("pe",),
+                  fabsp.DAKCConfig(k=13, chunk_reads=16))
+    oracle = serial.count_kmers_python(reads, 13)
+    uniq = np.asarray(sorted(oracle), np.uint32)
+
+    def n_query_execs():
+        return sum(1 for key in fabsp._EXEC_CACHE
+                   if isinstance(key, tuple) and key and key[0] == "query")
+
+    kc.count(uniq[:33])                      # pow2 bucket 64
+    before = n_query_execs()
+    kc.count(uniq[:64])                      # same bucket: cache hit
+    kc.count(uniq[:40])
+    assert n_query_execs() == before
+    kc.count(uniq[:65])                      # next bucket: one new entry
+    assert n_query_execs() == before + 1
+    assert kc.last_query_stats.n_local == 128
+
+
+# --- typed refusals ---------------------------------------------------------
+
+def test_query_before_update_raises(mesh):
+    kc = fabsp.KmerCounter(mesh, fabsp.DAKCConfig(k=13, chunk_reads=64))
+    with pytest.raises(RuntimeError, match="before any update"):
+        kc.count(np.zeros(4, np.uint32))
+
+
+def test_query_spilled_counter_raises_typed(mesh, reads, tmp_path):
+    cfg = fabsp.DAKCConfig(k=13, chunk_reads=64, spill="always",
+                           spill_dir=str(tmp_path))
+    kc = fabsp.KmerCounter(mesh, cfg)
+    kc.update(jnp.asarray(reads))
+    with pytest.raises(query.QueryUnavailable):
+        kc.count(np.zeros(4, np.uint32))
+
+
+def test_pack_queries_shape_errors(mesh):
+    cfg = fabsp.DAKCConfig(k=13, chunk_reads=64)
+    with pytest.raises(ValueError, match=r"\(n, k=13\)"):
+        query.pack_queries(np.zeros((4, 9), np.int32), cfg)
+    with pytest.raises(ValueError, match="words or"):
+        query.pack_queries(np.zeros((2, 2, 2), np.int32), cfg)
+
+
+def test_pack_queries_masks_and_canonicalizes():
+    cfg = fabsp.DAKCConfig(k=5, chunk_reads=64, canonical=True)
+    w = np.asarray([0b1111_11111111], np.uint32)  # junk above k*2 bits
+    packed = np.asarray(query.pack_queries(w, cfg))
+    mask = int(encoding.kmer_mask(5, 2))
+    assert int(packed[0]) <= mask
+    assert int(packed[0]) == int(
+        np.asarray(encoding.canonical(jnp.asarray([w[0] & mask],
+                                                  jnp.uint32), 5))[0])
+
+
+# --- multi-PE drills (subprocess: 8 forced host devices) --------------------
+
+_SUB_COMMON = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import fabsp, serial
+from repro.data import genome
+
+spec = genome.ReadSetSpec(genome_bases=8192, n_reads=512, read_len=90,
+                          heavy_hitter_frac=0.3, seed=7)
+reads = genome.sample_reads(spec)
+k = 13
+oracle = serial.count_kmers_python(reads, k)
+rng = np.random.default_rng(0)
+q = np.concatenate([np.asarray(sorted(oracle), np.uint32),
+                    rng.integers(0, 1 << 26, 77).astype(np.uint32)])
+rng.shuffle(q)
+want = np.asarray([oracle.get(int(x), 0) for x in q], np.int32)
+devs = np.array(jax.devices())
+"""
+
+_SUB_GRID = _SUB_COMMON + r"""
+for name, cfg, axes, m in [
+    ("1d", fabsp.DAKCConfig(k=k, chunk_reads=32), ("pe",),
+     Mesh(devs, ("pe",))),
+    ("2d", fabsp.DAKCConfig(k=k, chunk_reads=32, topology="2d"),
+     ("row", "col"), Mesh(devs.reshape(2, 4), ("row", "col"))),
+    ("sk2d", fabsp.DAKCConfig(k=k, chunk_reads=32, topology="2d",
+                              transport_impl="superkmer", minimizer_len=7),
+     ("row", "col"), Mesh(devs.reshape(2, 4), ("row", "col"))),
+]:
+    kc = fabsp.KmerCounter(m, cfg, axes)
+    kc.update(jnp.asarray(reads))
+    kc.finalize()
+    got = kc.count(q)
+    assert np.array_equal(got, want), name
+    st = kc.last_query_stats
+    assert st.n_hits == int((want > 0).sum()), name
+    print("OK", name)
+print("OK 8PE-query")
+"""
+
+_SUB_RESTORE = _SUB_COMMON + r"""
+import tempfile
+cfg = fabsp.DAKCConfig(k=k, chunk_reads=32)
+kc8 = fabsp.KmerCounter(Mesh(devs, ("pe",)), cfg)
+kc8.update(jnp.asarray(reads))
+kc8.finalize()
+with tempfile.TemporaryDirectory() as d:
+    kc8.save(d)
+    kc4 = fabsp.KmerCounter.restore(d, Mesh(devs[:4], ("pe",)), cfg)
+    got = kc4.count(q)
+assert np.array_equal(got, want), "8->4 restore query parity"
+assert np.array_equal(kc8.count(q), want)
+print("OK restore-8to4-query")
+"""
+
+
+def _run_sub(code):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+    return proc.stdout
+
+
+def test_query_8pe_subprocess():
+    """The routed drill at P=8: both topologies + the superkmer transport
+    answer a shuffled all-uniques+misses batch exactly."""
+    out = _run_sub(_SUB_GRID)
+    assert "OK 8PE-query" in out
+
+
+def test_query_after_elastic_restore_subprocess():
+    """A store counted on 8 PEs serves exactly from a 4-PE mesh after
+    checkpoint restore (elastic reshard re-routes every entry)."""
+    out = _run_sub(_SUB_RESTORE)
+    assert "OK restore-8to4-query" in out
