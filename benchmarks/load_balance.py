@@ -23,7 +23,10 @@ caps actually shrink the tiles. Histograms must match the 'off' oracle.
 
 The --smoke pass doubles as the CI skew-balance gate (scripts/ci.sh):
 partition-work reduction >= 1.5x on the skewed corpus AND hashed
-imbalance strictly below plain on poly-A, histograms identical.
+imbalance strictly below plain on poly-A, histograms identical, AND the
+peak-aware compact route caps fit both skewed corpora in one round
+(`retry_route_slack == 0` -- the ISSUE 10 cap-under-fit fix; asserted
+inside the subprocess snippet for poly-A and power-law alike).
 
 CPU caveat as everywhere in this suite: seconds are interpret-mode
 emulation; slot counts, fill histograms and wire bytes are exact and
@@ -95,27 +98,37 @@ def run(n_reads, repeats):
         assert hists["plain"] == hists["hashed"], name + ": orders disagree"
         out["corpora"][name] = rec
 
-    # -- compaction on the poly-A adversary: routed-slot reduction --------
-    reads = jnp.asarray(corpora["polya"])
+    # -- compaction on BOTH skewed adversaries: routed-slot reduction, and
+    # the peak-aware route caps must fit each in ONE round (no doubled-
+    # slack retry -- the ISSUE 10 cap-under-fit fix)
     base = dict(k=k, chunk_reads=chunk, transport_impl="superkmer",
                 minimizer_len=m, minimizer_order="hashed")
     cfg_on = fabsp.DAKCConfig(**base, compact_impl="prefix")
-    caps = fabsp._resolve_compact(np.asarray(reads), cfg_on, P,
-                                  tuple(reads.shape), cfg_on.slack)
-    assert caps is not None, "compaction seam did not engage"
     n_slots = chunk * (rl - k + 1)        # positional slots per chunk
     out["partition_slots"] = n_slots
-    out["compact_slots"] = caps[0]
-    out["partition_work_reduction"] = n_slots / caps[0]
-    h_on, r_on = {}, {}
-    for label, cfg in (("compact", cfg_on),
-                       ("off", fabsp.DAKCConfig(**base, compact_impl="off"))):
-        best, res, st = count(reads, cfg, mesh, ("pe",), repeats)
-        h_on[label] = sorted(merge(res).items())
-        r_on[label] = {"seconds": best, "wire_bytes": int(st.wire_bytes),
-                       "retry_route_slack": int(st.retry_route_slack)}
-    assert h_on["compact"] == h_on["off"], "compact seam changed counts"
-    out["compaction_polya"] = r_on
+    out["compaction"] = {}
+    for corpus in ("polya", "powerlaw"):
+        reads = jnp.asarray(corpora[corpus])
+        caps = fabsp._resolve_compact(np.asarray(reads), cfg_on, P,
+                                      tuple(reads.shape), cfg_on.slack)
+        assert caps is not None, corpus + ": compaction seam did not engage"
+        h_on, r_on = {}, {}
+        for label, cfg in (("compact", cfg_on),
+                           ("off",
+                            fabsp.DAKCConfig(**base, compact_impl="off"))):
+            best, res, st = count(reads, cfg, mesh, ("pe",), repeats)
+            h_on[label] = sorted(merge(res).items())
+            r_on[label] = {"seconds": best, "wire_bytes": int(st.wire_bytes),
+                           "retry_route_slack": int(st.retry_route_slack)}
+        assert h_on["compact"] == h_on["off"], \
+            corpus + ": compact seam changed counts"
+        assert r_on["compact"]["retry_route_slack"] == 0, (
+            corpus + ": compact route caps under-fit (burnt "
+            f"{r_on['compact']['retry_route_slack']} doubled-slack round(s))")
+        r_on["compact_slots"] = caps[0]
+        out["compaction"][corpus] = r_on
+    out["compact_slots"] = out["compaction"]["polya"]["compact_slots"]
+    out["partition_work_reduction"] = n_slots / out["compact_slots"]
 
     # -- low-occupancy packed 2d: where the re-derived caps cut the wire --
     spec = genome.ReadSetSpec(genome_bases=256, n_reads=n_reads,

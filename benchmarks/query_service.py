@@ -13,9 +13,19 @@ pow2 shape bucket, each served in a single deterministic routed exchange
 - **miss-rate sweep**: fixed batch size, miss fraction 0 -> 1. Misses
   probe shorter walks on average (an empty slot ends the walk), so this
   sweep bounds how much the workload mix moves the numbers.
+- **spilled-tier sweep**: the batch sweep again through a spill-engaged
+  counter (ISSUE 10's spilled-bin query tier): the warmup request pays
+  the on-demand bin folds, steady state serves from the byte-bounded
+  shard cache -- rows carry the `bins_probed` / `bin_folds` columns so
+  the record shows the cache holding (bin_folds == 0 once warm).
+- **mixed read-write**: `update()` interleaved with serving rounds; each
+  round's queries are asserted exact against the committed prefix (the
+  epoch-pinned snapshot contract), with per-round update seconds and
+  serve QPS/p99.
 
-Every rep asserts exact counts against the finalize() histogram --
-correctness rides the benchmark, as everywhere in this suite.
+Every rep asserts exact counts against the finalize() histogram (the
+running committed prefix in the read-write section) -- correctness rides
+the benchmark, as everywhere in this suite.
 
 CPU caveat as everywhere: absolute QPS is not TPU-representative; the
 record tracks structure -- tail/median ratios, bucket scaling, and the
@@ -91,6 +101,9 @@ def _serve_stream(kc, oracle, uniq, batch, miss_rate, seed=0):
         "n_local": st.n_local, "batch_fill": st.batch_fill,
         "probe_avg": float(np.mean(probe_avg)),
         "wire_bytes_per_batch": st.wire_bytes,
+        # spilled-tier columns (0 / 0 on an in-core store; a warm shard
+        # cache shows bins_probed > 0 with bin_folds == 0)
+        "bins_probed": st.bins_probed, "bin_folds": st.bin_folds,
     }
 
 
@@ -129,6 +142,70 @@ def run() -> None:
                row["p50_ms"] / 1e3 / BATCH_SIZES[1],
                f"qps={row['qps']:.0f} p99={row['p99_ms']:.2f}ms "
                f"probe_avg={row['probe_avg']:.2f}")
+
+    # -- spilled tier: identical workload, spill-engaged store ------------
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        skc = fabsp.KmerCounter(mesh, fabsp.DAKCConfig(
+            k=K, chunk_reads=CHUNK_READS, spill="always", spill_dir=d,
+            spill_bins=8))
+        skc.update(reads)
+        record["spilled_sweep"] = []
+        for batch in BATCH_SIZES:
+            row = _serve_stream(skc, oracle, uniq, batch, 0.5, seed=batch)
+            record["spilled_sweep"].append(row)
+            report(f"query_service.spilled_batch{batch}",
+                   row["p50_ms"] / 1e3 / batch,
+                   f"qps={row['qps']:.0f} p50={row['p50_ms']:.2f}ms "
+                   f"p99={row['p99_ms']:.2f}ms "
+                   f"bins={row['bins_probed']} folds={row['bin_folds']}")
+            assert row["bin_folds"] == 0, \
+                "warm spilled stream should serve from the shard cache"
+
+    # -- mixed read-write: updates interleaved with serving ---------------
+    from repro.core import serial
+    rw = fabsp.KmerCounter(mesh, fabsp.DAKCConfig(k=K,
+                                                  chunk_reads=CHUNK_READS))
+    reads_np = np.asarray(reads)
+    n_rounds = 4
+    rows_per = max(CHUNK_READS,
+                   n_reads // n_rounds // CHUNK_READS * CHUNK_READS)
+    running: dict = {}
+    rng = np.random.default_rng(9)
+    record["read_write"] = []
+    n_req = max(2, N_REQUESTS // 2)
+    for r in range(n_rounds):
+        part = reads_np[r * rows_per:(r + 1) * rows_per]
+        if part.shape[0] < rows_per:
+            break
+        t0 = time.perf_counter()
+        rw.update(jnp.asarray(part))
+        upd_s = time.perf_counter() - t0
+        for w, n in serial.count_kmers_python(part, K).items():
+            running[w] = running.get(w, 0) + n
+        keys = np.asarray(sorted(running), np.uint32)
+        lat = []
+        for _ in range(n_req):
+            q = _request(rng, keys, BATCH_SIZES[1], 0.25)
+            t0 = time.perf_counter()
+            got = rw.count(q)
+            lat.append(time.perf_counter() - t0)
+            want = np.asarray([running.get(int(x), 0) for x in q],
+                              np.int32)
+            assert np.array_equal(got, want), \
+                "read-write round diverged from the committed prefix"
+        lat_arr = np.asarray(lat)
+        record["read_write"].append({
+            "round": r, "update_seconds": upd_s,
+            "n_requests": n_req,
+            "qps": BATCH_SIZES[1] * n_req / lat_arr.sum(),
+            "p50_ms": float(np.percentile(lat_arr, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat_arr, 99) * 1e3)})
+    last = record["read_write"][-1]
+    report("query_service.read_write",
+           last["p50_ms"] / 1e3 / BATCH_SIZES[1],
+           f"rounds={len(record['read_write'])} qps={last['qps']:.0f} "
+           f"p99={last['p99_ms']:.2f}ms update={last['update_seconds']:.2f}s")
 
     if not SMOKE:
         write_record("BENCH_query_service.json", record)

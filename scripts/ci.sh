@@ -69,20 +69,29 @@ echo "== skew-balance smoke gate =="
 # load-balance benchmark's smoke asserts -- in smoke mode too -- that
 # pre-route compaction cuts routed-slot partition work >= 1.5x on the
 # skewed corpus and the hashed minimizer order lands strictly lower
-# load_max_over_mean than plain on poly-A, histograms identical.
+# load_max_over_mean than plain on poly-A, histograms identical, and
+# (ISSUE 10) the peak-aware compact route caps fit both skewed corpora
+# in ONE round: retry_route_slack == 0, no doubled-slack retry burnt.
 python -m pytest -q tests/test_skew_balance.py -k "parity or polya"
 python -m benchmarks.run --smoke load_balance
+python -m repro.launch.kc_dryrun --skew polya --compact prefix
 
 echo "== query-service smoke gate =="
-# The online query path (ISSUE 9): batched lookup parity across the
-# {kmer,superkmer} x {1d,2d} grid plus request-order preservation
-# (tests/test_query.py; also tier-1 -- named gate), then the kc_serve
-# one-shot demo on a real 4-device mesh: count -> checkpoint -> restore
-# into the multi-tenant registry -> serve coalesced batches -> assert
-# exact counts vs finalize(), with the typed refusals (UnknownStore,
-# QueryUnavailable on an engaged spill tier) exercised on the way.
-python -m pytest -q tests/test_query.py -k "parity or order or lookup"
+# The online query path (ISSUE 9 + the ISSUE 10 spilled-bin tier):
+# batched lookup parity across the {kmer,superkmer} x {1d,2d} grid --
+# in-core AND spill-engaged (fold-then-query oracle) -- request-order
+# preservation, snapshot isolation (serve during an in-flight grow /
+# after a torn spill batch), and the flush failure-isolation contract
+# (tests/test_query.py, tests/test_serve.py; also tier-1 -- named
+# gate). Then the kc_serve one-shot demo on a real 4-device mesh:
+# count -> checkpoint -> restore into the multi-tenant registry ->
+# serve coalesced batches exactly, including the spilled-tenant serve
+# drill, the strict-refusal (spill_query='refuse') flush drill, and
+# the read-write interleave answering each committed prefix exactly.
+python -m pytest -q tests/test_query.py -k "parity or order or lookup or snapshot or cache"
+python -m pytest -q tests/test_serve.py
 python -m repro.launch.kc_serve --demo
+python -m repro.launch.kc_dryrun --query 2048
 
 echo "== benchmark smoke (superkmer + compact-hop-2 wire gates) =="
 # benchmarks/superkmer_transport.py asserts -- in smoke mode too -- that

@@ -55,6 +55,15 @@ every stored key is reachable from its home slot without crossing an
 empty slot, so count 0 means "never counted", never "maybe". Distributed
 queries route through `query.query_counts` (the aggregation protocol in
 reverse) and probe each PE's shard in place with this function.
+
+Generation handoff (`StoreSnapshot`): serving never reads the counter's
+LIVE arrays. `KmerCounter.update` publishes a `StoreSnapshot` -- the
+sharded key/count arrays, their capacity, and the spill tier's committed
+manifest view -- atomically at each batch commit, and `count()` probes
+that pinned generation. Store arrays are immutable jax values and sealed
+spill segments are immutable files, so a rehash, elastic fold, or spill
+replay in flight mutates only the counter's live references; a query
+racing it answers from the last committed histogram exactly.
 """
 
 from __future__ import annotations
@@ -74,6 +83,25 @@ class CountStore(NamedTuple):
     keys: jax.Array     # (capacity,) k-mer words; sentinel == empty slot
     counts: jax.Array   # (capacity,) int32 accumulated counts
     dropped: jax.Array  # () int32 live entries dropped (table full)
+
+
+class StoreSnapshot(NamedTuple):
+    """One committed store generation -- everything a query needs, pinned.
+
+    Published atomically (one reference assignment) by `KmerCounter` at
+    each batch commit; `count()` reads the snapshot, never the live
+    counter state. `spill_state` is the spill tier's committed manifest
+    (`SpillWriter.state()`) frozen at the same commit, or None while the
+    counter is purely in-core -- the spilled-bin query tier reads bins
+    through this pinned view (`SpillWriter.read_bin(b, segments=...)`),
+    so a later spill commit never leaks into an older generation's
+    answers.
+    """
+    gen: int                      # monotone commit counter (diagnostics)
+    keys: jax.Array               # (P * store_cap,) sharded store keys
+    counts: jax.Array             # (P * store_cap,) sharded store counts
+    store_cap: int                # per-PE slot count of THIS generation
+    spill_state: Optional[dict]   # committed manifest view, or None
 
 
 def empty_store(capacity: int, dtype) -> CountStore:

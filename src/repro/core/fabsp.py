@@ -144,9 +144,15 @@ Both hops run at capacity = per-PE batch size, so overflow is
 structurally impossible and a query never retries or rehashes; batch
 shapes bucket to pow2 so steady-state serving never retraces. Queries
 are exact against the committed store for any key set (misses included)
-but refuse, with the typed `query.QueryUnavailable`, while the spill
-tier holds counts in unfolded disk bins. `launch/kc_serve.py` is the
-multi-tenant harness over restored counters.
+in EVERY store regime: a spill-engaged counter serves through the
+spilled-bin tier (`query.query_spilled_counts` -- vestigial-store probe
+plus on-demand bin folds cached in a byte-bounded LRU), and `count()`
+always reads the counter's epoch-pinned `countstore.StoreSnapshot`, so
+a query racing an in-flight rehash, elastic fold, or spill replay
+answers from the last committed histogram exactly. The typed
+`query.QueryUnavailable` survives only under the opt-in strict mode
+`spill_query='refuse'`. `launch/kc_serve.py` is the multi-tenant
+harness over restored counters.
 
 Executable cache: `count_kmers` memoizes the jitted shard_map executable on
 (cfg, mesh, axis names, reads shape/dtype, slack, store capacity), so
@@ -300,6 +306,20 @@ class DAKCConfig:
     # device->host copy bytes (the backpressure of the double buffer).
     spill_flush_bytes: int = 1 << 22
     spill_host_budget_bytes: int = 1 << 27
+    # How count()/contains() serve a spill-engaged counter (core/query.py
+    # spilled-bin query tier). 'fold' (default): probe the in-core
+    # vestigial store, then group residual lookups per disk bin
+    # (spill.bin_of of the query's ownership key -- the writer's own bin
+    # family) and probe bin shards materialized on demand through the
+    # elastic fold, cached in a byte-bounded LRU. 'refuse' is the strict
+    # opt-out: raise the typed query.QueryUnavailable instead (a serving
+    # harness that would rather 503 than pay a fold on the read path).
+    spill_query: str = "fold"
+    # Byte budget of the per-counter LRU of materialized bin shards
+    # (query.BinShardCache): each entry costs P * store_cap slots of
+    # (key + int32 count). Small budgets stay correct -- a miss just
+    # re-folds the bin on the next touch.
+    query_bin_cache_bytes: int = 1 << 26
 
     def __post_init__(self):
         for knob, allowed in (
@@ -312,7 +332,8 @@ class DAKCConfig:
                 ("transport_impl", ("kmer", "superkmer")),
                 ("minimizer_order", ("plain", "hashed")),
                 ("compact_impl", ("prefix", "off")),
-                ("store_sizing", ("sample", "bound"))):
+                ("store_sizing", ("sample", "bound")),
+                ("spill_query", ("fold", "refuse"))):
             v = getattr(self, knob)
             if v not in allowed:
                 raise ValueError(f"{knob} must be one of {allowed}, got {v!r}")
@@ -346,6 +367,10 @@ class DAKCConfig:
                 f"got {self.spill!r}")
         if self.spill_bins is not None and self.spill_bins < 1:
             raise ValueError(f"spill_bins must be >= 1, got {self.spill_bins}")
+        if self.query_bin_cache_bytes < 1:
+            raise ValueError(
+                f"query_bin_cache_bytes must be >= 1, "
+                f"got {self.query_bin_cache_bytes}")
         if self.spill != "off":
             if self.spill_dir is None:
                 raise ValueError("spill != 'off' requires spill_dir")
@@ -985,32 +1010,51 @@ def _pow2ceil(x: int) -> int:
 _HOP2_SAMPLE_CHUNKS = 4
 
 
-def _chunk_valid_estimate(reads, cfg: DAKCConfig, mode: str,
-                          shape) -> Tuple[int, int]:
-    """Measured per-chunk (normal, heavy) VALID slot estimate -- the
-    occupancy the compact hop 2 sizes its tile for.
+def _chunk_valid_estimate(reads, cfg: DAKCConfig, mode: str, shape,
+                          num_pes: int = 1
+                          ) -> Tuple[int, int, int, int]:
+    """Measured per-chunk (normal, heavy, peak_normal, peak_heavy) VALID
+    slot estimate -- the occupancy the compact hop 2 sizes its tile for,
+    plus the single-owner PEAK the compact pre-route sizes its caps for.
 
     Up to `_HOP2_SAMPLE_CHUNKS` evenly-spaced chunks of the reads are
     pushed through the mode's own compression ('packed': distinct count;
     'dual': duplicate/heavy split; 'superkmer': actual minimizer-run
     count) and the per-chunk MAX is the estimate; 'none' ships every
-    instance so the shape bound is already exact. With no reads in hand
-    (shape-only lowering) the estimate degrades to the instance bound and
-    compact degenerates to padded. A sample smaller than one chunk is
-    scaled up (over-estimating -- the safe direction; an under-estimate
-    costs one padded-fallback round, the same discipline as every static
-    capacity).
+    instance so the shape bound is already exact. peak_* is the max over
+    sampled chunks of the busiest single destination's slot count under
+    the real owner hash (`owner_pe` of the lane's routed key: the word
+    for k-mer transport, the minimizer for super-k-mers) -- mean-density
+    caps under-fit exactly when this peak outruns est/P, i.e. on skewed
+    input. With no reads in hand (shape-only lowering) the estimate
+    degrades to the instance bound, the peak to the mean, and compact
+    degenerates to padded. A sample smaller than one chunk is scaled up
+    (over-estimating -- the safe direction; an under-estimate costs one
+    padded-fallback round, the same discipline as every static capacity).
     """
     n_reads, m = shape
     chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
+
+    def flat(est_n, est_h):
+        # no data: the best peak guess is the mean density
+        return (est_n, est_h, -(-est_n // num_pes), -(-est_h // num_pes))
+
     if mode == "none" or reads is None or n_reads == 0:
         if mode == "superkmer":
-            return minimizer.expected_superkmers(
-                cfg.chunk_reads, m, cfg.k, cfg.minimizer_len), 0
-        return chunk_kmers * (2 if mode == "dual" else 1), chunk_kmers
+            return flat(minimizer.expected_superkmers(
+                cfg.chunk_reads, m, cfg.k, cfg.minimizer_len), 0)
+        return flat(chunk_kmers * (2 if mode == "dual" else 1), chunk_kmers)
+
+    def owner_peak(words, weights=None):
+        if words.size == 0:
+            return 0
+        own = np.asarray(owner_pe(jnp.asarray(words), num_pes))
+        return int(np.bincount(own, weights=weights,
+                               minlength=num_pes).max())
+
     reads = jnp.asarray(reads)
     n_chunks = max(1, n_reads // cfg.chunk_reads)
-    est_n = est_h = 0
+    est_n = est_h = peak_n = peak_h = 0
     for c in sorted({(i * n_chunks) // _HOP2_SAMPLE_CHUNKS
                      for i in range(min(_HOP2_SAMPLE_CHUNKS, n_chunks))}):
         lo = c * cfg.chunk_reads
@@ -1021,21 +1065,28 @@ def _chunk_valid_estimate(reads, cfg: DAKCConfig, mode: str,
                 sample, cfg.k, cfg.minimizer_len, cfg.bits_per_symbol,
                 canonical=cfg.canonical, canonical_impl=cfg.canonical_impl,
                 order=cfg.minimizer_order)
-            est_n = max(est_n, scale * int((np.asarray(sk.lengths) > 0)
-                                           .sum()))
+            valid = np.asarray(sk.lengths) > 0
+            est_n = max(est_n, scale * int(valid.sum()))
+            peak_n = max(peak_n, scale * owner_peak(
+                np.asarray(sk.minimizers)[valid]))
             continue
         words = np.asarray(encoding.extract_kmers(
             sample, cfg.k, cfg.bits_per_symbol, canonical=cfg.canonical,
             canonical_impl=cfg.canonical_impl))
-        _, counts = np.unique(words, return_counts=True)
+        uniq, counts = np.unique(words, return_counts=True)
         if mode == "packed":
             est_n = max(est_n, scale * int(counts.size))
+            peak_n = max(peak_n, scale * owner_peak(uniq))
             continue
         # 'dual': NORMAL ships `count` copies for count <= 2, HEAVY a pair.
         est_n = max(est_n, scale * int((counts == 1).sum()
                                        + 2 * (counts == 2).sum()))
         est_h = max(est_h, scale * int((counts > 2).sum()))
-    return est_n, est_h
+        normal = counts <= 2
+        peak_n = max(peak_n, scale * owner_peak(
+            uniq[normal], counts[normal].astype(np.float64)))
+        peak_h = max(peak_h, scale * owner_peak(uniq[~normal]))
+    return est_n, est_h, peak_n, peak_h
 
 
 def _hop2_engaged(cfg: DAKCConfig) -> bool:
@@ -1067,7 +1118,7 @@ def _resolve_hop2_caps(reads, cfg: DAKCConfig, num_pes: int, shape,
         return None
     mode, cap_n, cap_h = _plan_caps(cfg, num_pes, shape, slack)
     est_n, est_h = (_chunk_valid_estimate(reads, cfg, mode, shape)
-                    if est is None else est)
+                    if est is None else est)[:2]
 
     def cap2(cap, est_lane):
         return min(cap, max(64, _pow2ceil(
@@ -1096,34 +1147,48 @@ def _resolve_compact(reads, cfg: DAKCConfig, num_pes: int, shape,
     routing slack, rounded UP to a power of two for executable-cache
     stability and floored at 64 (Poisson tails at tiny estimates cost
     nothing). route_cap_* is the re-derived per-destination capacity the
-    compacted lanes route at -- the measured-density plan instead of the
-    positional shape bound, the same two-capacity formula as the compact
-    hop 2 and where the hop-1 wire bytes actually drop; clamped to the
-    positional capacity, where compaction degenerates to the plain tile.
-    A mis-estimate costs one doubled-slack round (both capacities
-    re-derive from the controller's slack), the usual discipline.
+    compacted lanes route at -- sized to the LARGER of the mean-density
+    plan and the measured single-owner peak with the routing slack as
+    headroom: mean density alone under-fits exactly on skewed input
+    (poly-A or power-law reads concentrate one minimizer's whole load on
+    one owner), which burnt a doubled-slack retry round per batch before
+    the peak term. Clamped to the positional capacity, where compaction
+    degenerates to the plain tile. A mis-estimate still costs only one
+    doubled-slack round (both capacities re-derive from the controller's
+    slack), the usual discipline.
     """
     if not _compact_engaged(cfg):
         return None
     mode, cap_n, cap_h = _plan_caps(cfg, num_pes, shape, slack)
     if mode == "none":
         return None
-    est_n, est_h = (_chunk_valid_estimate(reads, cfg, mode, shape)
-                    if est is None else est)
+    est_n, est_h, peak_n, peak_h = (
+        _chunk_valid_estimate(reads, cfg, mode, shape, num_pes)
+        if est is None else est)
     n_reads, m = shape
     chunk_kmers = cfg.chunk_reads * (m - cfg.k + 1)
     n_n = chunk_kmers * (2 if mode == "dual" else 1)
 
-    def caps(n_slots, est_lane, cap_lane):
+    def caps(n_slots, est_lane, peak_lane, cap_lane):
         cc = max(64, _pow2ceil(int(math.ceil(max(est_lane, 1) * slack))))
         if cc >= n_slots:
             return n_slots, cap_lane     # already dense: seam is a no-op
-        rc = min(cap_lane, max(64, _pow2ceil(
-            plan_capacity(max(est_lane, 1), num_pes, slack))))
+        peak_need = int(math.ceil(max(peak_lane, 1) * slack))
+        target = max(plan_capacity(max(est_lane, 1), num_pes, slack),
+                     peak_need)
+        # The ceiling is the positional cap while the measured peak fits
+        # under it (routing above what the padded tile ships would only
+        # inflate the wire), but when the hottest owner overflows the
+        # positional cap -- the skewed inputs the peak term exists for,
+        # where the mean-density plan burnt a doubled-slack round -- it
+        # lifts to the compacted slot count: a sender only HAS cc slots,
+        # so rc == cc routes any skew overflow-free.
+        ceiling = cap_lane if peak_need <= cap_lane else cc
+        rc = min(ceiling, max(64, _pow2ceil(target)))
         return cc, rc
 
-    cc_n, rc_n = caps(n_n, est_n, cap_n)
-    cc_h, rc_h = (caps(chunk_kmers, est_h, cap_h) if mode == "dual"
+    cc_n, rc_n = caps(n_n, est_n, peak_n, cap_n)
+    cc_h, rc_h = (caps(chunk_kmers, est_h, peak_h, cap_h) if mode == "dual"
                   else (0, 0))
     if cc_n >= n_n and (mode != "dual" or cc_h >= chunk_kmers):
         return None
@@ -1256,7 +1321,7 @@ def count_kmers(reads: jax.Array, mesh: Mesh, cfg: DAKCConfig,
         # sample once; retries re-plan on it (shared by the compact hop-2
         # tile and the pre-route compaction -- one measured estimate)
         mode = _plan_caps(cfg, num_pes, shape, slack)[0]
-        _hop2_est = _chunk_valid_estimate(reads, cfg, mode, shape)
+        _hop2_est = _chunk_valid_estimate(reads, cfg, mode, shape, num_pes)
     ctrl = resilience.RetryController(cfg.retry, slack=slack,
                                       store_cap=store_cap,
                                       hop2_padded=not engaged)
@@ -1591,6 +1656,15 @@ class KmerCounter:
         # stats of the most recent count()/contains() batch
         # (core/query.py QueryStats; None before any query)
         self.last_query_stats = None
+        # epoch-pinned committed generation (countstore.StoreSnapshot):
+        # count()/contains() read ONLY this, never the live references
+        # above, so a query racing an in-flight rehash / fold / spill
+        # replay answers from the last committed histogram exactly
+        self._gen = 0
+        self._committed: Optional[countstore.StoreSnapshot] = None
+        # lazy per-counter LRU of materialized bin shards for the
+        # spilled-bin query tier (query.BinShardCache)
+        self._bin_cache = None
 
     @property
     def store_capacity(self) -> Optional[int]:
@@ -1635,6 +1709,21 @@ class KmerCounter:
                 self._rounds, dict(self._retries), dropped=int(dropped))
         self._skeys, self._scounts = nk, nc
         self._store_cap = new_cap
+
+    def _publish(self) -> None:
+        """Publish the current store state as the committed generation.
+
+        Called exactly once per clean batch commit (and on restore) --
+        one reference assignment, so it is atomic with respect to any
+        concurrent `count()`. jax arrays are immutable and sealed spill
+        segments are immutable files, so the snapshot stays valid however
+        the live references move afterwards (`_grow`, `_engage_spill`,
+        a failed replay, ...)."""
+        self._gen += 1
+        self._committed = countstore.StoreSnapshot(
+            gen=self._gen, keys=self._skeys, counts=self._scounts,
+            store_cap=self._store_cap,
+            spill_state=None if self._spill is None else self._spill.state())
 
     def update(self, reads: jax.Array) -> DAKCStats:
         """Fold one (n_reads, m) batch into the store; returns this batch's
@@ -1687,7 +1776,8 @@ class KmerCounter:
         if engaged or _compact_engaged(self._cfg):
             mode = _plan_caps(self._cfg, self._num_pes, shape,
                               self._slack)[0]
-            hop2_est = _chunk_valid_estimate(reads, self._cfg, mode, shape)
+            hop2_est = _chunk_valid_estimate(reads, self._cfg, mode, shape,
+                                             self._num_pes)
         ctrl = resilience.RetryController(
             self._cfg.retry, slack=self._slack, store_cap=self._store_cap,
             hop2_padded=not engaged, history=self._rounds)
@@ -1726,6 +1816,7 @@ class KmerCounter:
         batch_fill = np.asarray(raw_stats[7], dtype=np.int64)
         self._fill = (batch_fill if self._fill is None
                       else self._fill + batch_fill)
+        self._publish()
         return _stamp_retries(stats, ctrl.counts)
 
     # --- the spill tier (core/spill.py) --------------------------------------
@@ -1842,6 +1933,7 @@ class KmerCounter:
         self._wire_bytes += wire
         fill = fill.astype(np.int64)
         self._fill = fill if self._fill is None else self._fill + fill
+        self._publish()
         lmm, p99 = _imbalance(fill)
         stats = DAKCStats(
             overflow=0, sent_words=rs[2], wire_bytes=np.int64(wire),
@@ -1850,6 +1942,35 @@ class KmerCounter:
             spilled_bins=w.spilled_bins, spilled_bytes=w.spilled_bytes,
             bins_folded=self._bins_folded)
         return _stamp_retries(stats, ctrl.counts)
+
+    def _bin_pairs(self, b: int, segments=None):
+        """Read + decode one bin's committed records into host (keys,
+        counts) arrays, or None for an empty bin. `segments` pins the
+        manifest view (a snapshot's `spill_state['segments']`) so the
+        spilled-bin query tier reads its own committed generation; None
+        reads the live manifest (the drain path). Super-k-mer segments
+        decode back to k-mer pairs here, so every consumer folds one
+        uniform record stream."""
+        cfg = self._cfg
+        keys_l, cnts_l = [], []
+        for kind, arrays in self._spill.read_bin(b, segments=segments):
+            if kind == "pairs":
+                keys_l.append(np.asarray(arrays["keys"], dtype=self._dtype))
+                cnts_l.append(np.asarray(arrays["counts"], dtype=np.int32))
+            else:
+                kk, cc = minimizer.superkmer_to_kmers(
+                    jnp.asarray(arrays["words"]),
+                    jnp.asarray(arrays["lengths"]), cfg.k,
+                    cfg.minimizer_len, cfg.bits_per_symbol,
+                    canonical=cfg.canonical,
+                    canonical_impl=cfg.canonical_impl)
+                kk, cc = np.asarray(kk), np.asarray(cc)
+                m = cc > 0
+                keys_l.append(kk[m])
+                cnts_l.append(cc[m].astype(np.int32))
+        if not keys_l:
+            return None
+        return np.concatenate(keys_l), np.concatenate(cnts_l)
 
     def _drain_bins(self) -> Tuple[AccumResult, int]:
         """Fold phase: count each bin independently -- read + checksum its
@@ -1868,28 +1989,10 @@ class KmerCounter:
         shard_c = [[] for _ in range(nsh)]
         folded = 0
         for b in range(w.n_bins):
-            keys_l, cnts_l = [], []
-            for kind, arrays in w.read_bin(b):
-                if kind == "pairs":
-                    keys_l.append(np.asarray(arrays["keys"],
-                                             dtype=self._dtype))
-                    cnts_l.append(np.asarray(arrays["counts"],
-                                             dtype=np.int32))
-                else:
-                    kk, cc = minimizer.superkmer_to_kmers(
-                        jnp.asarray(arrays["words"]),
-                        jnp.asarray(arrays["lengths"]), cfg.k,
-                        cfg.minimizer_len, cfg.bits_per_symbol,
-                        canonical=cfg.canonical,
-                        canonical_impl=cfg.canonical_impl)
-                    kk, cc = np.asarray(kk), np.asarray(cc)
-                    m = cc > 0
-                    keys_l.append(kk[m])
-                    cnts_l.append(cc[m].astype(np.int32))
-            if not keys_l:
+            pairs = self._bin_pairs(b)
+            if pairs is None:
                 continue
-            keys = np.concatenate(keys_l)
-            cnts = np.concatenate(cnts_l)
+            keys, cnts = pairs
             nk, nc, cap = self._fold_pairs(keys, cnts)
             res = _finalize_executable(cfg, self._mesh, self._axes,
                                        cap)(nk, nc)
@@ -1962,7 +2065,7 @@ class KmerCounter:
 
     def count(self, kmers) -> np.ndarray:
         """Batched lookup: per-query occurrence counts from the committed
-        sharded store, in request order (0 = never counted).
+        store generation, in request order (0 = never counted).
 
         `kmers` is (n,) packed words or (n, k) base codes; packing and
         canonicalization match the counting path exactly, so the returned
@@ -1971,23 +2074,39 @@ class KmerCounter:
         store is untouched and updates may continue afterwards. Each
         call's `query.QueryStats` lands in `self.last_query_stats`.
 
+        Serves the epoch-pinned `countstore.StoreSnapshot` published at
+        the last batch commit, NEVER the live references: a query racing
+        an in-flight rehash, elastic fold, or spill replay answers from
+        the last committed histogram exactly. A spill-engaged generation
+        serves through the spilled-bin tier (`query.query_spilled_counts`
+        -- vestigial-store probe, then per-bin residual lookups against
+        on-demand bin folds cached in a `query_bin_cache_bytes`-bounded
+        LRU); under the strict opt-in `spill_query='refuse'` it raises
+        the typed `query.QueryUnavailable` instead.
+
         Executable reuse: batch sizes are bucketed by the pow2 per-PE
         slot count, so a serving stream retraces once per bucket and
-        store generation, never per request. Raises the typed
-        `query.QueryUnavailable` while the spill tier is engaged (the
-        in-core store is vestigial then; probing it would undercount).
+        store generation, never per request.
         """
         from repro.core import query as query_lib
-        if self._spill is not None:
-            raise query_lib.QueryUnavailable(
-                "counter has an engaged spill tier: counts live in disk "
-                "bins, and the in-core store would undercount; the "
-                "spilled-bin query tier is a recorded follow-up")
-        if self._skeys is None:
+        snap = self._committed
+        if snap is None:
             raise RuntimeError("KmerCounter.count before any update")
-        counts, stats = query_lib.query_counts(
-            kmers, self._mesh, self._cfg, self._skeys, self._scounts,
-            axis_names=self._axes)
+        if snap.spill_state is not None:
+            # dispatch on the COMMITTED generation, not self._spill: an
+            # auto-engage whose first spill replay died leaves the live
+            # tier engaged while the committed histogram is still in-core
+            if self._cfg.spill_query == "refuse":
+                raise query_lib.QueryUnavailable(
+                    "counter's committed generation has an engaged spill "
+                    "tier and cfg.spill_query='refuse' opts out of the "
+                    "spilled-bin query tier's on-demand folds")
+            counts, stats = query_lib.query_spilled_counts(self, snap,
+                                                           kmers)
+        else:
+            counts, stats = query_lib.query_counts(
+                kmers, self._mesh, self._cfg, snap.keys, snap.counts,
+                axis_names=self._axes)
         self.last_query_stats = stats
         return counts
 
@@ -2118,6 +2237,7 @@ class KmerCounter:
                                            self._sharding())
         else:
             self._reshard_from(keys_np, counts_np)
+        self._publish()
         return self
 
     def _fold_pairs(self, keys: np.ndarray, counts: np.ndarray, *,

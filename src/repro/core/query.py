@@ -43,11 +43,31 @@ bucket and store generation, then reuses it forever. `KmerCounter.count /
 contains` is the user-facing wrapper; `launch/kc_serve.py` is the
 multi-tenant harness on top.
 
-Spill tier: a counter whose spill tier is engaged keeps most of its
-counts in disk bins, not in the in-core store; probing the vestigial
-store would silently undercount. `KmerCounter.count` raises the typed
-`QueryUnavailable` instead (the spilled-bin query tier is a recorded
-ROADMAP follow-up).
+Spilled-bin tier (`query_spilled_counts`): a counter whose spill tier is
+engaged keeps most of its counts in disk bins, with only a vestigial
+in-core store; probing that store alone would silently undercount.
+Instead the query runs in two stages. Stage 1 is the ordinary routed
+probe above, against the snapshot's (vestigial) store. Stage 2 groups
+the queries per disk bin by their bin key -- `spill.bin_of` of the same
+ownership key the WRITER binned by (the third hash family), so a query
+word lands in exactly the bin holding its records -- folds each touched
+bin on demand through the counter's elastic fold (`_fold_pairs`, the
+same engine the drain uses) into a sharded bin shard, probes it with the
+same read-only lookup executable, and adds the residuals into the
+request-ordered answer. Folded shards live in a byte-bounded LRU
+(`BinShardCache`, budget `DAKCConfig.query_bin_cache_bytes`) keyed by
+the snapshot's segment list, so steady-state serving re-probes cached
+shards and a new store generation naturally invalidates; an evicted bin
+just re-folds on its next touch. Bins partition k-mer space, so
+vestigial + residual IS the exact count. The typed `QueryUnavailable`
+survives only under the opt-in strict mode `spill_query='refuse'` (a
+harness that would rather 503 than pay fold latency on the read path).
+
+Generation pinning: `KmerCounter.count` passes the epoch-pinned
+`countstore.StoreSnapshot` -- store arrays AND the spill manifest view
+frozen at the last batch commit -- so both stages answer from one
+committed generation even while an update, rehash, or spill replay is
+in flight.
 """
 
 from __future__ import annotations
@@ -59,15 +79,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import aggregation, compat, countstore, encoding, fabsp
+from repro.core import aggregation, compat, countstore, encoding, fabsp, spill
 from repro.core.owner import owner_pe
 from repro.kernels import ops
 
 
 class QueryUnavailable(RuntimeError):
-    """The counter cannot serve exact answers from its in-core store --
-    its spill tier is engaged and the disk bins are not folded in. Typed
-    so a serving harness can 503 the tenant instead of undercounting."""
+    """The counter declines to serve: its committed generation has an
+    engaged spill tier and the config opted out of the spilled-bin query
+    tier's on-demand folds (`spill_query='refuse'`). Typed so a serving
+    harness can 503 the tenant instead of paying fold latency."""
 
 
 class QueryStats(NamedTuple):
@@ -79,10 +100,60 @@ class QueryStats(NamedTuple):
     probe_max: int      # deepest single probe walk
     n_local: int        # per-PE padded slot count (the shape bucket)
     batch_fill: float   # n_queries / (n_local * P) -- padding waste
+    bins_probed: int = 0  # spilled-bin stage: distinct disk bins probed
+    bin_folds: int = 0    # ... of which needed an on-demand fold (cache
+                          # misses; 0 on a warm cache or in-core store)
 
     @property
     def probe_avg(self) -> float:
         return self.probe_sum / max(1, self.n_queries)
+
+
+class BinShardCache:
+    """Byte-bounded LRU of materialized spill-bin shards.
+
+    One entry per disk bin: the sharded (keys, counts) store that bin's
+    records folded into, costing `P * cap * (key + int32)` bytes of
+    device memory. Entries are keyed by the bin id and VERSIONED by the
+    snapshot's segment-file tuple, so a later spill commit (new segments
+    in the bin) misses cleanly instead of serving a stale shard.
+    Eviction is LRU past `budget_bytes`, always keeping the newest entry
+    (a budget smaller than one shard still serves -- every touch just
+    re-folds). Counters (`hits`/`misses`/`evictions`) feed the serving
+    stats and the eviction tests.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self._entries = {}   # bin -> (version, keys, counts, nbytes)
+        self._order = []     # LRU order, oldest first
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, b: int, version):
+        e = self._entries.get(b)
+        if e is None or e[0] != version:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._order.remove(b)
+        self._order.append(b)
+        return e[1], e[2]
+
+    def put(self, b: int, version, keys: jax.Array,
+            counts: jax.Array) -> None:
+        nbytes = int(keys.size) * (keys.dtype.itemsize
+                                   + counts.dtype.itemsize)
+        if b in self._entries:
+            self._order.remove(b)
+        self._entries[b] = (version, keys, counts, nbytes)
+        self._order.append(b)
+        total = sum(e[3] for e in self._entries.values())
+        while total > self.budget_bytes and len(self._order) > 1:
+            oldest = self._order.pop(0)
+            total -= self._entries.pop(oldest)[3]
+            self.evictions += 1
 
 
 def pack_queries(kmers, cfg) -> jax.Array:
@@ -214,3 +285,72 @@ def query_counts(kmers, mesh: Mesh, cfg, skeys: jax.Array,
         probe_sum=int(psum), probe_max=int(pmax), n_local=n_local,
         batch_fill=nq / (n_local * num_pes))
     return counts, stats
+
+
+def query_spilled_counts(kc, snap, kmers):
+    """Two-stage lookup against a spill-engaged store generation.
+
+    kc: the `fabsp.KmerCounter` (mesh, cfg, fold engine, bin cache).
+    snap: the pinned `countstore.StoreSnapshot` to serve -- its store
+    arrays AND its `spill_state` manifest view; a commit racing this
+    call never leaks in. Returns (counts, QueryStats) exactly like
+    `query_counts`: request-ordered, exact for any query set.
+
+    Stage 1 probes the snapshot's (vestigial) in-core store with the
+    ordinary routed executable. Stage 2 bins the query words with the
+    writer's own bin key (`spill.bin_of` over `fabsp._ownership_keys` --
+    under super-k-mer transport each k-mer's recomputed minimizer equals
+    the minimizer its enclosing super-k-mer was binned by, the same
+    invariant the engage-time export relies on), folds each touched bin
+    on demand into a sharded shard via `kc._fold_pairs` (LRU-cached,
+    `BinShardCache`), probes the subset of queries that bin owns, and
+    adds the residuals. Bins partition k-mer space, so the sum is the
+    exact committed count.
+    """
+    cfg, mesh, axes = kc._cfg, kc._mesh, kc._axes
+    words = np.asarray(pack_queries(kmers, cfg))
+    nq = int(words.shape[0])
+    counts, stats = query_counts(words, mesh, cfg, snap.keys, snap.counts,
+                                 axis_names=axes)
+    counts = counts.copy()       # accumulate residuals in place
+    sp = snap.spill_state
+    n_bins = int(sp["n_bins"])
+    by_bin = {}
+    for seg in sp["segments"]:
+        by_bin.setdefault(int(seg["bin"]), []).append(seg)
+    wire = stats.wire_bytes
+    probe_sum, probe_max = stats.probe_sum, stats.probe_max
+    bins_probed = bin_folds = 0
+    if nq and by_bin:
+        cache = kc._bin_cache
+        if cache is None or cache.budget_bytes != cfg.query_bin_cache_bytes:
+            cache = kc._bin_cache = BinShardCache(cfg.query_bin_cache_bytes)
+        qbins = np.asarray(spill.bin_of(
+            fabsp._ownership_keys(jnp.asarray(words), cfg), n_bins))
+        for b in np.unique(qbins):
+            segs = by_bin.get(int(b))
+            if not segs:
+                continue         # no committed records: residual is 0
+            version = tuple(s["file"] for s in segs)
+            shard = cache.get(int(b), version)
+            if shard is None:
+                pairs = kc._bin_pairs(int(b), segments=segs)
+                if pairs is None:
+                    continue
+                bk, bc, _cap = kc._fold_pairs(pairs[0], pairs[1])
+                cache.put(int(b), version, bk, bc)
+                shard = (bk, bc)
+                bin_folds += 1
+            idx = np.nonzero(qbins == b)[0]
+            sub, sstats = query_counts(words[idx], mesh, cfg, shard[0],
+                                       shard[1], axis_names=axes)
+            counts[idx] += sub
+            wire += sstats.wire_bytes
+            probe_sum += sstats.probe_sum
+            probe_max = max(probe_max, sstats.probe_max)
+            bins_probed += 1
+    return counts, QueryStats(
+        n_queries=nq, n_hits=int((counts > 0).sum()), wire_bytes=wire,
+        probe_sum=probe_sum, probe_max=probe_max, n_local=stats.n_local,
+        batch_fill=stats.batch_fill, bins_probed=bins_probed,
+        bin_folds=bin_folds)

@@ -305,10 +305,20 @@ class SpillWriter:
 
     # -- drain -------------------------------------------------------------
 
-    def read_bin(self, b: int) -> Iterator[Tuple[str, dict]]:
+    def read_bin(self, b: int,
+                 segments: Optional[List[dict]] = None
+                 ) -> Iterator[Tuple[str, dict]]:
         """Yield (kind, arrays) for every committed segment of bin `b`,
-        verifying size + CRC32 against the manifest (-> `SpillCorrupt`)."""
-        for seg in self._segments:
+        verifying size + CRC32 against the manifest (-> `SpillCorrupt`).
+
+        `segments` pins the manifest view to read from -- a snapshot of an
+        earlier `state()['segments']` -- instead of the live committed
+        list. The query tier reads through it so a lookup racing a later
+        batch commit still answers from its pinned store generation
+        (sealed segment files are immutable, so an older manifest view
+        stays readable as long as its files exist).
+        """
+        for seg in (self._segments if segments is None else segments):
             if seg["bin"] != b:
                 continue
             path = os.path.join(self.root, seg["file"])

@@ -273,6 +273,23 @@ def run_query(n_queries: int, n_reads: int, read_len: int, k: int,
     print(f"  live 4-PE batch: n={st.n_queries} hits={st.n_hits} "
           f"fill={st.batch_fill:.2f} probe_avg={st.probe_avg:.2f} "
           f"probe_max={st.probe_max} wire_bytes={st.wire_bytes}")
+
+    # spilled-tier serve drill: the same queries against a spill-engaged
+    # counter must answer identically through the on-demand bin folds
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        sp = fabsp.KmerCounter(small, DAKCConfig(
+            k=13, chunk_reads=32, spill="always", spill_dir=d,
+            spill_bins=6))
+        sp.update(reads)
+        got_sp = sp.count(q)
+        if not np.array_equal(got_sp, want):
+            raise SystemExit("FAIL: spilled-tier query batch diverged "
+                             "from finalize()")
+        st = sp.last_query_stats
+        print(f"  spilled-tier batch: n={st.n_queries} hits={st.n_hits} "
+              f"bins_probed={st.bins_probed} bin_folds={st.bin_folds} "
+              f"wire_bytes={st.wire_bytes}")
     print("query dry-run OK")
 
 
@@ -427,6 +444,12 @@ def run_skew(skew: str, order: str, compact: str) -> None:
               f"owner_fill_p99={stats.owner_fill_p99} "
               f"wire_bytes={stats.wire_bytes} "
               f"retries(route-slack)={stats.retry_route_slack}")
+        # the peak-aware compact route caps must fit skewed input in ONE
+        # round (ISSUE 10 acceptance: no doubled-slack retry burnt)
+        if compact == "prefix" and stats.retry_route_slack != 0:
+            raise SystemExit(f"FAIL: order={o} compact route caps "
+                             f"under-fit ({stats.retry_route_slack} "
+                             f"route-slack round(s) burnt)")
     print("skew demo OK")
 
 

@@ -15,15 +15,25 @@ driver/engine split `launch/serve.py` sketches for the LM stack:
   `RequestStats` (batch fill, probe depth, route wire bytes, latency).
   `query()` is the unbatched one-shot.
 
-Typed errors, never silent wrong answers: an unknown tenant raises
-`UnknownStore`; a tenant whose spill tier holds unfolded disk bins raises
-`query.QueryUnavailable` from the counter itself (this PR serves from the
-in-core committed store only -- the spilled-bin query tier is a recorded
-ROADMAP follow-up).
+Serves EVERY store regime: a spill-engaged tenant answers exactly through
+the spilled-bin query tier (`query.query_spilled_counts` -- on-demand bin
+folds behind a byte-bounded LRU), and a LIVE tenant accepts `update()`
+between flushes -- `count()` reads the counter's epoch-pinned committed
+snapshot, so each flush answers the last committed prefix exactly.
+
+Typed errors, never silent wrong answers OR silently dropped work: an
+unknown tenant raises `UnknownStore` at intake; a tenant opting out of
+spilled serving (`spill_query='refuse'`) fails with the typed
+`query.QueryUnavailable`. `flush()` isolates failures per tenant: every
+submitted request gets an entry aligned with submission order -- either
+(counts, RequestStats) or the typed exception instance -- so one tenant
+refusing never discards another tenant's computed answers or queued
+requests.
 
   PYTHONPATH=src python -m repro.launch.kc_serve --demo
       # one-shot CI gate: count -> save -> restore into the registry ->
-      # serve batched queries -> assert exact counts vs finalize()
+      # serve batched queries (in-core, spilled, strict-refusal, and
+      # read-write interleave drills) -> assert exact counts
   PYTHONPATH=src python -m repro.launch.kc_serve --demo --requests 64
       # same, then a small serving loop printing QPS / latency
 """
@@ -118,29 +128,69 @@ class QueryService:
         """Serve every queued request: one coalesced device batch per
         tenant (concatenated queries ride one routed exchange and one
         shape-bucketed executable), answers split back in request order.
-        Returns [(counts, RequestStats)] aligned with submission order."""
+
+        Returns a list aligned with submission order; each entry is
+        (counts, RequestStats) on success, or the typed exception
+        instance (`query.QueryUnavailable`, `UnknownStore`) when that
+        request's tenant failed to serve. Failures are isolated per
+        tenant -- one tenant refusing never throws away another tenant's
+        computed answers or drops its queued requests. Zero-query
+        requests short-circuit with an empty answer and zeroed stats, no
+        device round-trip; the coalesced batch carries the tenant's own
+        packed-word dtype (`_batch_dtype`), never a hardcoded uint32."""
+        from repro.core import query as query_lib
         pending, self._pending = self._pending, []
         by_tenant: Dict[str, List[int]] = {}
         for i, (tenant, _) in enumerate(pending):
             by_tenant.setdefault(tenant, []).append(i)
-        results: List[Optional[Tuple[np.ndarray, RequestStats]]] = \
-            [None] * len(pending)
+        results: List[object] = [None] * len(pending)
         for tenant, idxs in by_tenant.items():
-            counter = self._registry.get(tenant)
-            sizes = [len(pending[i][1]) for i in idxs]
-            batch = np.concatenate([pending[i][1] for i in idxs]) \
-                if sum(sizes) else np.zeros((0,), np.uint32)
-            t0 = time.perf_counter()
-            counts = counter.count(batch)
-            dt = time.perf_counter() - t0
+            try:
+                counter = self._registry.get(tenant)
+                for i in idxs:
+                    if len(pending[i][1]) == 0:
+                        results[i] = (np.zeros((0,), np.int32),
+                                      self._zero_stats(tenant))
+                live = [i for i in idxs if len(pending[i][1])]
+                if not live:
+                    continue
+                dt_word = self._batch_dtype(counter)
+                batch = np.concatenate(
+                    [pending[i][1] if pending[i][1].ndim != 1
+                     else pending[i][1].astype(dt_word, copy=False)
+                     for i in live])
+                t0 = time.perf_counter()
+                counts = counter.count(batch)
+                dt = time.perf_counter() - t0
+            except (query_lib.QueryUnavailable, UnknownStore) as e:
+                for i in idxs:
+                    results[i] = e
+                continue
             qs = counter.last_query_stats
             off = 0
-            for i, n in zip(idxs, sizes):
+            for i in live:
+                n = len(pending[i][1])
                 part = counts[off:off + n]
                 off += n
                 results[i] = (part, self._request_stats(
                     tenant, qs, n, dt, n_hits=int((part > 0).sum())))
         return results
+
+    @staticmethod
+    def _batch_dtype(counter) -> np.dtype:
+        """The tenant's packed-word dtype (uint32, or uint64 once k
+        outgrows one 32-bit word) -- derived from its cfg, so empty and
+        mixed-dtype requests coalesce to the store's own word width."""
+        from repro.core import encoding
+        cfg = counter._cfg
+        return np.dtype(encoding.kmer_dtype(cfg.k, cfg.bits_per_symbol))
+
+    @staticmethod
+    def _zero_stats(tenant: str) -> RequestStats:
+        return RequestStats(tenant=tenant, n_queries=0, n_hits=0,
+                            batch_queries=0, batch_fill=0.0, n_local=0,
+                            probe_avg=0.0, probe_max=0, wire_bytes=0,
+                            seconds=0.0)
 
     @staticmethod
     def _request_stats(tenant: str, qs, n: int, seconds: float, *,
@@ -217,22 +267,79 @@ def run_demo(n_requests: int = 0) -> None:
                   f"probe_avg={st.probe_avg:.2f} max={st.probe_max} "
                   f"wire={st.wire_bytes}")
 
-        # typed-error paths: unknown tenant, then an engaged spill tier
+        # typed-error path: unknown tenants fail at intake
         try:
             service.submit("yeast", q[:4])
             raise SystemExit("FAIL: unknown tenant did not raise")
         except UnknownStore:
             pass
+
+        # spilled-tenant serve drill: a spill-engaged counter answers
+        # EXACTLY through the spilled-bin query tier (default 'fold')
         spilled = fabsp.KmerCounter(mesh, dataclasses.replace(
             cfg, spill="always", spill_dir=ckpt_dir + "/spill"))
         spilled.update(reads)
         registry.register("spilled", spilled)
-        try:
-            service.query("spilled", q[:4])
-            raise SystemExit("FAIL: spilled tenant did not raise "
-                             "QueryUnavailable")
-        except query.QueryUnavailable:
-            print("  spilled tenant refused with QueryUnavailable (typed)")
+        sq = q[:256]
+        counts, st = service.query("spilled", sq)
+        want = np.asarray([oracle.get(int(x), 0) for x in sq], np.int32)
+        if not np.array_equal(counts, want):
+            raise SystemExit("FAIL: spilled tenant counts diverged from "
+                             "the finalize() histogram")
+        sqs = spilled.last_query_stats
+        print(f"  spilled tenant served exactly: n={st.n_queries} "
+              f"bins_probed={sqs.bins_probed} bin_folds={sqs.bin_folds}")
+
+        # strict-refusal drill THROUGH flush: the refusing tenant's
+        # requests come back as typed errors; the other tenant's queued
+        # answers survive untouched (the partial-failure bugfix)
+        strict = fabsp.KmerCounter(mesh, dataclasses.replace(
+            cfg, spill="always", spill_dir=ckpt_dir + "/strict",
+            spill_query="refuse"))
+        strict.update(reads)
+        registry.register("strict", strict)
+        i0 = service.submit("human", q[:32])
+        i1 = service.submit("strict", q[:32])
+        i2 = service.submit("human", q[32:64])
+        i3 = service.submit("human", np.zeros((0,), u.dtype))
+        out = service.flush()
+        if not (isinstance(out[i1], query.QueryUnavailable)
+                and isinstance(out[i0], tuple)
+                and isinstance(out[i2], tuple)):
+            raise SystemExit("FAIL: flush did not isolate the refusing "
+                             "tenant")
+        for i, lo, hi in ((i0, 0, 32), (i2, 32, 64)):
+            want = np.asarray([oracle.get(int(x), 0) for x in q[lo:hi]],
+                              np.int32)
+            if not np.array_equal(out[i][0], want):
+                raise SystemExit("FAIL: surviving tenant's flush answers "
+                                 "diverged")
+        if out[i3][0].size != 0 or out[i3][1].n_queries != 0:
+            raise SystemExit("FAIL: empty request did not short-circuit")
+        print("  strict tenant refused (typed, per-request); other "
+              "tenant's answers survived the flush")
+
+        # read-write interleave: a LIVE tenant takes update() between
+        # flushes, and every flush answers the committed prefix exactly
+        from repro.core import serial
+        live = fabsp.KmerCounter(mesh,
+                                 dataclasses.replace(cfg, chunk_reads=16))
+        registry.register("live", live)
+        running: Dict[int, int] = {}
+        qset = q[:128]
+        for batch in np.array_split(np.asarray(reads), 4):
+            live.update(jnp.asarray(batch))
+            for w, n in serial.count_kmers_python(batch, cfg.k).items():
+                running[w] = running.get(w, 0) + n
+            service.submit("live", qset)
+            (counts, _st), = service.flush()
+            want = np.asarray([running.get(int(x), 0) for x in qset],
+                              np.int32)
+            if not np.array_equal(counts, want):
+                raise SystemExit("FAIL: interleaved flush diverged from "
+                                 "the committed prefix")
+        print("  read-write interleave: 4 update/flush rounds, each "
+              "flush exact against the committed prefix")
 
         if n_requests > 0:
             lat = []

@@ -222,13 +222,112 @@ def test_query_before_update_raises(mesh):
         kc.count(np.zeros(4, np.uint32))
 
 
-def test_query_spilled_counter_raises_typed(mesh, reads, tmp_path):
+def test_query_spilled_refuse_mode_raises_typed(mesh, reads, tmp_path):
+    """`spill_query='refuse'` is the opt-in strict mode: a spill-engaged
+    store refuses with the typed error instead of folding bins on demand
+    (the default 'fold' serves -- see the spilled parity grid)."""
     cfg = fabsp.DAKCConfig(k=13, chunk_reads=64, spill="always",
-                           spill_dir=str(tmp_path))
+                           spill_dir=str(tmp_path), spill_query="refuse")
     kc = fabsp.KmerCounter(mesh, cfg)
     kc.update(jnp.asarray(reads))
-    with pytest.raises(query.QueryUnavailable):
+    with pytest.raises(query.QueryUnavailable, match="refuse"):
         kc.count(np.zeros(4, np.uint32))
+
+
+# --- the spilled-bin query tier ---------------------------------------------
+
+@pytest.mark.parametrize("transport,topo", [
+    ("kmer", "1d"), ("kmer", "2d"),
+    ("superkmer", "1d"), ("superkmer", "2d"),
+])
+def test_query_spilled_parity_grid(reads, mesh, mesh2d, tmp_path,
+                                   transport, topo):
+    """A spill-engaged count() equals the fold-then-query oracle bit for
+    bit on every transport x topology cell: stage 1 probes the in-core
+    vestigial store, stage 2 folds only the touched disk bins. A second
+    identical batch must serve warm from the shard cache (zero folds)."""
+    k = 13
+    cfg = fabsp.DAKCConfig(
+        k=k, chunk_reads=64, topology=topo, transport_impl=transport,
+        spill="always", spill_dir=str(tmp_path), spill_bins=6,
+        **({"minimizer_len": 7} if transport == "superkmer" else {}))
+    m, axes = ((mesh2d, ("row", "col")) if topo == "2d"
+               else (mesh, ("pe",)))
+    kc = fabsp.KmerCounter(m, cfg, axes)
+    kc.update(jnp.asarray(reads))
+    oracle = serial.count_kmers_python(reads, k)
+    q = _mixed_queries(oracle, np.uint32)
+    want = np.asarray([oracle.get(int(x), 0) for x in q], np.int32)
+    got = kc.count(q)
+    np.testing.assert_array_equal(got, want)
+    st_q = kc.last_query_stats
+    assert st_q.bins_probed > 0 and st_q.bin_folds > 0  # cold: folds paid
+    assert st_q.n_hits == int((want > 0).sum())
+    np.testing.assert_array_equal(kc.count(q), want)
+    assert kc.last_query_stats.bin_folds == 0           # warm: cache held
+
+
+def test_query_spilled_bin_cache_evicts_and_stays_exact(mesh, reads,
+                                                        tmp_path):
+    """Under a tiny `query_bin_cache_bytes` the shard cache must evict
+    (it keeps at most the newest entry) yet every answer stays exact --
+    eviction costs refolds, never correctness."""
+    cfg = fabsp.DAKCConfig(k=13, chunk_reads=64, spill="always",
+                           spill_dir=str(tmp_path), spill_bins=6,
+                           query_bin_cache_bytes=1)
+    kc = fabsp.KmerCounter(mesh, cfg)
+    kc.update(jnp.asarray(reads))
+    oracle = serial.count_kmers_python(reads, 13)
+    q = _mixed_queries(oracle, np.uint32)
+    want = np.asarray([oracle.get(int(x), 0) for x in q], np.int32)
+    np.testing.assert_array_equal(kc.count(q), want)
+    np.testing.assert_array_equal(kc.count(q), want)   # refolds, same bits
+    assert kc._bin_cache.evictions > 0
+    assert kc.last_query_stats.bin_folds > 0           # cache can't hold
+
+
+# --- generation handoff: count() reads the pinned committed snapshot --------
+
+def test_query_snapshot_isolated_from_inflight_grow(mesh, reads):
+    """A rehash in flight must not leak into serving: count() answers
+    from the epoch-pinned snapshot, so a store regrown (but not yet
+    re-published by a batch commit) serves the old generation exactly."""
+    kc = _counter(reads, mesh, ("pe",), fabsp.DAKCConfig(k=13,
+                                                         chunk_reads=64))
+    oracle = serial.count_kmers_python(reads, 13)
+    q = _mixed_queries(oracle, np.uint32)
+    want = np.asarray([oracle.get(int(x), 0) for x in q], np.int32)
+    np.testing.assert_array_equal(kc.count(q), want)
+    snap_cap = kc._committed.store_cap
+    kc._grow(kc._store_cap * 2)            # in-flight rehash, no commit
+    assert kc._store_cap == 2 * snap_cap
+    assert kc._committed.store_cap == snap_cap   # snapshot still pinned
+    np.testing.assert_array_equal(kc.count(q), want)
+
+
+def test_query_snapshot_survives_failed_spill_update(mesh, reads,
+                                                     tmp_path):
+    """An update that dies mid-spill must not poison serving: the store
+    dispatches on the COMMITTED generation, so count() after the failed
+    batch still answers the last committed histogram exactly (pinned
+    manifest view -- the torn batch's segments are invisible)."""
+    from repro.core.resilience import FaultPlan, InjectedFault
+    base = dict(k=11, chunk_reads=16, receiver_impl="stream",
+                spill="always", spill_dir=str(tmp_path), spill_bins=4)
+    # probe run: how many segment writes does batch 1 commit?
+    probe = fabsp.KmerCounter(mesh, fabsp.DAKCConfig(**base))
+    probe.update(jnp.asarray(reads[:64]))
+    n_seg = len(probe._spill.state()["segments"])
+    kc = fabsp.KmerCounter(mesh, fabsp.DAKCConfig(
+        **base, faults=FaultPlan(site="spill_write", fail_after=n_seg)))
+    kc.update(jnp.asarray(reads[:64]))
+    oracle = serial.count_kmers_python(np.asarray(reads[:64]), 11)
+    q = _mixed_queries(oracle, np.uint32)
+    want = np.asarray([oracle.get(int(x), 0) for x in q], np.int32)
+    np.testing.assert_array_equal(kc.count(q), want)
+    with pytest.raises(InjectedFault):
+        kc.update(jnp.asarray(reads[64:]))      # dies mid-write
+    np.testing.assert_array_equal(kc.count(q), want)
 
 
 def test_pack_queries_shape_errors(mesh):

@@ -1,0 +1,144 @@
+"""The serving harness (launch/kc_serve.py): intake, coalesced flush,
+per-tenant failure isolation, and store-dtype derivation.
+
+The flush contract under test: every submitted request gets an entry
+aligned with submission order -- (counts, RequestStats) on success, the
+typed exception instance when its tenant failed -- and one tenant
+refusing never discards another tenant's computed answers. The batch a
+tenant serves is coalesced in the tenant's OWN packed-word dtype
+(uint64 once k outgrows one 32-bit word), never a hardcoded uint32, and
+zero-query requests short-circuit without a device round-trip.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import fabsp, query, serial
+from repro.data import genome
+from repro.launch.kc_serve import QueryService, StoreRegistry, UnknownStore
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("pe",))
+
+
+@pytest.fixture(scope="module")
+def reads():
+    spec = genome.ReadSetSpec(genome_bases=4096, n_reads=128, read_len=80,
+                              heavy_hitter_frac=0.3, seed=17)
+    return genome.sample_reads(spec)
+
+
+def _serving(mesh, reads, **overrides):
+    cfg = fabsp.DAKCConfig(**{"k": 13, "chunk_reads": 64, **overrides})
+    kc = fabsp.KmerCounter(mesh, cfg)
+    kc.update(jnp.asarray(reads))
+    return kc
+
+
+def test_submit_unknown_tenant_fails_at_intake(mesh):
+    service = QueryService(StoreRegistry(mesh))
+    with pytest.raises(UnknownStore, match="yeast"):
+        service.submit("yeast", np.zeros(4, np.uint32))
+
+
+def test_flush_isolates_failing_tenant(mesh, reads, tmp_path):
+    """One refusing tenant in a flush: its requests come back as the
+    typed error, every other request's answers survive, all aligned
+    with submission order."""
+    registry = StoreRegistry(mesh)
+    registry.register("good", _serving(mesh, reads))
+    registry.register("strict", _serving(
+        mesh, reads, spill="always", spill_dir=str(tmp_path),
+        spill_query="refuse"))
+    service = QueryService(registry)
+
+    oracle = serial.count_kmers_python(reads, 13)
+    uniq = np.asarray(sorted(oracle), np.uint32)
+    i0 = service.submit("good", uniq[:32])
+    i1 = service.submit("strict", uniq[:32])
+    i2 = service.submit("good", uniq[32:48])
+    i3 = service.submit("good", np.zeros((0,), np.uint32))
+    out = service.flush()
+    assert len(out) == 4
+    assert isinstance(out[i1], query.QueryUnavailable)
+    for i, sl in ((i0, uniq[:32]), (i2, uniq[32:48])):
+        counts, st = out[i]
+        want = np.asarray([oracle[int(x)] for x in sl], np.int32)
+        np.testing.assert_array_equal(counts, want)
+        assert st.tenant == "good" and st.n_queries == sl.size
+        assert st.batch_queries == 48        # both live requests coalesced
+    counts, st = out[i3]
+    assert counts.size == 0 and st.n_queries == 0
+    assert not service.flush()               # queue drained
+
+
+def test_flush_empty_request_skips_device(mesh, reads):
+    """Zero-query requests short-circuit: a tenant that has never
+    committed a batch can still flush an empty request (count() would
+    raise "before any update"), proving no device round-trip happens."""
+    registry = StoreRegistry(mesh)
+    registry.register("cold", fabsp.KmerCounter(
+        mesh, fabsp.DAKCConfig(k=13, chunk_reads=64)))
+    service = QueryService(registry)
+    i0 = service.submit("cold", np.zeros((0,), np.uint32))
+    out = service.flush()
+    counts, st = out[i0]
+    assert counts.size == 0
+    assert st.n_queries == 0 and st.wire_bytes == 0 and st.seconds == 0.0
+
+
+def test_flush_batch_dtype_follows_store_word_x64_subprocess():
+    """A k=31 store packs to uint64 (x64 subprocess, like every uint64
+    path): the coalesced batch -- including an int64-typed request and a
+    zero-query request -- serves in the tenant's OWN word dtype, exactly.
+    The old hardcoded `np.zeros((0,), np.uint32)` empty batch would have
+    poisoned the concatenated dtype here."""
+    import os
+    import subprocess
+    import sys
+
+    code = r"""
+import os
+os.environ["JAX_ENABLE_X64"] = "1"
+import sys; sys.path.insert(0, %r)
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import fabsp, serial
+from repro.data import genome
+from repro.launch.kc_serve import QueryService, StoreRegistry
+
+spec = genome.ReadSetSpec(genome_bases=4096, n_reads=64, read_len=80,
+                          heavy_hitter_frac=0.3, seed=17)
+reads = genome.sample_reads(spec)
+mesh = Mesh(np.array(jax.devices()[:1]), ("pe",))
+kc = fabsp.KmerCounter(mesh, fabsp.DAKCConfig(k=31, chunk_reads=64))
+kc.update(jnp.asarray(reads))
+assert QueryService._batch_dtype(kc) == np.uint64, "store word dtype"
+
+registry = StoreRegistry(mesh)
+registry.register("wide", kc)
+service = QueryService(registry)
+oracle = serial.count_kmers_python(reads, 31)
+uniq = np.asarray(sorted(oracle), np.uint64)
+i0 = service.submit("wide", uniq[:16].astype(np.int64))   # np-default ints
+i1 = service.submit("wide", np.zeros((0,), np.uint64))
+i2 = service.submit("wide", uniq[16:40])
+out = service.flush()
+for i, sl in ((i0, uniq[:16]), (i2, uniq[16:40])):
+    want = np.asarray([oracle[int(x)] for x in sl], np.int32)
+    assert np.array_equal(out[i][0], want), "uint64 flush diverged"
+assert out[i1][0].size == 0 and out[i1][1].n_queries == 0
+print("SERVE64-OK")
+""" % os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env.pop("JAX_ENABLE_X64", None)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-3000:]
+    assert "SERVE64-OK" in proc.stdout
